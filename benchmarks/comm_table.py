@@ -1,0 +1,39 @@
+"""Communication-volume table (the paper's bandwidth claim, made explicit):
+uplink bytes per client per global round for every method, both paper
+settings, plus the distributed bucketed variant's wire format.
+"""
+from __future__ import annotations
+
+from benchmarks.common import save_json
+from repro.core.compression import bytes_per_round
+
+
+def main(fast: bool = True):
+    settings = {
+        "mnist (d=39,760, r=75, k=10)": dict(d=39_760, r=75, k=10),
+        "cifar (d=2,515,338, r=2500, k=100)": dict(d=2_515_338, r=2500, k=100),
+    }
+    rows = []
+    table = {}
+    for name, s in settings.items():
+        dense = bytes_per_round(0, s["d"], dense=True)
+        sparse = bytes_per_round(s["k"], s["d"])
+        sparse_rep = sparse + s["r"] * 4            # rAge-k adds the r-report
+        sparse_bf16 = s["k"] * (4 + 2) + s["r"] * 4  # beyond-paper bf16 wire
+        table[name] = {
+            "dense_fp32": dense,
+            "rtop_k/top_k": sparse,
+            "rage_k(+r-report)": sparse_rep,
+            "rage_k_bf16_wire": sparse_bf16,
+            "reduction_vs_dense": dense / sparse_rep,
+        }
+        rows.append((f"comm:{name}", 0.0,
+                     f"dense={dense}B sparse={sparse_rep}B "
+                     f"x{dense / sparse_rep:.0f} less"))
+    save_json("comm_table", table)
+    return rows
+
+
+if __name__ == "__main__":
+    for r in main():
+        print(r)

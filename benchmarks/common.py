@@ -1,0 +1,44 @@
+"""Shared benchmark plumbing: timing, result rows, artifact dirs."""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+ARTIFACTS = os.path.join(os.path.dirname(__file__), "..", "experiments")
+
+
+def art_dir(name: str) -> str:
+    d = os.path.join(ARTIFACTS, name)
+    os.makedirs(d, exist_ok=True)
+    return d
+
+
+def time_us(fn, *args, warmup: int = 2, iters: int = 10) -> float:
+    for _ in range(warmup):
+        r = fn(*args)
+    _block(r)
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        r = fn(*args)
+    _block(r)
+    return (time.perf_counter() - t0) / iters * 1e6
+
+
+def _block(r):
+    try:
+        import jax
+        jax.block_until_ready(r)
+    except Exception:
+        pass
+
+
+def save_json(name: str, obj):
+    path = os.path.join(art_dir("bench"), name + ".json")
+    with open(path, "w") as f:
+        json.dump(obj, f, indent=1, default=float)
+    return path
+
+
+def row(name: str, us: float, derived: str = "") -> str:
+    return f"{name},{us:.1f},{derived}"

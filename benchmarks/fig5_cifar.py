@@ -1,0 +1,81 @@
+"""Paper Fig. 5: CIFAR10 accuracy/loss, rAge-k vs rTop-k (6 clients in 3
+label-group pairs; paper: r=2500, k=100, H=100, M=200, 2.5M-param CNN).
+
+CPU-reduced defaults: fewer local steps/rounds, smaller dataset and batch.
+BENCH_FULL=1 restores paper-scale hyper-parameters (very slow on 1 CPU).
+"""
+from __future__ import annotations
+
+import os
+import time
+
+from benchmarks.common import art_dir, save_json
+from repro.configs.base import RAgeKConfig
+from repro.data.federated import paper_cifar_split
+from repro.data.synthetic import cifar10_like
+from repro.fl.simulation import run_fl
+
+
+def main(fast: bool = True):
+    full = os.environ.get("BENCH_FULL") == "1"
+    if full:
+        n_train, rounds, H, M, bs, lr = 50_000, 1400, 100, 200, 256, 1e-4
+    elif fast:
+        n_train, rounds, H, M, bs, lr = 1_200, 8, 2, 4, 16, 2e-3
+    else:
+        n_train, rounds, H, M, bs, lr = 6_000, 30, 5, 10, 32, 2e-3
+
+    (xtr, ytr), (xte, yte) = cifar10_like(
+        n_train=n_train, n_test=600 if fast else 1_500, seed=0)
+    shards = paper_cifar_split(xtr, ytr)
+    curves = {}
+    rows = []
+    for method in ("rage_k", "rtop_k"):
+        hp = RAgeKConfig(r=2500, k=100, H=H, M=M, lr=lr, batch_size=bs,
+                         method=method)
+        t0 = time.time()
+        res = run_fl("cnn", shards, (xte, yte), hp, rounds=rounds,
+                     eval_every=max(rounds // 8, 1),
+                     heatmap_at=(1, rounds) if method == "rage_k" else ())
+        curves[method] = {"rounds": res.rounds, "acc": res.acc,
+                          "loss": res.loss, "uplink": res.uplink_bytes}
+        if method == "rage_k":
+            save_json("fig4_heatmaps", {str(t): h.tolist()
+                                        for t, h in res.heatmaps.items()})
+            curves["rage_k_labels"] = res.cluster_labels[-1].tolist()
+        us = (time.time() - t0) / rounds * 1e6
+        rows.append((f"fig5_cifar_{method}", us,
+                     f"final_acc={res.acc[-1]:.3f}"))
+    save_json("fig5_cifar", curves)
+    _plot(curves)
+    labels = curves["rage_k_labels"]
+    pairs_ok = sum(labels[a] == labels[a + 1] for a in (0, 2, 4))
+    rows.append(("fig4_clustering", 0.0, f"pairs_matched={pairs_ok}/3"))
+    return rows
+
+
+def _plot(curves):
+    try:
+        import matplotlib
+        matplotlib.use("Agg")
+        import matplotlib.pyplot as plt
+    except Exception:
+        return
+    fig, axes = plt.subplots(1, 2, figsize=(10, 4))
+    for m in ("rage_k", "rtop_k"):
+        c = curves[m]
+        axes[0].plot(c["rounds"], c["acc"], label=m)
+        axes[1].plot(c["rounds"], c["loss"], label=m)
+    axes[0].set_xlabel("global iteration"); axes[0].set_ylabel("accuracy")
+    axes[1].set_xlabel("global iteration"); axes[1].set_ylabel("loss")
+    for ax in axes:
+        ax.legend(); ax.grid(alpha=0.3)
+    fig.suptitle("CIFAR10-like (paper Fig. 5): rAge-k vs rTop-k")
+    fig.tight_layout()
+    fig.savefig(os.path.join(art_dir("figs"), "fig5_cifar.png"), dpi=120)
+    plt.close(fig)
+
+
+if __name__ == "__main__":
+    for r in main(fast=False):
+        print(r)

@@ -1,0 +1,56 @@
+"""Kernel microbenchmarks (interpret-mode timings are CPU-emulation numbers
+— the derived column reports the work size; real-TPU perf comes from the
+roofline analysis, not wall clock here). Also times the jnp reference to
+show the oracle agrees at identical math.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import time_us
+from repro.kernels import ops, ref
+
+
+def main(fast: bool = True):
+    key = jax.random.PRNGKey(0)
+    rows = []
+
+    # sparse aggregate: paper CIFAR scale (d=2.5M padded, N*k=600)
+    d, nk = 2_515_456, 600
+    idx = jax.random.randint(key, (nk,), 0, d)
+    vals = jax.random.normal(key, (nk,))
+    age = jnp.zeros(d, jnp.int32)
+    f = jax.jit(lambda i, v, a: ref.sparse_aggregate_ref(i, v, a))
+    rows.append(("sparse_aggregate_ref_jnp", time_us(f, idx, vals, age,
+                                                     iters=5),
+                 f"d={d},nk={nk}"))
+    if not fast:
+        g = jax.jit(lambda i, v, a: ops.sparse_aggregate(i, v, a))
+        rows.append(("sparse_aggregate_pallas_interp",
+                     time_us(g, idx, vals, age, warmup=1, iters=2),
+                     "interpret=True (CPU emulation)"))
+
+    # maghist + threshold topk at CIFAR scale
+    g_vec = jax.random.normal(key, (d,))
+    th = jax.jit(lambda g: ops.threshold_topk(g, 2500))
+    rows.append(("threshold_topk_r2500", time_us(th, g_vec, iters=3),
+                 f"d={d}"))
+    ex = jax.jit(lambda g: jax.lax.top_k(jnp.abs(g), 2500))
+    rows.append(("exact_topk_r2500", time_us(ex, g_vec, iters=3), f"d={d}"))
+
+    # decode attention (model-scale slice)
+    B, H, G, D, S = 4, 16, 8, 128, 4096
+    q = jax.random.normal(key, (B, H, D), jnp.bfloat16)
+    k = jax.random.normal(key, (B, S, G, D), jnp.bfloat16)
+    v = jax.random.normal(key, (B, S, G, D), jnp.bfloat16)
+    fr = jax.jit(jax.vmap(lambda a, b, c: ref.decode_attention_ref(
+        a, b, c, jnp.array([S]))))
+    rows.append(("decode_attention_ref_jnp", time_us(fr, q, k, v, iters=5),
+                 f"B{B} H{H} S{S} D{D}"))
+    return rows
+
+
+if __name__ == "__main__":
+    for r in main(fast=False):
+        print(r)

@@ -1,0 +1,84 @@
+"""Checkpointing: pytree <-> .npz with path-keyed flat entries.
+
+No orbax offline; this is a dependency-free implementation that round-trips
+arbitrary (dict/list/tuple-structured) pytrees of arrays, preserving dtypes
+(bf16 stored via uint16 view) and the age/cluster host state of the FL
+server.
+"""
+from __future__ import annotations
+
+import json
+import os
+import re
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+_BF16_TAG = "__bf16__"
+
+
+def _flatten(tree) -> dict[str, Any]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(
+            str(p.key) if hasattr(p, "key") else str(p.idx) for p in path)
+        flat[key] = leaf
+    return flat
+
+
+def save_checkpoint(path: str, step: int, tree, extra: dict | None = None):
+    os.makedirs(path, exist_ok=True)
+    flat = _flatten(tree)
+    arrays = {}
+    meta = {"step": step, "keys": {}}
+    for k, v in flat.items():
+        arr = np.asarray(v)
+        if arr.dtype == jnp.bfloat16:
+            arrays[k] = arr.view(np.uint16)
+            meta["keys"][k] = _BF16_TAG
+        else:
+            arrays[k] = arr
+            meta["keys"][k] = str(arr.dtype)
+    fn = os.path.join(path, f"ckpt_{step:08d}.npz")
+    np.savez_compressed(fn, **arrays)
+    meta["extra"] = extra or {}
+    with open(fn + ".json", "w") as f:
+        json.dump(meta, f)
+    return fn
+
+
+def load_checkpoint(path: str, like, step: int | None = None):
+    """Restore into the structure of `like` (a template pytree)."""
+    steps = list_checkpoints(path)
+    if not steps:
+        raise FileNotFoundError(f"no checkpoints under {path}")
+    step = step if step is not None else steps[-1]
+    fn = os.path.join(path, f"ckpt_{step:08d}.npz")
+    with open(fn + ".json") as f:
+        meta = json.load(f)
+    data = np.load(fn)
+    flat_like = _flatten(like)
+    restored = {}
+    for k in flat_like:
+        arr = data[k]
+        if meta["keys"][k] == _BF16_TAG:
+            arr = arr.view(jnp.bfloat16)
+        restored[k] = jnp.asarray(arr)
+    # rebuild in the order of `like`'s flatten
+    leaves, treedef = jax.tree_util.tree_flatten(like)
+    keys = list(_flatten(like).keys())
+    new_leaves = [restored[k] for k in keys]
+    return jax.tree_util.tree_unflatten(treedef, new_leaves), meta
+
+
+def list_checkpoints(path: str) -> list[int]:
+    if not os.path.isdir(path):
+        return []
+    out = []
+    for f in os.listdir(path):
+        m = re.fullmatch(r"ckpt_(\d+)\.npz", f)
+        if m:
+            out.append(int(m.group(1)))
+    return sorted(out)

@@ -1,0 +1,55 @@
+"""Config registry: ``get_config(name)`` / ``list_archs()``.
+
+Every assigned architecture is selectable via ``--arch <id>`` in the
+launchers. Names use the assignment ids verbatim.
+"""
+from __future__ import annotations
+
+import importlib
+
+from repro.configs.base import (  # noqa: F401
+    ArchConfig,
+    InputShape,
+    RAgeKConfig,
+    INPUT_SHAPES,
+    TRAIN_4K,
+    PREFILL_32K,
+    DECODE_32K,
+    LONG_500K,
+)
+
+_ARCH_MODULES = {
+    "granite-moe-3b-a800m": "granite_moe_3b_a800m",
+    "gemma-2b": "gemma_2b",
+    "internlm2-1.8b": "internlm2_1_8b",
+    "deepseek-v2-236b": "deepseek_v2_236b",
+    "mamba2-780m": "mamba2_780m",
+    "whisper-large-v3": "whisper_large_v3",
+    "zamba2-2.7b": "zamba2_2_7b",
+    "pixtral-12b": "pixtral_12b",
+    "phi4-mini-3.8b": "phi4_mini_3_8b",
+    "qwen1.5-110b": "qwen1_5_110b",
+    # the paper's own networks
+    "mnist-mlp": "mnist_mlp",
+    "cifar-cnn": "cifar_cnn",
+}
+
+ASSIGNED_ARCHS = [a for a in _ARCH_MODULES if a not in ("mnist-mlp", "cifar-cnn")]
+
+
+def list_archs() -> list[str]:
+    return list(_ARCH_MODULES)
+
+
+def _module(name: str):
+    if name not in _ARCH_MODULES:
+        raise KeyError(f"unknown arch {name!r}; known: {sorted(_ARCH_MODULES)}")
+    return importlib.import_module(f"repro.configs.{_ARCH_MODULES[name]}")
+
+
+def get_config(name: str) -> ArchConfig:
+    return _module(name).CONFIG
+
+
+def get_smoke_config(name: str) -> ArchConfig:
+    return _module(name).smoke_config()

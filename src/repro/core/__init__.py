@@ -1,0 +1,13 @@
+"""rAge-k core: age vectors, sparsifiers, clustering, compression theory."""
+from repro.core.sparsify import (  # noqa: F401
+    rage_k, rtop_k, top_k, random_k, apply_method,
+    bucket_budgets, flatten_buckets, unflatten_buckets,
+)
+from repro.core.age import AgeState  # noqa: F401
+from repro.core.clustering import (  # noqa: F401
+    similarity_matrix, connectivity_matrix, dbscan, cluster_clients,
+)
+from repro.core.compression import (  # noqa: F401
+    gamma_rage_k, gamma_top_k, beta_of, contraction, bytes_per_round,
+)
+from repro.core.protocol import ParameterServer, Round  # noqa: F401

@@ -1,0 +1,105 @@
+"""Age-vector state at the parameter server (paper §II, eq. 2).
+
+The PS keeps one d-dimensional int32 age vector per CLUSTER. Clients start
+as singleton clusters; when DBSCAN merges clients, their age vectors merge
+(elementwise max — the PS's best information per index is the freshest
+update from ANY member, so staleness is the max... see note), and a client
+moved to a different cluster gets a reset vector (paper: "automatically
+reset due to the changed cluster identity").
+
+Merge rule note: the paper says "its age vector is merged with that of the
+cluster" without pinning the operator. We use elementwise MIN of ages
+(freshest information wins: if any member recently updated index j, the
+cluster knows j). ``merge="max"`` is available for ablation.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import numpy as np
+
+
+@dataclass
+class AgeState:
+    """Cluster age vectors + bookkeeping (host-side, numpy: the PS control
+    plane is orchestration, not accelerator math; device math stays in
+    sparsify.rage_k)."""
+
+    d: int
+    n_clients: int
+    merge: str = "min"
+    # cluster id per client; singletons initially
+    cluster_of: np.ndarray = field(init=False)
+    ages: dict = field(init=False)          # cluster id -> (d,) int32
+    freq: np.ndarray = field(init=False)    # (N, d) int32 — eq. (3) inputs
+
+    def __post_init__(self):
+        self.cluster_of = np.arange(self.n_clients)
+        self.ages = {i: np.zeros(self.d, np.int32) for i in range(self.n_clients)}
+        self.freq = np.zeros((self.n_clients, self.d), np.int64)
+
+    # -- protocol hooks -----------------------------------------------------
+    def age_of(self, client: int) -> np.ndarray:
+        return self.ages[int(self.cluster_of[client])]
+
+    def record_request(self, client: int, idx: np.ndarray):
+        """eq. (2) + frequency bookkeeping after requesting `idx`."""
+        cl = int(self.cluster_of[client])
+        a = self.ages[cl]
+        a += 1
+        a[idx] = 0
+        self.freq[client, idx] += 1
+
+    def advance_unrequested(self):
+        """No-op placeholder — aging happens inside record_request (the
+        age vector is per cluster; one +1 per global round per cluster)."""
+
+    # -- clustering hooks ---------------------------------------------------
+    def apply_clusters(self, labels: np.ndarray):
+        """labels: (N,) cluster ids from DBSCAN (noise = unique singleton).
+
+        Rules (paper §II): joining an existing cluster merges age vectors;
+        changing cluster identity resets the vector.
+        """
+        labels = self._canonicalize(labels)
+        new_ages: dict = {}
+        for cl in np.unique(labels):
+            members = set(np.where(labels == cl)[0].tolist())
+            # previous clusters fully absorbed into this one keep history
+            prev = {int(self.cluster_of[m]) for m in members}
+            vecs = []
+            for p in prev:
+                old_members = set(np.where(self.cluster_of == p)[0].tolist())
+                if old_members <= members:
+                    vecs.append(self.ages[p])
+            if vecs:
+                op = np.minimum if self.merge == "min" else np.maximum
+                merged = vecs[0].copy()
+                for v in vecs[1:]:
+                    merged = op(merged, v)
+                new_ages[int(cl)] = merged
+            else:
+                # a member split off a previous cluster: reset (paper rule)
+                new_ages[int(cl)] = np.zeros(self.d, np.int32)
+        self.cluster_of = labels
+        self.ages = new_ages
+
+    @staticmethod
+    def _canonicalize(labels: np.ndarray) -> np.ndarray:
+        """DBSCAN noise (-1) becomes unique singleton clusters; relabel to
+        dense non-negative ids."""
+        labels = labels.copy()
+        nxt = labels.max(initial=-1) + 1
+        for i, l in enumerate(labels):
+            if l < 0:
+                labels[i] = nxt
+                nxt += 1
+        _, dense = np.unique(labels, return_inverse=True)
+        return dense.astype(np.int64)
+
+    # -- views ---------------------------------------------------------------
+    def clusters(self) -> dict:
+        out: dict = {}
+        for i, cl in enumerate(self.cluster_of):
+            out.setdefault(int(cl), []).append(i)
+        return out

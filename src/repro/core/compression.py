@@ -1,0 +1,49 @@
+"""Compression-operator theory (paper §II-A).
+
+A (possibly randomized) Comp_k satisfies
+    E ||g - Comp_k(g)||^2 <= (1 - gamma) ||g||^2,  gamma in (0, 1].
+The paper shows rAge-k is a compression operator with
+    gamma = k / (k + (r - k) * beta + (d - r)),
+where beta bounds |g|_(1) / |g|_(r) (largest over r-th largest magnitude),
+reducing to k/d at r = k. These are verified empirically by the property
+tests (tests/test_properties.py).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+
+def gamma_rage_k(k: int, r: int, d: int, beta: float) -> float:
+    assert 1 <= k <= r <= d and beta >= 1.0
+    return k / (k + (r - k) * beta + (d - r))
+
+
+def gamma_top_k(k: int, d: int) -> float:
+    return k / d
+
+
+def beta_of(g, r: int) -> float:
+    """Empirical beta: |g|_(1) / |g|_(r) (ratio of 1st to r-th magnitude)."""
+    mags = np.sort(np.abs(np.asarray(g)))[::-1]
+    denom = mags[r - 1]
+    if denom == 0:
+        return np.inf
+    return float(mags[0] / denom)
+
+
+def contraction(g, g_sparse) -> float:
+    """||g - Comp(g)||^2 / ||g||^2 (must be <= 1 - gamma in expectation)."""
+    g = np.asarray(g, np.float64)
+    gs = np.asarray(g_sparse, np.float64)
+    n = float(np.sum(g * g))
+    if n == 0:
+        return 0.0
+    return float(np.sum((g - gs) ** 2) / n)
+
+
+def bytes_per_round(k: int, d: int, value_bytes: int = 4,
+                    index_bytes: int = 4, dense: bool = False) -> int:
+    """Uplink bytes for one client in one global round."""
+    if dense:
+        return d * value_bytes
+    return k * (value_bytes + index_bytes)

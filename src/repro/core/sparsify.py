@@ -1,0 +1,112 @@
+"""Sparsification operators (paper Algorithm 2 + baselines).
+
+All operators work on FLAT gradient vectors, are pure and jit-able, and
+return ``(g_sparse, indices, extra)``. ``rage_k`` additionally threads the
+age vector (eq. 2 update) through.
+
+Tie-breaking note: ``lax.top_k`` is stable w.r.t. position; since the
+candidate indices are ordered by decreasing |g|, age ties resolve in favor
+of LARGER magnitude — the natural choice, pinned by tests.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+
+def top_k(g: jnp.ndarray, k: int):
+    """Classic top-k magnitude sparsification [Lin et al. 2018]."""
+    _, idx = jax.lax.top_k(jnp.abs(g), k)
+    sparse = jnp.zeros_like(g).at[idx].set(g[idx])
+    return sparse, idx
+
+
+def rtop_k(g: jnp.ndarray, key, r: int, k: int):
+    """rTop-k [Barnes et al. 2020]: random k of the top-r magnitudes."""
+    _, cand = jax.lax.top_k(jnp.abs(g), r)
+    pick = jax.random.choice(key, r, (k,), replace=False)
+    idx = cand[pick]
+    sparse = jnp.zeros_like(g).at[idx].set(g[idx])
+    return sparse, idx
+
+
+def random_k(g: jnp.ndarray, key, k: int):
+    """Uniform random-k (exploration-only baseline)."""
+    idx = jax.random.choice(key, g.shape[0], (k,), replace=False)
+    sparse = jnp.zeros_like(g).at[idx].set(g[idx])
+    return sparse, idx
+
+
+def rage_k(g: jnp.ndarray, age: jnp.ndarray, r: int, k: int,
+           exclude: jnp.ndarray | None = None):
+    """Paper Algorithm 2.
+
+    g: (d,) gradient; age: (d,) int32 cluster age vector.
+    exclude: optional (d,) bool — indices already requested from other
+    clients of the same cluster this round (disjointness, §II).
+
+    Returns (g_sparse, idx (k,), new_age) — eq. (2): requested ages reset
+    to 0, all others +1.
+    """
+    _, cand = jax.lax.top_k(jnp.abs(g), r)          # (r,) by |g| desc
+    cand_age = age[cand].astype(jnp.int32)
+    if exclude is not None:
+        # excluded indices get age -1 so they lose every comparison
+        cand_age = jnp.where(exclude[cand], jnp.int32(-1), cand_age)
+    _, sel = jax.lax.top_k(cand_age, k)             # positions into cand
+    idx = cand[sel]
+    sparse = jnp.zeros_like(g).at[idx].set(g[idx])
+    new_age = (age + 1).at[idx].set(0)
+    return sparse, idx, new_age
+
+
+def apply_method(method: str, g, *, age=None, key=None, r=0, k=0,
+                 exclude=None):
+    """Uniform dispatcher used by the FL server. Returns
+    (g_sparse, idx, new_age_or_None)."""
+    if method == "rage_k":
+        return rage_k(g, age, r, k, exclude)
+    if method == "rtop_k":
+        s, i = rtop_k(g, key, r, k)
+        return s, i, None
+    if method == "top_k":
+        s, i = top_k(g, k)
+        return s, i, None
+    if method == "random_k":
+        s, i = random_k(g, key, k)
+        return s, i, None
+    if method == "dense":
+        return g, jnp.arange(g.shape[0]), None
+    raise ValueError(f"unknown method {method!r}")
+
+
+# ---------------------------------------------------------------------------
+# bucketed generalization (framework-scale; see DESIGN.md §3)
+# ---------------------------------------------------------------------------
+
+def bucket_budgets(sizes: list[int], r: int, k: int) -> list[tuple[int, int]]:
+    """Split global (r, k) across buckets proportionally to bucket size.
+
+    Guarantees r_b >= k_b >= 1 and r_b <= d_b.
+    """
+    total = sum(sizes)
+    out = []
+    for d_b in sizes:
+        r_b = max(1, min(d_b, round(r * d_b / total)))
+        k_b = max(1, min(r_b, round(k * d_b / total)))
+        out.append((r_b, k_b))
+    return out
+
+
+def flatten_buckets(tree) -> tuple[list[jnp.ndarray], any]:
+    """Pytree -> list of flat per-leaf vectors + treedef for unflatten."""
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    return [l.reshape(-1) for l in leaves], (treedef, [l.shape for l in leaves])
+
+
+def unflatten_buckets(flat: list[jnp.ndarray], spec) -> any:
+    treedef, shapes = spec
+    return jax.tree_util.tree_unflatten(
+        treedef, [f.reshape(s) for f, s in zip(flat, shapes)])

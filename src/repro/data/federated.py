@@ -1,0 +1,48 @@
+"""Non-i.i.d. federated splits reproducing the paper's client layouts.
+
+MNIST (§III-C): 10 clients, each holding TWO labels; five pairs of clients
+share the same label pair (clients 1&2 -> {0,1}, 3&4 -> {2,3}, ...).
+
+CIFAR10: 6 clients, each holding labels {0,1,2} / {3,4,5} / {6,7,8,9}
+(paper: "1,2,3", "4,5,6", "7,8,9,10" 1-indexed), pairs (1,2), (3,4), (5,6).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+
+def label_partition(x, y, client_labels: list[list[int]], *, seed: int = 0):
+    """Split (x, y) into one shard per client by label lists (labels may
+    repeat across clients; samples of a label shared by multiple clients
+    are split evenly among them)."""
+    rng = np.random.default_rng(seed)
+    n_clients = len(client_labels)
+    owners: dict[int, list[int]] = {}
+    for c, labels in enumerate(client_labels):
+        for l in labels:
+            owners.setdefault(l, []).append(c)
+    shards: list[list[int]] = [[] for _ in range(n_clients)]
+    for l, cs in owners.items():
+        idx = np.where(y == l)[0]
+        rng.shuffle(idx)
+        for j, part in enumerate(np.array_split(idx, len(cs))):
+            shards[cs[j]].extend(part.tolist())
+    out = []
+    for c in range(n_clients):
+        sel = np.array(sorted(shards[c]))
+        out.append((x[sel], y[sel]))
+    return out
+
+
+PAPER_MNIST_LABELS = [[0, 1], [0, 1], [2, 3], [2, 3], [4, 5], [4, 5],
+                      [6, 7], [6, 7], [8, 9], [8, 9]]
+PAPER_CIFAR_LABELS = [[0, 1, 2], [0, 1, 2], [3, 4, 5], [3, 4, 5],
+                      [6, 7, 8, 9], [6, 7, 8, 9]]
+
+
+def paper_mnist_split(x, y, seed: int = 0):
+    return label_partition(x, y, PAPER_MNIST_LABELS, seed=seed)
+
+
+def paper_cifar_split(x, y, seed: int = 0):
+    return label_partition(x, y, PAPER_CIFAR_LABELS, seed=seed)

@@ -1,0 +1,51 @@
+"""Batching / streaming pipeline (deterministic, prefetch-free: CPU sim)."""
+from __future__ import annotations
+
+import numpy as np
+
+
+class BatchIterator:
+    """Infinite shuffled batch iterator over (x, y)."""
+
+    def __init__(self, x, y, batch_size: int, *, seed: int = 0):
+        self.x, self.y = x, y
+        self.bs = min(batch_size, len(y))
+        self.rng = np.random.default_rng(seed)
+        self._order = self.rng.permutation(len(y))
+        self._pos = 0
+
+    def __next__(self):
+        if self._pos + self.bs > len(self._order):
+            self._order = self.rng.permutation(len(self.y))
+            self._pos = 0
+        sel = self._order[self._pos:self._pos + self.bs]
+        self._pos += self.bs
+        return self.x[sel], self.y[sel]
+
+    def __iter__(self):
+        return self
+
+
+def token_stream(vocab: int, batch: int, seq: int, *, seed: int = 0,
+                 order: int = 2):
+    """Synthetic LM data: a random order-`order` Markov chain over `vocab`
+    tokens — learnable structure for the end-to-end transformer example."""
+    rng = np.random.default_rng(seed)
+    # sparse transition: each context maps to a small set of next tokens
+    ctx_hash_w = rng.integers(1, vocab, order)
+
+    def sample(n):
+        toks = rng.integers(0, vocab, (n, order))
+        out = np.empty((n, seq + 1), np.int64)
+        out[:, :order] = toks
+        for t in range(order, seq + 1):
+            h = (out[:, t - order:t] * ctx_hash_w).sum(1) % vocab
+            jump = rng.random(n) < 0.1
+            nxt = np.where(jump, rng.integers(0, vocab, n), (h * 31 + 7) % vocab)
+            out[:, t] = nxt
+        return out
+
+    while True:
+        chunk = sample(batch)
+        yield {"tokens": chunk[:, :-1].astype(np.int32),
+               "labels": chunk[:, 1:].astype(np.int32)}

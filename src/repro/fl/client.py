@@ -1,0 +1,73 @@
+"""Client-side machinery: vmapped local training phases (Algorithm 1,
+lines 3-5). All N clients advance H local Adam steps inside one jitted
+scan; the LAST local gradient is returned flat for sparsification (line 7
+applies rAge-k to the gradient at the global-iteration step).
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.optim.optimizers import adam, apply_updates
+
+
+def softmax_xent(logits, labels):
+    logp = jax.nn.log_softmax(logits)
+    return -jnp.mean(jnp.take_along_axis(logp, labels[:, None], axis=1))
+
+
+def flatten_tree(tree):
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.concatenate([l.reshape(-1) for l in leaves])
+
+
+def unflattener(template):
+    leaves, treedef = jax.tree_util.tree_flatten(template)
+    shapes = [l.shape for l in leaves]
+    sizes = [int(l.size) for l in leaves]
+
+    def unflatten(flat):
+        out, o = [], 0
+        for s, sz in zip(shapes, sizes):
+            out.append(flat[o:o + sz].reshape(s))
+            o += sz
+        return jax.tree_util.tree_unflatten(treedef, out)
+    return unflatten
+
+
+def make_local_phase(apply_loss: Callable, lr: float) -> Callable:
+    """apply_loss(params, state, batch) -> (loss, new_state).
+
+    Returns jitted phase(params_s, opt_s, state_s, batches) with leading
+    client axis on every arg; batches: (N, H, ...) pytree. Output includes
+    the final-step flat gradients (N, d) and mean loss per client (N,).
+    """
+    opt = adam(lr)
+
+    def one_step(carry, batch):
+        params, opt_state, state = carry
+        (loss, new_state), grads = jax.value_and_grad(
+            apply_loss, has_aux=True)(params, state, batch)
+        updates, opt_state = opt.update(grads, opt_state, params)
+        params = apply_updates(params, updates)
+        return (params, opt_state, new_state), (loss, grads)
+
+    def phase_one_client(params, opt_state, state, batches):
+        (params, opt_state, state), (losses, grads_seq) = jax.lax.scan(
+            one_step, (params, opt_state, state), batches)
+        last_grad = jax.tree_util.tree_map(lambda g: g[-1], grads_seq)
+        return params, opt_state, state, flatten_tree(last_grad), losses.mean()
+
+    return jax.jit(jax.vmap(phase_one_client))
+
+
+def stack_clients(trees: list):
+    return jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *trees)
+
+
+def broadcast_global(global_params, n: int):
+    return jax.tree_util.tree_map(
+        lambda p: jnp.broadcast_to(p[None], (n,) + p.shape), global_params)

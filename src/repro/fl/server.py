@@ -1,0 +1,41 @@
+"""Server-side machinery: sparse aggregation + global model update
+(Algorithm 1, lines 8-12). Control plane (index selection, clustering) is
+``repro.core.protocol.ParameterServer``; this module is the device math.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.optim.optimizers import adam, sgd, apply_updates
+
+
+@partial(jax.jit, static_argnames=("d",))
+def aggregate_sparse(idx: jnp.ndarray, vals: jnp.ndarray, d: int):
+    """idx/vals: (N, k) per-client sparse contributions -> dense sum (d,).
+
+    The PS aggregation is a straight SUM (paper: g~t = sum_i g~_i^t).
+    """
+    return jnp.zeros((d,), jnp.float32).at[idx.reshape(-1)].add(
+        vals.reshape(-1).astype(jnp.float32))
+
+
+class GlobalServer:
+    """Global model + optimizer at the PS."""
+
+    def __init__(self, params, *, opt: str = "adam", lr: float = 1e-4):
+        self.params = params
+        self.opt = adam(lr) if opt == "adam" else sgd(lr)
+        self.opt_state = self.opt.init(params)
+        self._step = jax.jit(self._step_impl)
+
+    def _step_impl(self, params, opt_state, grad_tree):
+        updates, opt_state = self.opt.update(grad_tree, opt_state, params)
+        return apply_updates(params, updates), opt_state
+
+    def apply_gradient(self, grad_tree):
+        self.params, self.opt_state = self._step(
+            self.params, self.opt_state, grad_tree)
+        return self.params

@@ -1,0 +1,61 @@
+"""Pallas TPU kernel: per-block magnitude histogram (exponent buckets).
+
+First pass of accelerator-native top-k: bucket |g| by binary exponent into
+NBINS counters per block; the host (or a tiny jnp epilogue) picks the
+threshold bin so that ~r entries survive, and only candidates are ranked
+exactly. All-d work (the expensive part) is one streaming pass, VMEM-tiled.
+
+Bins: bin = clip(floor(log2|g|) + OFFSET, 0, NBINS-1); zeros land in bin 0.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK_D = 4096
+NBINS = 64
+OFFSET = 40          # exponent -40 .. +23 covered
+
+
+def _kernel(g_ref, hist_ref):
+    g = g_ref[...].astype(jnp.float32)
+    mag = jnp.abs(g)
+    e = jnp.floor(jnp.log2(jnp.maximum(mag, 1e-38)))
+    b = jnp.clip(e + OFFSET, 0, NBINS - 1).astype(jnp.int32)
+    b = jnp.where(mag == 0, 0, b)
+    onehot = (b[:, None] == jax.lax.broadcasted_iota(
+        jnp.int32, (g.shape[0], NBINS), 1)).astype(jnp.int32)
+    hist_ref[...] = jnp.sum(onehot, axis=0, keepdims=True)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def maghist(g: jnp.ndarray, *, interpret: bool = True) -> jnp.ndarray:
+    """g: (d,) with d % BLOCK_D == 0 -> (d // BLOCK_D, NBINS) int32."""
+    d = g.shape[0]
+    assert d % BLOCK_D == 0
+    nb = d // BLOCK_D
+    return pl.pallas_call(
+        _kernel,
+        grid=(nb,),
+        in_specs=[pl.BlockSpec((BLOCK_D,), lambda j: (j,))],
+        out_specs=pl.BlockSpec((1, NBINS), lambda j: (j, 0)),
+        out_shape=jax.ShapeDtypeStruct((nb, NBINS), jnp.int32),
+        interpret=interpret,
+    )(g)
+
+
+def threshold_from_hist(hist: jnp.ndarray, r: int) -> jnp.ndarray:
+    """Smallest magnitude threshold whose exceed-count >= r.
+
+    Returns tau (f32): candidates are {i : |g_i| >= tau}; the count of
+    candidates is in [r, r + bucket_width_population). tau = 2^(bin-OFFSET).
+    """
+    total = hist.sum(0)                         # (NBINS,)
+    # count of entries in bins >= b
+    from_top = jnp.cumsum(total[::-1])[::-1]
+    bin_sel = jnp.argmax((from_top >= r).astype(jnp.int32) *
+                         jnp.arange(NBINS, 0, -1))
+    return jnp.exp2((bin_sel - OFFSET).astype(jnp.float32))

@@ -1,0 +1,81 @@
+"""Jit'd public wrappers around the Pallas kernels: padding to block
+multiples, interpret-mode switch (CPU validation vs TPU target), and the
+hybrid threshold-top-k built from the maghist kernel.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import maghist as MH
+from repro.kernels import sparse_aggregate as SA
+from repro.kernels import decode_attention as DA
+
+# interpret=True executes the kernel bodies in Python on CPU; on a real TPU
+# runtime set repro_kernels_interpret(False).
+_INTERPRET = True
+
+
+def set_interpret(flag: bool):
+    global _INTERPRET
+    _INTERPRET = bool(flag)
+
+
+def _pad_to(x, m, fill=0):
+    pad = (-x.shape[0]) % m
+    if pad:
+        x = jnp.pad(x, (0, pad), constant_values=fill)
+    return x
+
+
+def sparse_aggregate(idx: jnp.ndarray, vals: jnp.ndarray, age: jnp.ndarray):
+    """Public entry: arbitrary NK and d; pads idx with d (dropped) and the
+    age vector with zeros (sliced back off)."""
+    d = age.shape[0]
+    dp = d + ((-d) % SA.BLOCK_D)
+    idx_p = _pad_to(idx.astype(jnp.int32), SA.NK_TILE, fill=dp)
+    vals_p = _pad_to(vals.astype(jnp.float32), SA.NK_TILE, fill=0)
+    age_p = _pad_to(age.astype(jnp.int32), SA.BLOCK_D, fill=0)
+    dense, new_age = SA.sparse_aggregate(idx_p, vals_p, age_p,
+                                         interpret=_INTERPRET)
+    return dense[:d], new_age[:d]
+
+
+def maghist(g: jnp.ndarray):
+    gp = _pad_to(g, MH.BLOCK_D, fill=0)
+    return MH.maghist(gp, interpret=_INTERPRET)
+
+
+def threshold_topk(g: jnp.ndarray, r: int):
+    """Two-pass accelerator top-r: histogram -> threshold -> exact rank of
+    the surviving candidates. Returns (vals, idx) like lax.top_k(|g|, r).
+
+    Guarantee (tested): the exact |g| top-r set is always contained in the
+    candidate set {|g| >= tau}, so the final exact top_k over candidates
+    equals the true top-r (ties broken by index like lax.top_k).
+    """
+    hist = maghist(g)
+    tau = MH.threshold_from_hist(hist, r)
+    mag = jnp.abs(g.astype(jnp.float32))
+    # zero non-candidates, then exact top-r (the r-sized sort is the cheap
+    # part; the d-sized work happened in the streaming histogram pass)
+    masked = jnp.where(mag >= tau, mag, -1.0)
+    vals, idx = jax.lax.top_k(masked, r)
+    return vals, idx
+
+
+def decode_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                     cache_len) -> jnp.ndarray:
+    """q: (B, H, D); k/v: (B, S, G, D); cache_len: scalar int.
+    Batched via vmap over B; pads S to BLOCK_S."""
+    B, H, D = q.shape
+    S = k.shape[1]
+    pad = (-S) % DA.BLOCK_S
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    clen = jnp.full((1,), cache_len, jnp.int32)
+    fn = functools.partial(DA.decode_attention, interpret=_INTERPRET)
+    return jax.vmap(lambda qq, kk, vv: fn(qq, kk, vv, clen))(q, k, v)

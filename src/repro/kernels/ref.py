@@ -1,0 +1,43 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness ground truth
+swept by tests/test_kernels.py)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.maghist import NBINS, OFFSET, BLOCK_D as HIST_BLOCK
+
+
+def sparse_aggregate_ref(idx, vals, age):
+    """idx/vals: (NK,), age: (d,). Out-of-range idx are dropped."""
+    d = age.shape[0]
+    dense = jnp.zeros((d,), jnp.float32).at[idx].add(
+        vals.astype(jnp.float32), mode="drop")
+    hit = jnp.zeros((d,), bool).at[idx].set(True, mode="drop")
+    new_age = jnp.where(hit, 0, age + 1)
+    return dense, new_age
+
+
+def maghist_ref(g):
+    d = g.shape[0]
+    nb = d // HIST_BLOCK
+    mag = jnp.abs(g.astype(jnp.float32))
+    e = jnp.floor(jnp.log2(jnp.maximum(mag, 1e-38)))
+    b = jnp.clip(e + OFFSET, 0, NBINS - 1).astype(jnp.int32)
+    b = jnp.where(mag == 0, 0, b)
+    oh = jax.nn.one_hot(b, NBINS, dtype=jnp.int32)
+    return oh.reshape(nb, HIST_BLOCK, NBINS).sum(axis=1)
+
+
+def decode_attention_ref(q, k, v, cache_len):
+    """q: (H, D); k/v: (S, G, D); cache_len: (1,) int32 -> (H, D)."""
+    H, D = q.shape
+    S, G, _ = k.shape
+    rep = H // G
+    qf = q.astype(jnp.float32).reshape(G, rep, D) * D ** -0.5
+    s = jnp.einsum("grd,sgd->grs", qf, k.astype(jnp.float32))
+    valid = jnp.arange(S)[None, None, :] < cache_len[0]
+    s = jnp.where(valid, s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("grs,sgd->grd", p, v.astype(jnp.float32))
+    return o.reshape(H, D).astype(q.dtype)

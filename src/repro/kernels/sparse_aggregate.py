@@ -1,0 +1,90 @@
+"""Pallas TPU kernel: fused sparse scatter-add aggregation + age update.
+
+The PS hot loop touches all d parameters every round: scatter-add N x k
+sparse client updates into the dense gradient AND apply eq. (2) to the age
+vector. Random-index scatter is slow on TPU vector units, so each VMEM
+block turns the scatter into a ONE-HOT MATMUL on the MXU:
+
+    out_block[B] = vals[NK] @ onehot(idx_local)[NK, B]
+
+which is exactly how TPUs like to scatter (dense systolic work, no
+data-dependent addressing). The age update reuses the same one-hot:
+hit = any(onehot) -> age' = (age + 1) * (1 - hit).
+
+Block size 512 lanes (f32) keeps the (NK, B) one-hot in VMEM for NK up to
+~16k (16k x 512 x 4B = 32 MB is too big — so NK is tiled too, at NK_TILE
+2048 -> 4 MB one-hot tiles, accumulated over a second grid dim).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK_D = 512
+NK_TILE = 2048
+
+
+def _kernel(idx_ref, vals_ref, age_ref, out_ref, age_out_ref, hit_ref):
+    j = pl.program_id(0)        # d-block index
+    t = pl.program_id(1)        # NK tile index
+    nt = pl.num_programs(1)
+
+    idx = idx_ref[...]                            # (NK_TILE,) int32
+    vals = vals_ref[...].astype(jnp.float32)      # (NK_TILE,)
+    lo = j * BLOCK_D
+    local = idx - lo
+    onehot = (local[:, None] == jax.lax.broadcasted_iota(
+        jnp.int32, (NK_TILE, BLOCK_D), 1)).astype(jnp.float32)
+
+    @pl.when(t == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+        hit_ref[...] = jnp.zeros_like(hit_ref)
+
+    out_ref[...] += jnp.dot(vals[None, :], onehot,
+                            preferred_element_type=jnp.float32)[0]
+    hit_ref[...] += jnp.sum(onehot, axis=0)
+
+    @pl.when(t == nt - 1)
+    def _fini():
+        hit = hit_ref[...] > 0
+        age_out_ref[...] = jnp.where(hit, 0, age_ref[...] + 1)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def sparse_aggregate(idx: jnp.ndarray, vals: jnp.ndarray, age: jnp.ndarray,
+                     *, interpret: bool = True):
+    """idx/vals: (NK,) flattened client payloads (int32 / float); duplicate
+    indices accumulate. age: (d,) int32. Returns (dense (d,) f32, new_age).
+
+    d must be a multiple of BLOCK_D and NK a multiple of NK_TILE (ops.py
+    pads). Out-of-range idx (used as padding: idx = d) contribute nothing.
+    """
+    d = age.shape[0]
+    nk = idx.shape[0]
+    assert d % BLOCK_D == 0 and nk % NK_TILE == 0
+    grid = (d // BLOCK_D, nk // NK_TILE)
+    out, new_age, _ = pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((NK_TILE,), lambda j, t: (t,)),
+            pl.BlockSpec((NK_TILE,), lambda j, t: (t,)),
+            pl.BlockSpec((BLOCK_D,), lambda j, t: (j,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((BLOCK_D,), lambda j, t: (j,)),
+            pl.BlockSpec((BLOCK_D,), lambda j, t: (j,)),
+            pl.BlockSpec((BLOCK_D,), lambda j, t: (j,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((d,), jnp.float32),
+            jax.ShapeDtypeStruct((d,), jnp.int32),
+            jax.ShapeDtypeStruct((d,), jnp.float32),   # hit scratch-as-output
+        ],
+        interpret=interpret,
+    )(idx, vals, age)
+    return out, new_age

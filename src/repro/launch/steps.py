@@ -1,0 +1,295 @@
+"""Step builders + sharding spec derivation for the production meshes.
+
+Everything here is mesh-generic: specs are derived from the rules engine in
+``repro.dist.sharding`` with per-dim divisibility fallbacks, so the same
+code lowers on (data, model), (pod, data, model) and tiny test meshes.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchConfig, InputShape
+from repro.dist import sharding as SH
+from repro.models import registry as R
+from repro.models import transformer as T
+from repro.optim.optimizers import adam, apply_updates
+
+
+def batch_axes(mesh) -> tuple:
+    return tuple(a for a in ("pod", "data") if a in mesh.shape)
+
+
+def _div(dim: int, n: int) -> bool:
+    return n > 0 and dim % n == 0
+
+
+def _axes_size(mesh, axes) -> int:
+    n = 1
+    for a in axes:
+        n *= mesh.shape[a]
+    return n
+
+
+def batch_spec_tree(mesh, specs: dict, cfg: ArchConfig) -> dict:
+    """Input batch shardings: batch dim over (pod, data) when divisible."""
+    ba = batch_axes(mesh)
+    nb = _axes_size(mesh, ba)
+
+    def spec(s):
+        if len(s.shape) >= 1 and _div(s.shape[0], nb):
+            return P(ba)
+        return P()
+    return {k: NamedSharding(mesh, spec(v)) for k, v in specs.items()}
+
+
+def cache_spec_tree(mesh, cfg: ArchConfig, cache_shapes) -> Any:
+    """KV/state cache shardings (leading dim is n_layers / n_apps).
+
+    Greedy: shard B over (pod,data) when divisible, KV heads over model
+    when divisible, then spend any UNUSED axes on the cache sequence dim
+    (decode attention contracts over S with a psum-combined softmax, so
+    S-sharding is always legal). long_500k (B=1) ends up with S over all
+    axes; decode_32k with B over data and S/heads over model.
+    """
+    ba = batch_axes(mesh)
+    nb = _axes_size(mesh, ba)
+    nm = mesh.shape.get("model", 1)
+    kv_names = ("k", "v", "cross_k", "cross_v", "c_kv", "k_rope")
+
+    def leaf_spec(path, leaf):
+        name = SH._path_str(path)
+        s = leaf.shape
+        out = [None] * len(s)
+        used: list = []
+        # (L, B, ...) for all caches: B over batch axes when divisible
+        if len(s) >= 2 and _div(s[1], nb):
+            out[1] = ba
+            used.extend(ba)
+        if name in kv_names:
+            # heads over model for (L,B,S,G,hd)
+            if len(s) == 5 and _div(s[3], nm):
+                out[3] = "model"
+                used.append("model")
+            # leftover axes onto the sequence dim (dim 2)
+            free = tuple(a for a in mesh.shape if a not in used)
+            if free and len(s) >= 3 and _div(s[2], _axes_size(mesh, free)):
+                out[2] = free if len(free) > 1 else free[0]
+        elif name == "state" and len(s) == 5 and _div(s[2], nm):
+            out[2] = "model"          # (L, B, nh, hp, ns): heads over model
+        elif name == "conv" and len(s) == 4 and _div(s[3], nm):
+            out[3] = "model"
+        return NamedSharding(mesh, P(*out))
+
+    return jax.tree_util.tree_map_with_path(leaf_spec, cache_shapes)
+
+
+def abstract_params(cfg: ArchConfig):
+    return jax.eval_shape(lambda: T.init(cfg, jax.random.PRNGKey(0)))
+
+
+def attention_overrides(mesh, cfg: ArchConfig) -> dict:
+    """Config-aware sharding decisions the path-rules can't make alone.
+
+    Head-shard attention over 'model' only when BOTH n_heads and n_kv_heads
+    divide the model axis (otherwise the (B,S,G*hd)->(B,S,G,hd) reshape
+    forces GSPMD activation reshards every layer); else attention weights
+    are ZeRO-sharded over data only and the model axis contributes through
+    the (always divisible) d_ff/vocab dims.
+    """
+    nm = mesh.shape.get("model", 1)
+    if cfg.n_heads == 0:
+        return {}
+    if cfg.use_mla:
+        # latent path: heads always 128 (divisible); rope/latent projections
+        # are small — replicate their out dims, TP the head up-projections
+        return {"w_dkv": ("fsdp", None), "w_kr": ("fsdp", None)}
+    if cfg.n_heads % nm == 0:
+        if cfg.n_kv_heads % nm == 0:
+            return {}
+        # Megatron GQA practice for tp > G: replicate KV projections,
+        # shard Q heads + row-parallel out-projection
+        return {"wk": ("fsdp", None), "wv": ("fsdp", None)}
+    # H not divisible: keep flat-dim TP on the projections and pay one
+    # activation reshard per layer at the (B,S,H*hd)->(B,S,H,hd) reshape
+    # (cheaper than 16x-replicated attention compute; see EXPERIMENTS §Perf)
+    return {}
+
+
+def param_sharding(mesh, cfg: ArchConfig, params_shape=None):
+    if params_shape is None:
+        params_shape = abstract_params(cfg)
+    with SH.use_mesh(mesh):
+        specs = SH.param_specs(params_shape,
+                               overrides=attention_overrides(mesh, cfg))
+        return SH.named(specs)
+
+
+def opt_sharding(mesh, param_shardings):
+    """OptState(step, mu, nu) sharded like params (ZeRO-3-style)."""
+    from repro.optim.optimizers import OptState
+    step = NamedSharding(mesh, P())
+    return OptState(step, param_shardings, param_shardings)
+
+
+# ---------------------------------------------------------------------------
+# steps
+# ---------------------------------------------------------------------------
+
+def make_train_step(cfg: ArchConfig, shape: InputShape, *, lr: float = 1e-4,
+                    sync=None):
+    """Returns train_step(params, opt_state, batch[, ages]) ->
+    (params, opt, loss[, ages, stats]).
+
+    Gradient accumulation (cfg.grad_accum[shape.name]) runs as a scan over
+    microbatches; the optimizer is Adam (fp32 state). When `sync` (a
+    make_manual_sync closure) is given, the gradient exchange over the
+    data/pod axes is EXPLICIT (dense bf16 pmean or the paper's rAge-k
+    sparse exchange) instead of GSPMD-inferred.
+    """
+    opt = adam(lr)
+    accum = cfg.grad_accum.get(shape.name, 1)
+
+    def _grads(params, batch):
+        if accum > 1:
+            def resplit(x):
+                return x.reshape((accum, x.shape[0] // accum) + x.shape[1:])
+            micro = jax.tree_util.tree_map(resplit, batch)
+
+            def body(gsum, mb):
+                (loss, _aux), g = jax.value_and_grad(
+                    T.loss_fn, has_aux=True)(params, cfg, mb)
+                gsum = jax.tree_util.tree_map(
+                    lambda a, b: a + b.astype(jnp.float32), gsum, g)
+                return gsum, loss
+            g0 = jax.tree_util.tree_map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            grads, losses = jax.lax.scan(body, g0, micro)
+            grads = jax.tree_util.tree_map(lambda g: g / accum, grads)
+            return grads, losses.mean()
+        (loss, _aux), grads = jax.value_and_grad(
+            T.loss_fn, has_aux=True)(params, cfg, batch)
+        return grads, loss
+
+    if sync is None:
+        def train_step(params, opt_state, batch):
+            grads, loss = _grads(params, batch)
+            updates, opt_state = opt.update(grads, opt_state, params)
+            params = apply_updates(params, updates)
+            return params, opt_state, loss
+        return train_step
+
+    def train_step_sync(params, opt_state, batch, ages):
+        grads, loss = _grads(params, batch)
+        # flattening happens INSIDE the manual shard_map (on local slices);
+        # flattening here would force GSPMD reshards of every leaf
+        synced, new_ages, stats = sync(grads, ages)
+        updates, opt_state = opt.update(synced, opt_state, params)
+        params = apply_updates(params, updates)
+        return params, opt_state, loss, new_ages, stats
+
+    return train_step_sync
+
+
+def make_prefill_step(cfg: ArchConfig):
+    def prefill_step(params, batch):
+        return T.prefill(params, cfg, batch)
+    return prefill_step
+
+
+def make_decode_step(cfg: ArchConfig):
+    def serve_step(params, inputs, cache, pos):
+        return T.decode_step(params, cfg, inputs, cache, pos)
+    return serve_step
+
+
+# ---------------------------------------------------------------------------
+# dry-run assembly: lower + compile one (arch x shape x mesh) combination
+# ---------------------------------------------------------------------------
+
+def lower_combo(cfg: ArchConfig, shape: InputShape, mesh, *, lr=1e-4,
+                sync: str = "auto", sync_r_frac: float = 1 / 256,
+                sync_k_frac: float = 1 / 2048):
+    """Returns (lowered, kind). Uses ShapeDtypeStructs only — no allocation.
+
+    sync: 'auto' (GSPMD-inferred grad reduction, ZeRO-3 over data),
+          'dense' (explicit bf16 pmean over data; params replicated on
+          data, model-sharded only), or 'rage_k' (the paper's sparse
+          exchange at production scale). Train shapes only.
+    """
+    # long-context variant: dense/moe/vlm archs get a sliding window
+    if (shape.name == "long_500k" and cfg.family in ("dense", "moe", "vlm")
+            and not cfg.sliding_window):
+        cfg = cfg.replace(sliding_window=8192)
+    # prefill: sequence-parallel attention for non-divisible-head archs —
+    # no backward pass, so the kv-gather penalty that refutes it for train
+    # doesn't exist; 10.7x collective on phi4 prefill (§Perf addendum)
+    if shape.kind == "prefill":
+        cfg = cfg.replace(seq_parallel_attn=True)
+
+    pshape = abstract_params(cfg)
+    rules = {"fsdp": None} if sync != "auto" else None
+    with SH.use_mesh(mesh, rules=rules):
+        pspecs = SH.param_specs(pshape,
+                                overrides=attention_overrides(mesh, cfg))
+        pshard = SH.named(pspecs)
+
+    with SH.use_mesh(mesh, rules=rules):
+        if shape.kind == "train":
+            specs = R.input_specs(cfg, shape)
+            bshard = batch_spec_tree(mesh, specs, cfg)
+            oshard = opt_sharding(mesh, pshard)
+            opt_shape = jax.eval_shape(adam(lr).init, pshape)
+            if sync != "auto":
+                from repro.dist.sparse_sync import (init_age_state_sharded,
+                                                    make_manual_sync)
+                total = sum(
+                    int(jnp.prod(jnp.array(l.shape))) if l.shape else 1
+                    for l in jax.tree_util.tree_leaves(pshape))
+                sync_fn = make_manual_sync(
+                    mesh, pspecs, pshape, method=sync,
+                    r=max(1, int(total * sync_r_frac)),
+                    k=max(1, int(total * sync_k_frac)))
+                age_shape = jax.eval_shape(
+                    lambda: init_age_state_sharded(pshape))
+                ashard = jax.tree_util.tree_map(
+                    lambda s: NamedSharding(mesh, s), sync_fn.age_specs,
+                    is_leaf=lambda x: isinstance(x, jax.sharding.PartitionSpec))
+                step = make_train_step(cfg, shape, lr=lr, sync=sync_fn)
+                lowered = jax.jit(
+                    step,
+                    in_shardings=(pshard, oshard, bshard, ashard),
+                    donate_argnums=(0, 1, 3),
+                ).lower(pshape, opt_shape, specs, age_shape)
+                return lowered, "train"
+            step = make_train_step(cfg, shape, lr=lr)
+            lowered = jax.jit(
+                step,
+                in_shardings=(pshard, oshard, bshard),
+                donate_argnums=(0, 1),
+            ).lower(pshape, opt_shape, specs)
+            return lowered, "train"
+        if shape.kind == "prefill":
+            specs = R.input_specs(cfg, shape)
+            bshard = batch_spec_tree(mesh, specs, cfg)
+            step = make_prefill_step(cfg)
+            lowered = jax.jit(
+                step, in_shardings=(pshard, bshard),
+            ).lower(pshape, specs)
+            return lowered, "prefill"
+        # decode
+        inputs, cache_shape = R.decode_input_specs(cfg, shape)
+        cshard = cache_spec_tree(mesh, cfg, cache_shape)
+        ishard = batch_spec_tree(mesh, inputs, cfg)
+        step = make_decode_step(cfg)
+        pos = jax.ShapeDtypeStruct((), jnp.int32)
+        lowered = jax.jit(
+            step,
+            in_shardings=(pshard, ishard, cshard, NamedSharding(mesh, P())),
+            donate_argnums=(2,),
+        ).lower(pshape, inputs, cache_shape, pos)
+        return lowered, "decode"

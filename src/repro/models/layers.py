@@ -1,0 +1,232 @@
+"""Shared NN layers: norms, RoPE, attention (flash-style scan + decode),
+MLPs, embeddings. Pure-functional: params are nested dicts of jnp arrays.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.scan_util import scan as _pscan
+
+from repro.dist.sharding import constraint
+
+# ---------------------------------------------------------------------------
+# init helpers
+# ---------------------------------------------------------------------------
+
+def dense_init(key, d_in: int, d_out: int, dtype) -> jnp.ndarray:
+    scale = 1.0 / math.sqrt(d_in)
+    return (jax.random.normal(key, (d_in, d_out), jnp.float32) * scale).astype(dtype)
+
+
+def embed_init(key, vocab: int, d: int, dtype) -> jnp.ndarray:
+    return (jax.random.normal(key, (vocab, d), jnp.float32) * 0.02).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+
+def norm_params(cfg, d: Optional[int] = None) -> dict:
+    d = d or cfg.d_model
+    p = {"scale": jnp.ones((d,), jnp.float32)}
+    if cfg.norm == "layernorm":
+        p["bias"] = jnp.zeros((d,), jnp.float32)
+    return p
+
+
+def apply_norm(p: dict, cfg, x: jnp.ndarray) -> jnp.ndarray:
+    xf = x.astype(jnp.float32)
+    if cfg.norm == "layernorm":
+        mu = jnp.mean(xf, axis=-1, keepdims=True)
+        var = jnp.var(xf, axis=-1, keepdims=True)
+        y = (xf - mu) * jax.lax.rsqrt(var + cfg.norm_eps)
+        y = y * p["scale"] + p["bias"]
+    else:  # rmsnorm
+        ms = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+        y = xf * jax.lax.rsqrt(ms + cfg.norm_eps) * p["scale"]
+    return y.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+def rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float) -> jnp.ndarray:
+    """x: (..., S, H, D) rotary over D; positions: (S,) or (B, S)."""
+    d = x.shape[-1]
+    half = d // 2
+    freqs = jnp.exp(-math.log(theta) * jnp.arange(half, dtype=jnp.float32) / half)
+    if positions.ndim == 1:
+        ang = positions[:, None].astype(jnp.float32) * freqs[None, :]   # (S, half)
+        ang = ang[None, :, None, :]                                     # (1,S,1,half)
+    else:
+        ang = positions[..., None].astype(jnp.float32) * freqs          # (B,S,half)
+        ang = ang[:, :, None, :]
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate(
+        [x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1
+    )
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# activation / MLP
+# ---------------------------------------------------------------------------
+
+def act_fn(name: str):
+    return {"silu": jax.nn.silu, "gelu": jax.nn.gelu, "relu": jax.nn.relu}[name]
+
+
+def mlp_params(key, cfg, d_ff: Optional[int] = None) -> dict:
+    d, f = cfg.d_model, d_ff or cfg.d_ff
+    dtype = jnp.dtype(cfg.dtype)
+    ks = jax.random.split(key, 3)
+    if cfg.mlp_type == "glu":
+        return {
+            "w1": dense_init(ks[0], d, f, dtype),   # gate
+            "w3": dense_init(ks[1], d, f, dtype),   # up
+            "w2": dense_init(ks[2], f, d, dtype),   # down
+        }
+    return {"w1": dense_init(ks[0], d, f, dtype), "w2": dense_init(ks[1], f, d, dtype)}
+
+
+def apply_mlp(p: dict, cfg, x: jnp.ndarray) -> jnp.ndarray:
+    a = act_fn(cfg.act)
+    if cfg.mlp_type == "glu":
+        h = a(x @ p["w1"]) * (x @ p["w3"])
+    else:
+        h = a(x @ p["w1"])
+    h = constraint(h, ("batch", "seq", "d_ff")) if h.ndim == 3 else h
+    return h @ p["w2"]
+
+
+# ---------------------------------------------------------------------------
+# attention parameters
+# ---------------------------------------------------------------------------
+
+def attention_params(key, cfg) -> dict:
+    d, hd = cfg.d_model, cfg.head_dim_
+    H, G = cfg.n_heads, cfg.n_kv_heads
+    dtype = jnp.dtype(cfg.dtype)
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": dense_init(ks[0], d, H * hd, dtype),
+        "wk": dense_init(ks[1], d, G * hd, dtype),
+        "wv": dense_init(ks[2], d, G * hd, dtype),
+        "wo": dense_init(ks[3], H * hd, d, dtype),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((H * hd,), dtype)
+        p["bk"] = jnp.zeros((G * hd,), dtype)
+        p["bv"] = jnp.zeros((G * hd,), dtype)
+    return p
+
+
+def qkv(p: dict, cfg, x: jnp.ndarray):
+    """x: (B,S,d) -> q (B,S,H,hd), k/v (B,S,G,hd)."""
+    B, S, _ = x.shape
+    hd = cfg.head_dim_
+    q = x @ p["wq"]
+    k = x @ p["wk"]
+    v = x @ p["wv"]
+    if cfg.qkv_bias:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    q = q.reshape(B, S, cfg.n_heads, hd)
+    k = k.reshape(B, S, cfg.n_kv_heads, hd)
+    v = v.reshape(B, S, cfg.n_kv_heads, hd)
+    return q, k, v
+
+
+# ---------------------------------------------------------------------------
+# flash-style attention (scan over KV chunks, online softmax) — jnp reference
+# path used for training/prefill lowering; the Pallas decode kernel lives in
+# repro.kernels (validated against this).
+# ---------------------------------------------------------------------------
+
+def flash_attention(
+    q: jnp.ndarray,                 # (B, Sq, H, D)
+    k: jnp.ndarray,                 # (B, Skv, G, D)
+    v: jnp.ndarray,                 # (B, Skv, G, D)
+    *,
+    causal: bool = True,
+    window: int = 0,                # 0 = unlimited
+    q_offset: int = 0,              # absolute position of q[0]
+    kv_chunk: int = 1024,
+) -> jnp.ndarray:
+    B, Sq, H, D = q.shape
+    Skv, G = k.shape[1], k.shape[2]
+    Dv = v.shape[-1]                  # may differ from D (e.g. MLA rope concat)
+    rep = H // G
+    kv_chunk = min(kv_chunk, Skv)
+    # pad Skv to a chunk multiple (masked out)
+    pad = (-Skv) % kv_chunk
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    n_chunks = (Skv + pad) // kv_chunk
+
+    qf = q.astype(jnp.float32) * (D ** -0.5)
+    q_pos = q_offset + jnp.arange(Sq)
+
+    kc = k.reshape(B, n_chunks, kv_chunk, G, D).transpose(1, 0, 2, 3, 4)
+    vc = v.reshape(B, n_chunks, kv_chunk, G, Dv).transpose(1, 0, 2, 3, 4)
+
+    def body(carry, inp):
+        acc, m, l = carry
+        ki, vi, ci = inp                      # (B,ck,G,D), (B,ck,G,D), ()
+        k_pos = ci * kv_chunk + jnp.arange(kv_chunk)
+        kh = jnp.repeat(ki, rep, axis=2)      # (B,ck,H,D)
+        vh = jnp.repeat(vi, rep, axis=2)
+        s = jnp.einsum("bqhd,bkhd->bhqk", qf.astype(q.dtype), kh,
+                       preferred_element_type=jnp.float32)
+        mask = k_pos[None, :] < Skv           # (1, ck) valid (un-padded)
+        if causal:
+            mask = mask & (k_pos[None, :] <= q_pos[:, None])
+        if window:
+            mask = mask & (k_pos[None, :] > q_pos[:, None] - window)
+        s = jnp.where(mask[None, None], s, -jnp.inf)
+        m_new = jnp.maximum(m, s.max(axis=-1))          # (B,H,Sq)
+        # guard against all -inf rows
+        m_safe = jnp.where(jnp.isfinite(m_new), m_new, 0.0)
+        p = jnp.exp(s - m_safe[..., None])
+        p = jnp.where(mask[None, None], p, 0.0)
+        alpha = jnp.where(jnp.isfinite(m), jnp.exp(m - m_safe), 0.0)
+        l_new = l * alpha + p.sum(axis=-1)
+        acc_new = acc * alpha[..., None] + jnp.einsum(
+            "bhqk,bkhd->bhqd", p.astype(v.dtype), vh,
+            preferred_element_type=jnp.float32)
+        return (acc_new, m_new, l_new), None
+
+    acc0 = jnp.zeros((B, H, Sq, Dv), jnp.float32)
+    m0 = jnp.full((B, H, Sq), -jnp.inf, jnp.float32)
+    l0 = jnp.zeros((B, H, Sq), jnp.float32)
+    (acc, m, l), _ = _pscan(
+        body, (acc0, m0, l0), (kc, vc, jnp.arange(n_chunks)))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    return out.transpose(0, 2, 1, 3).astype(q.dtype)   # (B,Sq,H,D)
+
+
+def decode_attention(
+    q: jnp.ndarray,                 # (B, H, D) single query
+    k_cache: jnp.ndarray,           # (B, S, G, D)
+    v_cache: jnp.ndarray,           # (B, S, G, D)
+    cache_len,                      # () int — number of valid entries
+) -> jnp.ndarray:
+    """Single-token attention over the full cache (GSPMD shards S)."""
+    B, S, G, D = k_cache.shape
+    H = q.shape[1]
+    rep = H // G
+    qf = (q.astype(jnp.float32) * D ** -0.5).reshape(B, G, rep, D)
+    s = jnp.einsum("bgrd,bsgd->bgrs", qf.astype(q.dtype), k_cache,
+                   preferred_element_type=jnp.float32)
+    valid = jnp.arange(S)[None, None, None, :] < cache_len
+    s = jnp.where(valid, s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bgrs,bsgd->bgrd", p.astype(v_cache.dtype), v_cache,
+                   preferred_element_type=jnp.float32)
+    return o.reshape(B, H, D).astype(q.dtype)

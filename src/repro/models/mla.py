@@ -1,0 +1,99 @@
+"""Multi-head Latent Attention (DeepSeek-V2), TPU-adapted.
+
+Faithful structure: per-token KV state is a rank-`kv_lora_rank` latent c_kv
+plus a single shared 64-dim RoPE key. Decode uses the matrix-absorption
+trick (scores computed in latent space), so the KV cache is
+(rank + rope_dim) per token instead of 2*H*hd — the whole point of MLA.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense_init, flash_attention, rope
+
+ROPE_DIM = 64
+
+
+def mla_params(key, cfg) -> dict:
+    d, hd, H, R = cfg.d_model, cfg.head_dim_, cfg.n_heads, cfg.kv_lora_rank
+    dtype = jnp.dtype(cfg.dtype)
+    ks = jax.random.split(key, 6)
+    return {
+        "wq": dense_init(ks[0], d, H * (hd + ROPE_DIM), dtype),
+        "w_dkv": dense_init(ks[1], d, R, dtype),          # latent down-proj
+        "w_kr": dense_init(ks[2], d, ROPE_DIM, dtype),    # shared rope key
+        "w_uk": dense_init(ks[3], R, H * hd, dtype),      # latent -> K (nope)
+        "w_uv": dense_init(ks[4], R, H * hd, dtype),      # latent -> V
+        "wo": dense_init(ks[5], H * hd, d, dtype),
+    }
+
+
+def _split_q(cfg, q):
+    B, S = q.shape[:2]
+    H, hd = cfg.n_heads, cfg.head_dim_
+    q = q.reshape(B, S, H, hd + ROPE_DIM)
+    return q[..., :hd], q[..., hd:]
+
+
+def mla_prefill(p: dict, cfg, x: jnp.ndarray, positions: jnp.ndarray,
+                kv_chunk: int = 1024):
+    """Training / prefill path: expand latent to full K/V, flash attention.
+
+    Returns (out, (c_kv, k_rope)) so prefill can seed the decode cache.
+    """
+    B, S, _ = x.shape
+    H, hd = cfg.n_heads, cfg.head_dim_
+    q_nope, q_rope = _split_q(cfg, x @ p["wq"])
+    q_rope = rope(q_rope, positions, cfg.rope_theta)
+
+    c_kv = x @ p["w_dkv"]                                  # (B,S,R)
+    k_rope = rope((x @ p["w_kr"])[:, :, None, :], positions, cfg.rope_theta)
+    k_nope = (c_kv @ p["w_uk"]).reshape(B, S, H, hd)
+    v = (c_kv @ p["w_uv"]).reshape(B, S, H, hd)
+
+    # concat nope+rope per head; rope part is MQA (shared) -> broadcast
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)
+    k = jnp.concatenate([k_nope, jnp.broadcast_to(k_rope, (B, S, H, ROPE_DIM))],
+                        axis=-1)
+    out = flash_attention(q, k, v, causal=True, kv_chunk=kv_chunk,
+                          q_offset=0)                       # (B,S,H,hd)
+    out = out.reshape(B, S, H * hd)
+    return out @ p["wo"], (c_kv, k_rope[:, :, 0, :])
+
+
+def mla_decode(p: dict, cfg, x: jnp.ndarray, cache: dict, pos):
+    """x: (B,1,d). cache: {"c_kv": (B,S,R), "k_rope": (B,S,ROPE_DIM)}.
+    Matrix-absorbed single-token attention in latent space."""
+    B = x.shape[0]
+    H, hd, R = cfg.n_heads, cfg.head_dim_, cfg.kv_lora_rank
+    q_nope, q_rope = _split_q(cfg, x @ p["wq"])            # (B,1,H,*)
+    q_rope = rope(q_rope, jnp.full((B, 1), pos), cfg.rope_theta)
+
+    c_new = (x @ p["w_dkv"])[:, 0]                         # (B,R)
+    kr_new = rope((x @ p["w_kr"])[:, :, None, :],
+                  jnp.full((B, 1), pos), cfg.rope_theta)[:, 0, 0]  # (B,RD)
+    c_kv = cache["c_kv"].at[:, pos].set(c_new)
+    k_rope = cache["k_rope"].at[:, pos].set(kr_new)
+
+    # absorb: q_lat[b,h,r] = q_nope[b,h,:] @ w_uk[r, h,:]
+    w_uk = p["w_uk"].reshape(R, H, hd)
+    q_lat = jnp.einsum("bhd,rhd->bhr", q_nope[:, 0], w_uk,
+                       preferred_element_type=jnp.float32)
+    scale = (hd + ROPE_DIM) ** -0.5
+    s = jnp.einsum("bhr,bsr->bhs", q_lat.astype(x.dtype), c_kv,
+                   preferred_element_type=jnp.float32)
+    s = s + jnp.einsum("bhd,bsd->bhs", q_rope[:, 0], k_rope,
+                       preferred_element_type=jnp.float32)
+    s = s * scale
+    valid = jnp.arange(c_kv.shape[1])[None, None, :] <= pos
+    s = jnp.where(valid, s, -jnp.inf)
+    pr = jax.nn.softmax(s, axis=-1)
+    ctx_lat = jnp.einsum("bhs,bsr->bhr", pr.astype(x.dtype), c_kv,
+                         preferred_element_type=jnp.float32)  # (B,H,R)
+    w_uv = p["w_uv"].reshape(R, H, hd)
+    o = jnp.einsum("bhr,rhd->bhd", ctx_lat.astype(x.dtype), w_uv,
+                   preferred_element_type=jnp.float32).astype(x.dtype)
+    out = o.reshape(B, H * hd)[:, None, :]                 # (B,1,H*hd)
+    new_cache = {"c_kv": c_kv, "k_rope": k_rope}
+    return out @ p["wo"], new_cache

@@ -1,0 +1,108 @@
+"""The paper's two models (Table I), reconstructed to the exact parameter
+counts: Network-1 (MNIST MLP, 39,760 params) and Network-2 (CIFAR10 CNN,
+2,515,338 params). Pure-functional JAX; BatchNorm carries running stats in a
+separate `state` tree (functional-style).
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+# ---------------------------------------------------------------------------
+# Network 1: FC(784,50) + ReLU + FC(50,10)  -> 39,760 params
+# ---------------------------------------------------------------------------
+
+def mlp_init(key) -> dict:
+    k1, k2 = jax.random.split(key)
+    return {
+        "fc1": {"w": jax.random.normal(k1, (784, 50)) * (784 ** -0.5),
+                "b": jnp.zeros((50,))},
+        "fc2": {"w": jax.random.normal(k2, (50, 10)) * (50 ** -0.5),
+                "b": jnp.zeros((10,))},
+    }
+
+
+def mlp_apply(params, x):
+    """x: (B, 28, 28) or (B, 784) -> logits (B, 10)."""
+    x = x.reshape(x.shape[0], -1)
+    h = jax.nn.relu(x @ params["fc1"]["w"] + params["fc1"]["b"])
+    return h @ params["fc2"]["w"] + params["fc2"]["b"]
+
+
+# ---------------------------------------------------------------------------
+# Network 2 (see configs/cifar_cnn.py docstring for the reconstruction)
+# ---------------------------------------------------------------------------
+
+_CONVS = [  # (c_in, c_out, stride); 32 ->(pool)16 ->8 ->4 ->2 => flatten 2048
+    (3, 64, 1),
+    (64, 128, 2),
+    (128, 256, 2),
+    (256, 512, 2),
+]
+_FCS = [(2048, 128), (128, 256), (256, 512), (512, 1024), (1024, 10)]
+
+
+def cnn_init(key) -> tuple[dict, dict]:
+    """Returns (params, bn_state)."""
+    keys = jax.random.split(key, len(_CONVS) + len(_FCS))
+    params: dict = {}
+    state: dict = {}
+    for i, (ci, co, _s) in enumerate(_CONVS):
+        fan_in = ci * 9
+        params[f"conv{i}"] = {
+            "w": jax.random.normal(keys[i], (3, 3, ci, co)) * math.sqrt(2 / fan_in),
+            "b": jnp.zeros((co,)),
+            "bn_scale": jnp.ones((co,)),
+            "bn_bias": jnp.zeros((co,)),
+        }
+        state[f"conv{i}"] = {"mean": jnp.zeros((co,)), "var": jnp.ones((co,))}
+    for j, (fi, fo) in enumerate(_FCS):
+        params[f"fc{j}"] = {
+            "w": jax.random.normal(keys[len(_CONVS) + j], (fi, fo)) * math.sqrt(2 / fi),
+            "b": jnp.zeros((fo,)),
+        }
+    return params, state
+
+
+def _bn(x, p, s, train: bool, momentum=0.9):
+    if train:
+        mu = jnp.mean(x, axis=(0, 1, 2))
+        var = jnp.var(x, axis=(0, 1, 2))
+        new_s = {"mean": momentum * s["mean"] + (1 - momentum) * mu,
+                 "var": momentum * s["var"] + (1 - momentum) * var}
+    else:
+        mu, var = s["mean"], s["var"]
+        new_s = s
+    y = (x - mu) * jax.lax.rsqrt(var + 1e-5)
+    return y * p["bn_scale"] + p["bn_bias"], new_s
+
+
+def cnn_apply(params, state, x, train: bool = True):
+    """x: (B, 32, 32, 3) NHWC -> (logits (B,10), new_state)."""
+    new_state = {}
+    h = x
+    for i, (_ci, _co, stride) in enumerate(_CONVS):
+        p = params[f"conv{i}"]
+        h = jax.lax.conv_general_dilated(
+            h, p["w"], window_strides=(stride, stride), padding="SAME",
+            dimension_numbers=("NHWC", "HWIO", "NHWC"))
+        h = h + p["b"]
+        h, new_state[f"conv{i}"] = _bn(h, p, state[f"conv{i}"], train)
+        h = jax.nn.relu(h)
+        if i == 0:
+            h = jax.lax.reduce_window(
+                h, -jnp.inf, jax.lax.max, (1, 2, 2, 1), (1, 2, 2, 1), "VALID")
+    h = h.reshape(h.shape[0], -1)       # (B, 2*2*512) for 32x32 input... see below
+    for j in range(len(_FCS)):
+        p = params[f"fc{j}"]
+        h = h @ p["w"] + p["b"]
+        if j < len(_FCS) - 1:
+            h = jax.nn.relu(h)
+    return h, new_state
+
+
+def param_count(tree) -> int:
+    return sum(int(x.size) for x in jax.tree_util.tree_leaves(tree))

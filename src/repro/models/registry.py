@@ -1,0 +1,89 @@
+"""Model registry: uniform API over the zoo + ShapeDtypeStruct input specs
+for the dry-run (no allocation).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, InputShape
+from repro.models import transformer as T
+
+
+@dataclass(frozen=True)
+class ModelFns:
+    init: Callable
+    loss_fn: Callable            # (params, cfg, batch) -> (loss, aux)
+    prefill: Callable            # (params, cfg, batch) -> last logits
+    decode_step: Callable        # (params, cfg, inputs, cache, pos) -> (logits, cache)
+    init_cache: Callable         # (cfg, batch, max_len) -> cache
+
+
+def get_model(cfg: ArchConfig) -> ModelFns:
+    if cfg.family in ("mlp", "cnn"):
+        raise ValueError("paper nets use repro.models.paper_nets directly")
+    return ModelFns(T.init, T.loss_fn, T.prefill, T.decode_step, T.init_cache)
+
+
+# ---------------------------------------------------------------------------
+# input specs (ShapeDtypeStruct stand-ins; weak-type-correct, no allocation)
+# ---------------------------------------------------------------------------
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, jnp.dtype(dtype))
+
+
+def input_specs(cfg: ArchConfig, shape: InputShape) -> dict:
+    """Model inputs for a (train | prefill) step as ShapeDtypeStructs.
+
+    audio: stub conv frontend -> frame embeddings (B, seq/downsample, d) and
+    decoder tokens; vlm: stub ViT -> patch/token embeddings (B, seq, d).
+    """
+    B, S = shape.global_batch, shape.seq_len
+    dt = cfg.dtype
+    if cfg.family == "audio":
+        S_enc = S // cfg.frontend_downsample
+        Td = cfg.max_target_len
+        spec = {
+            "frames": _sds((B, S_enc, cfg.d_model), dt),
+            "tokens": _sds((B, Td), "int32"),
+        }
+        if shape.kind == "train":
+            spec["labels"] = _sds((B, Td), "int32")
+        return spec
+    if cfg.family == "vlm":
+        spec = {"embeds": _sds((B, S, cfg.d_model), dt)}
+        if shape.kind == "train":
+            spec["labels"] = _sds((B, S), "int32")
+        return spec
+    spec = {"tokens": _sds((B, S), "int32")}
+    if shape.kind == "train":
+        spec["labels"] = _sds((B, S), "int32")
+    return spec
+
+
+def decode_input_specs(cfg: ArchConfig, shape: InputShape) -> tuple[dict, Any]:
+    """(inputs, cache) ShapeDtypeStructs for a decode step."""
+    B, S = shape.global_batch, shape.seq_len
+    if cfg.family == "vlm":
+        inputs = {"embed": _sds((B, cfg.d_model), cfg.dtype)}
+    else:
+        inputs = {"token": _sds((B,), "int32")}
+    cache = jax.eval_shape(lambda: T.init_cache(cfg, B, S))
+    return inputs, cache
+
+
+def concrete_batch(cfg: ArchConfig, shape: InputShape, key) -> dict:
+    """Small-scale concrete batch matching input_specs (for smoke tests)."""
+    specs = input_specs(cfg, shape)
+    out = {}
+    for name, s in specs.items():
+        k, key = jax.random.split(key)
+        if s.dtype == jnp.int32:
+            out[name] = jax.random.randint(k, s.shape, 0, cfg.vocab_size)
+        else:
+            out[name] = jax.random.normal(k, s.shape, jnp.float32).astype(s.dtype)
+    return out

@@ -1,0 +1,27 @@
+"""Central lax.scan wrapper.
+
+XLA's cost analysis counts a while-loop body ONCE regardless of trip count,
+which would poison the roofline terms. The dry-run therefore compiles small
+PROBE variants (1 and 2 layer-units) with every scan UNROLLED — enabled via
+set_probe_unroll(True) — and extrapolates exact totals; the full-size
+compile (scanned) remains the feasibility/memory-analysis artifact.
+"""
+from __future__ import annotations
+
+import jax
+
+_PROBE_UNROLL = False
+
+
+def set_probe_unroll(flag: bool):
+    global _PROBE_UNROLL
+    _PROBE_UNROLL = bool(flag)
+
+
+def probe_unroll() -> bool:
+    return _PROBE_UNROLL
+
+
+def scan(body, init, xs, **kw):
+    return jax.lax.scan(body, init, xs,
+                        unroll=True if _PROBE_UNROLL else 1, **kw)

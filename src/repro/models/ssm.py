@@ -1,0 +1,180 @@
+"""Mamba2 / SSD (state-space duality) block [arXiv:2405.21060].
+
+Training/prefill uses the chunked SSD dual form (quadratic within a chunk,
+linear recurrence across chunks); decode is the O(1) recurrent update.
+ngroups=1 (B, C shared across heads), following the mamba2-780m config.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.scan_util import scan as _pscan
+
+from repro.dist.sharding import constraint
+from repro.models.layers import dense_init
+
+
+def ssm_params(key, cfg) -> dict:
+    d, di, ns, nh = cfg.d_model, cfg.d_inner, cfg.ssm_state, cfg.ssm_nheads
+    conv_dim = di + 2 * ns
+    dtype = jnp.dtype(cfg.dtype)
+    ks = jax.random.split(key, 4)
+    return {
+        "in_proj": dense_init(ks[0], d, 2 * di + 2 * ns + nh, dtype),
+        "conv_w": (jax.random.normal(ks[1], (cfg.ssm_conv, conv_dim), jnp.float32)
+                   * (cfg.ssm_conv ** -0.5)).astype(dtype),
+        "conv_b": jnp.zeros((conv_dim,), dtype),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, nh, dtype=jnp.float32)),
+        "D": jnp.ones((nh,), jnp.float32),
+        "dt_bias": jnp.zeros((nh,), jnp.float32),
+        "gate_norm": jnp.ones((di,), jnp.float32),
+        "out_proj": dense_init(ks[2], di, d, dtype),
+    }
+
+
+def _segsum(x: jnp.ndarray) -> jnp.ndarray:
+    """x: (..., l) -> lower-triangular pairwise sums (..., l, l)."""
+    l = x.shape[-1]
+    cs = jnp.cumsum(x, axis=-1)
+    seg = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((l, l), bool), k=0)
+    return jnp.where(mask, seg, -jnp.inf)
+
+
+def ssd_chunked(x, dtA, B, C, chunk: int, init_state=None):
+    """Chunked SSD scan.
+
+    x:   (b, L, h, p)  — already multiplied by dt
+    dtA: (b, L, h)     — dt * A (negative)
+    B,C: (b, L, n)     — shared across heads (ngroups=1)
+    Returns y: (b, L, h, p), final_state: (b, h, p, n)
+    """
+    b, L, h, p = x.shape
+    n = B.shape[-1]
+    pad = (-L) % chunk
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dtA = jnp.pad(dtA, ((0, 0), (0, pad), (0, 0)))
+        B = jnp.pad(B, ((0, 0), (0, pad), (0, 0)))
+        C = jnp.pad(C, ((0, 0), (0, pad), (0, 0)))
+    nc = (L + pad) // chunk
+
+    xc = x.reshape(b, nc, chunk, h, p)
+    Ac = dtA.reshape(b, nc, chunk, h).transpose(0, 3, 1, 2)   # (b,h,c,l)
+    Bc = B.reshape(b, nc, chunk, n)
+    Cc = C.reshape(b, nc, chunk, n)
+
+    A_cum = jnp.cumsum(Ac, axis=-1)                            # (b,h,c,l)
+    Lmat = jnp.exp(_segsum(Ac))                                # (b,h,c,l,l)
+
+    # intra-chunk (dual / attention-like) term
+    y_diag = jnp.einsum("bcln,bcsn,bhcls,bcshp->bclhp",
+                        Cc, Bc, Lmat.astype(x.dtype), xc,
+                        preferred_element_type=jnp.float32).astype(x.dtype)
+
+    # per-chunk final states
+    decay_states = jnp.exp(A_cum[..., -1:] - A_cum)            # (b,h,c,l)
+    states = jnp.einsum("bcln,bhcl,bclhp->bchpn",
+                        Bc, decay_states.astype(x.dtype), xc,
+                        preferred_element_type=jnp.float32)    # (b,c,h,p,n) f32
+
+    # inter-chunk recurrence: s_{c+1} = s_c * exp(sum dtA_c) + states_c
+    chunk_decay = jnp.exp(A_cum[..., -1])                      # (b,h,c)
+    if init_state is None:
+        init_state = jnp.zeros((b, h, p, n), jnp.float32)
+
+    def scan_fn(carry, inp):
+        st_in, dec, st_chunk = carry, inp[0], inp[1]
+        new = st_in * dec[..., None, None] + st_chunk
+        return new, st_in                                     # emit PRE-chunk state
+
+    dec_t = chunk_decay.transpose(2, 0, 1)                     # (c,b,h)
+    st_t = states.transpose(1, 0, 2, 3, 4)                     # (c,b,h,p,n)
+    final_state, prev_states = _pscan(scan_fn, init_state, (dec_t, st_t))
+    prev_states = prev_states.transpose(1, 0, 2, 3, 4)         # (b,c,h,p,n)
+
+    # inter-chunk contribution
+    state_decay = jnp.exp(A_cum)                               # (b,h,c,l)
+    y_off = jnp.einsum("bcln,bchpn,bhcl->bclhp",
+                       Cc, prev_states.astype(x.dtype),
+                       state_decay.astype(x.dtype),
+                       preferred_element_type=jnp.float32).astype(x.dtype)
+
+    y = (y_diag + y_off).reshape(b, nc * chunk, h, p)
+    return y[:, :L], final_state
+
+
+def _causal_conv(xBC, w, bias, state=None):
+    """Depthwise causal conv, width K. xBC: (b, L, ch); w: (K, ch).
+    state: (b, K-1, ch) left context (decode) or None (zero left pad)."""
+    K = w.shape[0]
+    if state is None:
+        state = jnp.zeros((xBC.shape[0], K - 1, xBC.shape[-1]), xBC.dtype)
+    xp = jnp.concatenate([state, xBC], axis=1)
+    out = sum(xp[:, i:i + xBC.shape[1]] * w[i] for i in range(K))
+    new_state = xp[:, -(K - 1):]
+    return out + bias, new_state
+
+
+def apply_ssm(p: dict, cfg, x: jnp.ndarray, *, conv_state=None, ssm_state=None,
+              return_state: bool = False):
+    """Full mamba2 mixer on a sequence. x: (b, L, d)."""
+    b, L, d = x.shape
+    di, ns, nh, hp = cfg.d_inner, cfg.ssm_state, cfg.ssm_nheads, cfg.ssm_headdim
+
+    zxbcdt = x @ p["in_proj"]
+    z, xBC, dt = jnp.split(zxbcdt, [di, 2 * di + 2 * ns], axis=-1)
+    xBC, new_conv = _causal_conv(xBC, p["conv_w"], p["conv_b"], conv_state)
+    xBC = jax.nn.silu(xBC)
+    xs, B, C = jnp.split(xBC, [di, di + ns], axis=-1)
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])   # (b,L,nh)
+    A = -jnp.exp(p["A_log"])                                       # (nh,)
+    xh = xs.reshape(b, L, nh, hp)
+    xh = constraint(xh, ("batch", None, "ssm_heads", None))
+    x_dt = (xh.astype(jnp.float32) * dt[..., None]).astype(x.dtype)
+    dtA = dt * A                                                   # (b,L,nh)
+
+    y, final_state = ssd_chunked(x_dt, dtA, B, C, cfg.ssm_chunk,
+                                 init_state=ssm_state)
+    y = y + xh * p["D"][None, None, :, None].astype(x.dtype)
+    y = y.reshape(b, L, di)
+
+    # gated RMSNorm (mamba2)
+    y = y * jax.nn.silu(z)
+    yf = y.astype(jnp.float32)
+    y = (yf * jax.lax.rsqrt(jnp.mean(yf ** 2, -1, keepdims=True) + 1e-5)
+         * p["gate_norm"]).astype(x.dtype)
+    out = y @ p["out_proj"]
+    if return_state:
+        return out, (new_conv, final_state)
+    return out
+
+
+def ssm_decode_step(p: dict, cfg, x: jnp.ndarray, conv_state, ssm_state):
+    """One-token recurrent update. x: (b, 1, d). States as in apply_ssm."""
+    b = x.shape[0]
+    di, ns, nh, hp = cfg.d_inner, cfg.ssm_state, cfg.ssm_nheads, cfg.ssm_headdim
+
+    zxbcdt = x @ p["in_proj"]
+    z, xBC, dt = jnp.split(zxbcdt, [di, 2 * di + 2 * ns], axis=-1)
+    xBC, new_conv = _causal_conv(xBC, p["conv_w"], p["conv_b"], conv_state)
+    xBC = jax.nn.silu(xBC)
+    xs, B, C = jnp.split(xBC, [di, di + ns], axis=-1)      # (b,1,*)
+
+    dt = jax.nn.softplus(dt[:, 0].astype(jnp.float32) + p["dt_bias"])  # (b,nh)
+    A = -jnp.exp(p["A_log"])
+    decay = jnp.exp(dt * A)                                 # (b,nh)
+    xh = xs[:, 0].reshape(b, nh, hp).astype(jnp.float32)
+    dBx = jnp.einsum("bn,bhp,bh->bhpn", B[:, 0].astype(jnp.float32),
+                     xh, dt)                                # (b,nh,hp,ns)
+    new_state = ssm_state * decay[..., None, None] + dBx
+    y = jnp.einsum("bhpn,bn->bhp", new_state,
+                   C[:, 0].astype(jnp.float32))             # (b,nh,hp)
+    y = y + xh * p["D"][None, :, None]
+    y = y.reshape(b, di).astype(x.dtype) * jax.nn.silu(z[:, 0])
+    yf = y.astype(jnp.float32)
+    y = (yf * jax.lax.rsqrt(jnp.mean(yf ** 2, -1, keepdims=True) + 1e-5)
+         * p["gate_norm"]).astype(x.dtype)
+    return (y @ p["out_proj"])[:, None, :], (new_conv, new_state)

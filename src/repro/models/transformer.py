@@ -1,0 +1,534 @@
+"""The model zoo: a configurable transformer family covering every assigned
+architecture, with scan-over-layers (+ optional remat), KV/state caches, and
+memory-safe chunked cross-entropy (logits are never materialized for the
+full sequence).
+
+API (see registry.py):
+  init(cfg, key)                          -> params
+  loss_fn(params, cfg, batch)             -> (loss, aux)       # training
+  prefill(params, cfg, inputs)            -> last-token logits # inference
+  init_cache(cfg, batch, max_len)         -> cache pytree
+  decode_step(params, cfg, inputs, cache, pos) -> (logits, new_cache)
+"""
+from __future__ import annotations
+
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.scan_util import scan as _pscan
+
+from repro.dist.sharding import constraint
+from repro.models import layers as L
+from repro.models import mla as MLA
+from repro.models import moe as MOE
+from repro.models import ssm as SSM
+
+
+# ---------------------------------------------------------------------------
+# parameter init
+# ---------------------------------------------------------------------------
+
+def _block_params(key, cfg) -> dict:
+    """One decoder block for dense/moe/vlm families."""
+    ks = jax.random.split(key, 4)
+    p = {"ln1": L.norm_params(cfg), "ln2": L.norm_params(cfg)}
+    if cfg.use_mla:
+        p["attn"] = MLA.mla_params(ks[0], cfg)
+    else:
+        p["attn"] = L.attention_params(ks[0], cfg)
+    if cfg.is_moe:
+        p["moe"] = MOE.moe_params(ks[1], cfg)
+    else:
+        p["mlp"] = L.mlp_params(ks[1], cfg)
+    return p
+
+
+def _ssm_block_params(key, cfg) -> dict:
+    return {"ln": L.norm_params(cfg), "ssm": SSM.ssm_params(key, cfg)}
+
+
+def _enc_block_params(key, cfg) -> dict:
+    ks = jax.random.split(key, 2)
+    return {
+        "ln1": L.norm_params(cfg), "attn": L.attention_params(ks[0], cfg),
+        "ln2": L.norm_params(cfg), "mlp": L.mlp_params(ks[1], cfg),
+    }
+
+
+def _dec_block_params(key, cfg) -> dict:
+    ks = jax.random.split(key, 3)
+    return {
+        "ln1": L.norm_params(cfg), "self_attn": L.attention_params(ks[0], cfg),
+        "ln2": L.norm_params(cfg), "cross_attn": L.attention_params(ks[1], cfg),
+        "ln3": L.norm_params(cfg), "mlp": L.mlp_params(ks[2], cfg),
+    }
+
+
+def _stack(init_fn, key, n, cfg):
+    return jax.vmap(lambda k: init_fn(k, cfg))(jax.random.split(key, n))
+
+
+def init(cfg, key) -> dict:
+    dtype = jnp.dtype(cfg.dtype)
+    keys = jax.random.split(key, 8)
+    params: dict[str, Any] = {
+        "embed": {"w": L.embed_init(keys[0], cfg.padded_vocab, cfg.d_model, dtype)},
+        "norm_f": L.norm_params(cfg),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = {"w": L.dense_init(keys[5], cfg.d_model,
+                                               cfg.padded_vocab, dtype)}
+    fam = cfg.family
+    if fam in ("dense", "moe", "vlm"):
+        params["layers"] = _stack(_block_params, keys[1], cfg.n_layers, cfg)
+    elif fam == "ssm":
+        params["layers"] = _stack(_ssm_block_params, keys[1], cfg.n_layers, cfg)
+    elif fam == "hybrid":
+        params["layers"] = _stack(_ssm_block_params, keys[1], cfg.n_layers, cfg)
+        params["shared"] = _block_params(keys[2], cfg.replace(n_experts=0))
+    elif fam == "audio":
+        params["enc_layers"] = _stack(_enc_block_params, keys[1],
+                                      cfg.encoder_layers, cfg)
+        params["layers"] = _stack(_dec_block_params, keys[2], cfg.n_layers, cfg)
+        params["enc_norm"] = L.norm_params(cfg)
+        params["dec_pos"] = {"w": (jax.random.normal(
+            keys[3], (cfg.max_target_len, cfg.d_model), jnp.float32) * 0.02
+        ).astype(dtype)}
+    else:
+        raise ValueError(f"unknown family {fam}")
+    return params
+
+
+# ---------------------------------------------------------------------------
+# blocks (sequence path)
+# ---------------------------------------------------------------------------
+
+def _attn_seq(p, cfg, x, positions, *, causal=True, kv_chunk=1024):
+    if cfg.use_mla:
+        out, _ = MLA.mla_prefill(p, cfg, x, positions, kv_chunk=kv_chunk)
+        return out
+    B, S, _ = x.shape
+    q, k, v = L.qkv(p, cfg, x)
+    q = L.rope(q, positions, cfg.rope_theta)
+    k = L.rope(k, positions, cfg.rope_theta)
+    if _seq_parallel_attn(cfg):
+        # heads don't divide the model axis: SEQUENCE-parallel attention.
+        # Without this, GSPMD splits head_dim across the leftover axis and
+        # psums fp32 score matrices every kv chunk (§Perf granite iter 5).
+        q = constraint(q, ("batch", "seq_model", None, None))
+        k = constraint(k, ("batch", None, None, None))
+        v = constraint(v, ("batch", None, None, None))
+    o = L.flash_attention(q, k, v, causal=causal, window=cfg.sliding_window,
+                          kv_chunk=kv_chunk)
+    return o.reshape(B, S, cfg.n_heads * cfg.head_dim_) @ p["wo"]
+
+
+def _seq_parallel_attn(cfg) -> bool:
+    from repro.dist.sharding import active_mesh
+    if not cfg.seq_parallel_attn:
+        return False
+    mesh = active_mesh()
+    if mesh is None or cfg.n_heads == 0:
+        return False
+    nm = mesh.shape.get("model", 1)
+    return nm > 1 and cfg.n_heads % nm != 0
+
+
+def _dense_block_seq(p, cfg, x, positions):
+    h = L.apply_norm(p["ln1"], cfg, x)
+    x = x + _attn_seq(p["attn"], cfg, h, positions)
+    x = constraint(x, ("batch", "seq", "embed"))
+    h = L.apply_norm(p["ln2"], cfg, x)
+    if cfg.is_moe:
+        y, aux = MOE.apply_moe(p["moe"], cfg, h)
+    else:
+        y = L.apply_mlp(p["mlp"], cfg, h)
+        aux = {"lb_loss": jnp.float32(0.0), "drop_frac": jnp.float32(0.0)}
+    return x + y, aux
+
+
+def _ssm_block_seq(p, cfg, x, state=None):
+    h = L.apply_norm(p["ln"], cfg, x)
+    if state is None:
+        return x + SSM.apply_ssm(p["ssm"], cfg, h), None
+    y, new_state = SSM.apply_ssm(p["ssm"], cfg, h, conv_state=state[0],
+                                 ssm_state=state[1], return_state=True)
+    return x + y, new_state
+
+
+# ---------------------------------------------------------------------------
+# backbone forward (returns final hidden states)
+# ---------------------------------------------------------------------------
+
+def _maybe_remat(fn, cfg):
+    if not cfg.remat:
+        return fn
+    if cfg.remat_policy == "save_dots":
+        return jax.checkpoint(
+            fn, policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+    return jax.checkpoint(fn)
+
+
+def _backbone(params, cfg, x, positions):
+    """Decoder-only stacks. x: (B, S, d). Returns (hidden, aux)."""
+    fam = cfg.family
+    if fam in ("dense", "moe", "vlm"):
+        def body(carry, p):
+            h, lb = carry
+            h, aux = _dense_block_seq(p, cfg, h, positions)
+            return (h, lb + aux["lb_loss"]), aux["drop_frac"]
+        (x, lb), drops = _pscan(_maybe_remat(body, cfg),
+                                      (x, jnp.float32(0.0)), params["layers"])
+        aux = {"lb_loss": lb / cfg.n_layers,
+               "drop_frac": jnp.mean(drops) if cfg.is_moe else jnp.float32(0.0)}
+        return x, aux
+    if fam == "ssm":
+        def body(h, p):
+            # saved (remat) residuals live SEQUENCE-SHARDED over the model
+            # axis — 16x less checkpoint memory; the SSD body re-gathers
+            # (§Perf mamba2 iteration b)
+            h = constraint(h, ("batch", "seq_model", "embed"))
+            h, _ = _ssm_block_seq(p, cfg, h)
+            return h, None
+        x, _ = _pscan(_maybe_remat(body, cfg), x, params["layers"])
+        return x, {"lb_loss": jnp.float32(0.0), "drop_frac": jnp.float32(0.0)}
+    if fam == "hybrid":
+        G = cfg.attn_every
+        n_groups = cfg.n_layers // G
+        stacked = jax.tree_util.tree_map(
+            lambda a: a.reshape((n_groups, G) + a.shape[1:]), params["layers"])
+        shared = params["shared"]
+
+        def group_body(h, grp):
+            # seq-sharded remat checkpoints (see ssm path / §Perf mamba2 b)
+            h = constraint(h, ("batch", "seq_model", "embed"))
+
+            def inner(hh, p):
+                hh, _ = _ssm_block_seq(p, cfg, hh)
+                return hh, None
+            h, _ = _pscan(inner, h, grp)
+            h, _ = _dense_block_seq(shared, cfg, h, positions)
+            return h, None
+        x, _ = _pscan(_maybe_remat(group_body, cfg), x, stacked)
+        return x, {"lb_loss": jnp.float32(0.0), "drop_frac": jnp.float32(0.0)}
+    raise ValueError(fam)
+
+
+def _encoder(params, cfg, frames):
+    """Whisper encoder over stub frame embeddings (B, S_enc, d)."""
+    B, S, d = frames.shape
+    pos = _sinusoid(S, d).astype(frames.dtype)
+    x = frames + pos[None]
+    positions = jnp.arange(S)
+
+    def body(h, p):
+        a = L.apply_norm(p["ln1"], cfg, h)
+        h = h + _attn_seq(p["attn"], cfg, a, positions, causal=False)
+        a = L.apply_norm(p["ln2"], cfg, h)
+        h = h + L.apply_mlp(p["mlp"], cfg, a)
+        return h, None
+    x, _ = _pscan(_maybe_remat(body, cfg), x, params["enc_layers"])
+    return L.apply_norm(params["enc_norm"], cfg, x)
+
+
+def _cross_attn_seq(p, cfg, x, enc):
+    B, S, _ = x.shape
+    hd = cfg.head_dim_
+    q = (x @ p["wq"]).reshape(B, S, cfg.n_heads, hd)
+    k = (enc @ p["wk"]).reshape(B, enc.shape[1], cfg.n_kv_heads, hd)
+    v = (enc @ p["wv"]).reshape(B, enc.shape[1], cfg.n_kv_heads, hd)
+    o = L.flash_attention(q, k, v, causal=False)
+    return o.reshape(B, S, cfg.n_heads * hd) @ p["wo"]
+
+
+def _decoder_encdec(params, cfg, tokens, enc):
+    B, S = tokens.shape
+    x = params["embed"]["w"][tokens] + params["dec_pos"]["w"][None, :S]
+    positions = jnp.arange(S)
+
+    def body(h, p):
+        a = L.apply_norm(p["ln1"], cfg, h)
+        h = h + _attn_seq(p["self_attn"], cfg, a, positions, causal=True)
+        a = L.apply_norm(p["ln2"], cfg, h)
+        h = h + _cross_attn_seq(p["cross_attn"], cfg, a, enc)
+        a = L.apply_norm(p["ln3"], cfg, h)
+        h = h + L.apply_mlp(p["mlp"], cfg, a)
+        return h, None
+    x, _ = _pscan(_maybe_remat(body, cfg), x, params["layers"])
+    return L.apply_norm(params["norm_f"], cfg, x)
+
+
+def _sinusoid(S, d):
+    pos = jnp.arange(S, dtype=jnp.float32)[:, None]
+    dim = jnp.arange(d // 2, dtype=jnp.float32)[None, :]
+    ang = pos / jnp.power(10000.0, 2 * dim / d)
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# losses / logits
+# ---------------------------------------------------------------------------
+
+def _unembed_w(params, cfg):
+    if cfg.tie_embeddings:
+        return params["embed"]["w"].T          # (d, Vp)
+    return params["lm_head"]["w"]
+
+
+def chunked_xent(x, w_unembed, labels, vocab_size, chunk=256):
+    """Cross entropy without materializing (B, S, V) logits.
+
+    x: (B, S, d); labels: (B, S) int32 (< vocab_size); w: (d, Vp).
+    """
+    B, S, d = x.shape
+    Vp = w_unembed.shape[1]
+    chunk = min(chunk, S)
+    pad = (-S) % chunk
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0)))
+        labels = jnp.pad(labels, ((0, 0), (0, pad)))
+    nc = (S + pad) // chunk
+    xc = x.reshape(B, nc, chunk, d).transpose(1, 0, 2, 3)
+    lc = labels.reshape(B, nc, chunk).transpose(1, 0, 2)
+    valid = (jnp.arange(S + pad) < S).reshape(nc, chunk)
+    vmask = (jnp.arange(Vp) < vocab_size)
+
+    def body(tot, inp):
+        xi, li, vi = inp                               # (B,c,d), (B,c), (c,)
+        logits = jnp.einsum("bcd,dv->bcv", xi, w_unembed,
+                            preferred_element_type=jnp.float32)
+        logits = jnp.where(vmask[None, None], logits, -1e30)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, li[..., None], axis=-1)[..., 0]
+        return tot + jnp.sum((lse - gold) * vi[None]), None
+
+    tot, _ = _pscan(body, jnp.float32(0.0),
+                    (xc, lc, valid.astype(jnp.float32)))
+    return tot / (B * S)
+
+
+def loss_fn(params, cfg, batch) -> tuple[jnp.ndarray, dict]:
+    """batch: {"tokens"| "embeds", "labels", [audio: "frames","tokens"]}."""
+    if cfg.family == "audio":
+        enc = _encoder(params, cfg, batch["frames"])
+        x = _decoder_encdec(params, cfg, batch["tokens"], enc)
+        loss = chunked_xent(x, _unembed_w(params, cfg), batch["labels"],
+                            cfg.vocab_size)
+        return loss, {"lb_loss": jnp.float32(0.0)}
+    if cfg.family == "vlm":
+        x = batch["embeds"]
+    else:
+        x = params["embed"]["w"][batch["tokens"]]
+    x = constraint(x, ("batch", "seq", "embed"))
+    positions = jnp.arange(x.shape[1])
+    h, aux = _backbone(params, cfg, x, positions)
+    h = L.apply_norm(params["norm_f"], cfg, h)
+    loss = chunked_xent(h, _unembed_w(params, cfg), batch["labels"],
+                        cfg.vocab_size)
+    if cfg.is_moe:
+        loss = loss + 0.01 * aux["lb_loss"]
+    return loss, aux
+
+
+def prefill(params, cfg, batch) -> jnp.ndarray:
+    """Forward pass returning last-token logits (B, Vp)."""
+    if cfg.family == "audio":
+        enc = _encoder(params, cfg, batch["frames"])
+        h = _decoder_encdec(params, cfg, batch["tokens"], enc)
+    else:
+        x = batch["embeds"] if cfg.family == "vlm" \
+            else params["embed"]["w"][batch["tokens"]]
+        x = constraint(x, ("batch", "seq_model", "embed"))
+        h, _ = _backbone(params, cfg, x, jnp.arange(x.shape[1]))
+        h = L.apply_norm(params["norm_f"], cfg, h)
+    logits = h[:, -1].astype(jnp.float32) @ _unembed_w(params, cfg).astype(jnp.float32)
+    return logits
+
+
+# ---------------------------------------------------------------------------
+# decode (single token with caches)
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg, batch: int, max_len: int) -> dict:
+    """Abstract-friendly cache pytree (concrete zeros)."""
+    dtype = jnp.dtype(cfg.dtype)
+    S = min(max_len, cfg.sliding_window) if cfg.sliding_window else max_len
+    fam = cfg.family
+
+    def kv(b, s):
+        return {
+            "k": jnp.zeros((cfg.n_layers, b, s, cfg.n_kv_heads, cfg.head_dim_), dtype),
+            "v": jnp.zeros((cfg.n_layers, b, s, cfg.n_kv_heads, cfg.head_dim_), dtype),
+        }
+
+    if fam in ("dense", "vlm") or (fam == "moe" and not cfg.use_mla):
+        return kv(batch, S)
+    if fam == "moe" and cfg.use_mla:
+        return {
+            "c_kv": jnp.zeros((cfg.n_layers, batch, max_len, cfg.kv_lora_rank), dtype),
+            "k_rope": jnp.zeros((cfg.n_layers, batch, max_len, MLA.ROPE_DIM), dtype),
+        }
+    if fam == "ssm":
+        return {
+            "conv": jnp.zeros((cfg.n_layers, batch, cfg.ssm_conv - 1,
+                               cfg.d_inner + 2 * cfg.ssm_state), dtype),
+            "state": jnp.zeros((cfg.n_layers, batch, cfg.ssm_nheads,
+                                cfg.ssm_headdim, cfg.ssm_state), jnp.float32),
+        }
+    if fam == "hybrid":
+        n_apps = cfg.n_layers // cfg.attn_every
+        return {
+            "conv": jnp.zeros((cfg.n_layers, batch, cfg.ssm_conv - 1,
+                               cfg.d_inner + 2 * cfg.ssm_state), dtype),
+            "state": jnp.zeros((cfg.n_layers, batch, cfg.ssm_nheads,
+                                cfg.ssm_headdim, cfg.ssm_state), jnp.float32),
+            "k": jnp.zeros((n_apps, batch, S, cfg.n_kv_heads, cfg.head_dim_), dtype),
+            "v": jnp.zeros((n_apps, batch, S, cfg.n_kv_heads, cfg.head_dim_), dtype),
+        }
+    if fam == "audio":
+        enc_len = max_len // cfg.frontend_downsample
+        return {
+            "k": jnp.zeros((cfg.n_layers, batch, cfg.max_target_len,
+                            cfg.n_kv_heads, cfg.head_dim_), dtype),
+            "v": jnp.zeros((cfg.n_layers, batch, cfg.max_target_len,
+                            cfg.n_kv_heads, cfg.head_dim_), dtype),
+            "cross_k": jnp.zeros((cfg.n_layers, batch, enc_len,
+                                  cfg.n_kv_heads, cfg.head_dim_), dtype),
+            "cross_v": jnp.zeros((cfg.n_layers, batch, enc_len,
+                                  cfg.n_kv_heads, cfg.head_dim_), dtype),
+        }
+    raise ValueError(fam)
+
+
+def _attn_decode(p, cfg, x, k_cache, v_cache, pos, cache_len):
+    """x: (B,1,d). Updates ring-buffer kv cache at slot pos % S_cache."""
+    B = x.shape[0]
+    hd = cfg.head_dim_
+    S_cache = k_cache.shape[1]
+    q, k, v = L.qkv(p, cfg, x)
+    posv = jnp.full((B, 1), pos)
+    q = L.rope(q, posv, cfg.rope_theta)
+    k = L.rope(k, posv, cfg.rope_theta)
+    slot = pos % S_cache if cfg.sliding_window else pos
+    k_cache = jax.lax.dynamic_update_slice_in_dim(k_cache, k, slot, axis=1)
+    v_cache = jax.lax.dynamic_update_slice_in_dim(v_cache, v, slot, axis=1)
+    o = L.decode_attention(q[:, 0], k_cache, v_cache, cache_len)
+    return o.reshape(B, 1, cfg.n_heads * hd) @ p["wo"], k_cache, v_cache
+
+
+def decode_step(params, cfg, inputs, cache, pos):
+    """One decode step. inputs: {"token": (B,) int32} (or "embed" for vlm).
+    pos: scalar int (current position). Returns (logits, new_cache)."""
+    fam = cfg.family
+    B = (inputs["token"].shape[0] if "token" in inputs
+         else inputs["embed"].shape[0])
+    if "embed" in inputs:
+        x = inputs["embed"][:, None, :]
+    else:
+        x = params["embed"]["w"][inputs["token"]][:, None, :]
+
+    if fam in ("dense", "vlm", "moe"):
+        if cfg.use_mla:
+            def body(h, pc):
+                p, c = pc
+                a = L.apply_norm(p["ln1"], cfg, h)
+                o, new_c = MLA.mla_decode(p["attn"], cfg, a, c, pos)
+                h = h + o
+                a = L.apply_norm(p["ln2"], cfg, h)
+                y, _ = MOE.apply_moe(p["moe"], cfg, a) if cfg.is_moe \
+                    else (L.apply_mlp(p["mlp"], cfg, a), None)
+                return h + y, new_c
+            layer_caches = {"c_kv": cache["c_kv"], "k_rope": cache["k_rope"]}
+            x, new_caches = _pscan(
+                body, x, (params["layers"], layer_caches))
+            new_cache = new_caches
+        else:
+            S_cache = cache["k"].shape[2]
+            cache_len = jnp.minimum(pos + 1, S_cache)
+
+            def body(h, pc):
+                p, kc, vc = pc
+                a = L.apply_norm(p["ln1"], cfg, h)
+                o, kc, vc = _attn_decode(p["attn"], cfg, a, kc, vc, pos, cache_len)
+                h = h + o
+                a = L.apply_norm(p["ln2"], cfg, h)
+                y = (MOE.apply_moe(p["moe"], cfg, a)[0] if cfg.is_moe
+                     else L.apply_mlp(p["mlp"], cfg, a))
+                return h + y, (kc, vc)
+            x, (ks, vs) = _pscan(body, x, (params["layers"],
+                                                 cache["k"], cache["v"]))
+            new_cache = {"k": ks, "v": vs}
+    elif fam == "ssm":
+        def body(h, pc):
+            p, conv, st = pc
+            a = L.apply_norm(p["ln"], cfg, h)
+            y, (conv, st) = SSM.ssm_decode_step(p["ssm"], cfg, a, conv, st)
+            return h + y, (conv, st)
+        x, (convs, sts) = _pscan(body, x, (params["layers"],
+                                                 cache["conv"], cache["state"]))
+        new_cache = {"conv": convs, "state": sts}
+    elif fam == "hybrid":
+        G = cfg.attn_every
+        n_groups = cfg.n_layers // G
+        stacked = jax.tree_util.tree_map(
+            lambda a: a.reshape((n_groups, G) + a.shape[1:]), params["layers"])
+        conv_g = cache["conv"].reshape((n_groups, G) + cache["conv"].shape[1:])
+        st_g = cache["state"].reshape((n_groups, G) + cache["state"].shape[1:])
+        shared = params["shared"]
+        S_cache = cache["k"].shape[2]
+        cache_len = jnp.minimum(pos + 1, S_cache)
+
+        def group_body(h, inp):
+            grp, conv, st, kc, vc = inp
+
+            def inner(hh, pc):
+                p, cv, s = pc
+                a = L.apply_norm(p["ln"], cfg, hh)
+                y, (cv, s) = SSM.ssm_decode_step(p["ssm"], cfg, a, cv, s)
+                return hh + y, (cv, s)
+            h, (conv, st) = _pscan(inner, h, (grp, conv, st))
+            a = L.apply_norm(shared["ln1"], cfg, h)
+            o, kc, vc = _attn_decode(shared["attn"], cfg, a, kc, vc, pos, cache_len)
+            h = h + o
+            a = L.apply_norm(shared["ln2"], cfg, h)
+            h = h + L.apply_mlp(shared["mlp"], cfg, a)
+            return h, (conv, st, kc, vc)
+        x, (convs, sts, ks, vs) = _pscan(
+            group_body, x, (stacked, conv_g, st_g, cache["k"], cache["v"]))
+        new_cache = {
+            "conv": convs.reshape(cache["conv"].shape),
+            "state": sts.reshape(cache["state"].shape),
+            "k": ks, "v": vs,
+        }
+    elif fam == "audio":
+        cache_len = jnp.minimum(pos + 1, cfg.max_target_len)
+        x = x + params["dec_pos"]["w"][pos][None, None, :]
+
+        def body(h, pc):
+            p, kc, vc, ck, cv = pc
+            a = L.apply_norm(p["ln1"], cfg, h)
+            o, kc, vc = _attn_decode(p["self_attn"], cfg, a, kc, vc,
+                                     jnp.minimum(pos, cfg.max_target_len - 1),
+                                     cache_len)
+            h = h + o
+            a = L.apply_norm(p["ln2"], cfg, h)
+            q = (a @ p["cross_attn"]["wq"]).reshape(
+                B, 1, cfg.n_heads, cfg.head_dim_)
+            o = L.decode_attention(q[:, 0], ck, cv, ck.shape[1])
+            h = h + o.reshape(B, 1, cfg.n_heads * cfg.head_dim_) @ p["cross_attn"]["wo"]
+            a = L.apply_norm(p["ln3"], cfg, h)
+            h = h + L.apply_mlp(p["mlp"], cfg, a)
+            return h, (kc, vc)
+        x, (ks, vs) = _pscan(
+            body, x, (params["layers"], cache["k"], cache["v"],
+                      cache["cross_k"], cache["cross_v"]))
+        new_cache = dict(cache, k=ks, v=vs)
+    else:
+        raise ValueError(fam)
+
+    x = L.apply_norm(params["norm_f"], cfg, x)
+    logits = x[:, 0].astype(jnp.float32) @ _unembed_w(params, cfg).astype(jnp.float32)
+    return logits, new_cache

@@ -1,0 +1,4 @@
+from repro.optim.optimizers import (  # noqa: F401
+    adam, sgd, OptState, apply_updates, clip_by_global_norm, cosine_schedule,
+)
+from repro.optim.error_feedback import ef_init, ef_compensate, ef_update  # noqa: F401

@@ -1,0 +1,24 @@
+"""Error-feedback memory for sparsified SGD [Stich et al. 2018].
+
+Beyond-paper add-on: the paper sends raw sparse gradients; with EF the
+un-sent residual is accumulated locally and added to the next round's
+gradient, turning any compression operator into an unbiased-in-the-limit
+scheme. Exposed as a flag in the FL simulation (ablation in benchmarks).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def ef_init(params):
+    return jax.tree_util.tree_map(lambda x: x * 0.0, params)
+
+
+def ef_compensate(memory, grads):
+    """grad' = grad + memory."""
+    return jax.tree_util.tree_map(lambda m, g: g + m, memory, grads)
+
+
+def ef_update(memory, compensated, sent):
+    """memory' = compensated - actually_sent."""
+    return jax.tree_util.tree_map(lambda c, s: c - s, compensated, sent)

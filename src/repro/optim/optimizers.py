@@ -1,0 +1,114 @@
+"""Minimal pytree optimizers (optax is not available offline).
+
+API mirrors optax: ``opt = adam(lr); state = opt.init(params);
+updates, state = opt.update(grads, state, params); params = apply(params,
+updates)`` — updates are NEGATED deltas already (add them).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+class OptState(NamedTuple):
+    step: jnp.ndarray
+    mu: Any            # first moment (or momentum)
+    nu: Any            # second moment (adam only; zeros tree for sgd)
+
+
+@dataclass(frozen=True)
+class Optimizer:
+    init: Callable
+    update: Callable   # (grads, state, params) -> (updates, new_state)
+
+
+def _zeros_like_f32(tree):
+    return jax.tree_util.tree_map(
+        lambda x: jnp.zeros(x.shape, jnp.float32), tree)
+
+
+def adam(lr, b1: float = 0.9, b2: float = 0.999, eps: float = 1e-8,
+         weight_decay: float = 0.0) -> Optimizer:
+    """lr: float or schedule fn(step)->float. fp32 moments (mixed precision:
+    params may be bf16; updates returned in param dtype)."""
+
+    def init(params):
+        return OptState(jnp.zeros((), jnp.int32),
+                        _zeros_like_f32(params), _zeros_like_f32(params))
+
+    def update(grads, state, params=None):
+        step = state.step + 1
+        lr_t = lr(step) if callable(lr) else lr
+        b1t = 1 - b1 ** step.astype(jnp.float32)
+        b2t = 1 - b2 ** step.astype(jnp.float32)
+
+        def upd(g, m, v, p):
+            gf = g.astype(jnp.float32)
+            m2 = b1 * m + (1 - b1) * gf
+            v2 = b2 * v + (1 - b2) * gf * gf
+            u = -lr_t * (m2 / b1t) / (jnp.sqrt(v2 / b2t) + eps)
+            if weight_decay and p is not None:
+                u = u - lr_t * weight_decay * p.astype(jnp.float32)
+            return u, m2, v2
+
+        flat = jax.tree_util.tree_map(
+            upd, grads, state.mu, state.nu,
+            params if params is not None else grads)
+        updates = jax.tree_util.tree_map(lambda t: t[0], flat,
+                                         is_leaf=lambda x: isinstance(x, tuple))
+        mu = jax.tree_util.tree_map(lambda t: t[1], flat,
+                                    is_leaf=lambda x: isinstance(x, tuple))
+        nu = jax.tree_util.tree_map(lambda t: t[2], flat,
+                                    is_leaf=lambda x: isinstance(x, tuple))
+        return updates, OptState(step, mu, nu)
+
+    return Optimizer(init, update)
+
+
+def sgd(lr, momentum: float = 0.0) -> Optimizer:
+    def init(params):
+        return OptState(jnp.zeros((), jnp.int32),
+                        _zeros_like_f32(params), jnp.zeros(()))
+
+    def update(grads, state, params=None):
+        step = state.step + 1
+        lr_t = lr(step) if callable(lr) else lr
+
+        def upd(g, m):
+            gf = g.astype(jnp.float32)
+            m2 = momentum * m + gf
+            return -lr_t * m2, m2
+
+        flat = jax.tree_util.tree_map(upd, grads, state.mu)
+        updates = jax.tree_util.tree_map(lambda t: t[0], flat,
+                                         is_leaf=lambda x: isinstance(x, tuple))
+        mu = jax.tree_util.tree_map(lambda t: t[1], flat,
+                                    is_leaf=lambda x: isinstance(x, tuple))
+        return updates, OptState(step, mu, state.nu)
+
+    return Optimizer(init, update)
+
+
+def apply_updates(params, updates):
+    return jax.tree_util.tree_map(
+        lambda p, u: (p.astype(jnp.float32) + u).astype(p.dtype), params, updates)
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    leaves = jax.tree_util.tree_leaves(grads)
+    gn = jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32))) for l in leaves))
+    scale = jnp.minimum(1.0, max_norm / (gn + 1e-9))
+    return jax.tree_util.tree_map(lambda g: g * scale, grads), gn
+
+
+def cosine_schedule(peak: float, warmup: int, total: int):
+    def f(step):
+        s = step.astype(jnp.float32) if hasattr(step, "astype") else float(step)
+        warm = peak * s / max(warmup, 1)
+        frac = jnp.clip((s - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        cos = peak * 0.5 * (1 + jnp.cos(jnp.pi * frac))
+        return jnp.where(s < warmup, warm, cos)
+    return f

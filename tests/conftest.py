@@ -1,0 +1,7 @@
+import os
+import sys
+
+# tests run on the single real CPU device (the 512-device override is
+# dry-run only, per the assignment)
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))

@@ -1,0 +1,48 @@
+"""AgeState: eq (2) bookkeeping, cluster merge/reset rules."""
+import numpy as np
+
+from repro.core.age import AgeState
+
+
+def test_record_request_resets_and_ages():
+    st = AgeState(d=6, n_clients=2)
+    st.record_request(0, np.array([1, 3]))
+    np.testing.assert_array_equal(st.age_of(0), [1, 0, 1, 0, 1, 1])
+    # client 1 is a different singleton cluster: untouched
+    np.testing.assert_array_equal(st.age_of(1), [0] * 6)
+    np.testing.assert_array_equal(st.freq[0], [0, 1, 0, 1, 0, 0])
+
+
+def test_merge_keeps_freshest_info():
+    st = AgeState(d=4, n_clients=2, merge="min")
+    st.record_request(0, np.array([0]))      # ages c0: [0,1,1,1]
+    st.record_request(1, np.array([2]))      # ages c1: [1,1,0,1]
+    st.apply_clusters(np.array([0, 0]))
+    np.testing.assert_array_equal(st.age_of(0), [0, 1, 0, 1])
+    assert st.cluster_of[0] == st.cluster_of[1]
+
+
+def test_split_resets_age():
+    st = AgeState(d=4, n_clients=3)
+    st.apply_clusters(np.array([0, 0, 1]))   # merge 0,1
+    st.record_request(0, np.array([1]))
+    # now split client 1 away: both resulting clusters contain members of a
+    # previously-merged cluster that is NOT a subset -> reset
+    st.apply_clusters(np.array([0, 1, 1]))
+    np.testing.assert_array_equal(st.age_of(0), [0, 0, 0, 0])
+    np.testing.assert_array_equal(st.age_of(1), [0, 0, 0, 0])
+
+
+def test_noise_becomes_singletons():
+    labels = AgeState._canonicalize(np.array([-1, 0, -1, 0]))
+    assert labels[1] == labels[3]
+    assert len({labels[0], labels[2], labels[1]}) == 3
+
+
+def test_stable_cluster_keeps_history():
+    st = AgeState(d=3, n_clients=2)
+    st.apply_clusters(np.array([0, 0]))
+    st.record_request(0, np.array([2]))
+    before = st.age_of(0).copy()
+    st.apply_clusters(np.array([5, 5]))      # same composition, new ids
+    np.testing.assert_array_equal(st.age_of(0), before)

@@ -1,0 +1,113 @@
+"""Attention + loss math oracles: flash-vs-naive, windowing, GQA, chunked
+cross-entropy, and MLA matrix-absorption decode equivalence."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models.layers import flash_attention, decode_attention
+from repro.models.transformer import chunked_xent
+
+
+def naive_attention(q, k, v, causal, window=0, q_offset=0):
+    B, Sq, H, D = q.shape
+    G = k.shape[2]
+    kh = jnp.repeat(k, H // G, axis=2)
+    vh = jnp.repeat(v, H // G, axis=2)
+    s = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32),
+                   kh.astype(jnp.float32)) * (D ** -0.5)
+    qpos = q_offset + jnp.arange(Sq)[:, None]
+    kpos = jnp.arange(k.shape[1])[None, :]
+    mask = jnp.ones((Sq, k.shape[1]), bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window:
+        mask &= kpos > qpos - window
+    s = jnp.where(mask[None, None], s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhqk,bkhd->bqhd", p, vh.astype(jnp.float32))
+    return o
+
+
+@pytest.mark.parametrize("causal,window,G", [
+    (True, 0, 4), (True, 0, 1), (False, 0, 4), (True, 7, 2), (True, 16, 4),
+])
+def test_flash_matches_naive(causal, window, G):
+    key = jax.random.PRNGKey(int(causal) + window + G)
+    B, S, H, D = 2, 33, 4, 16
+    ks = jax.random.split(key, 3)
+    q = jax.random.normal(ks[0], (B, S, H, D))
+    k = jax.random.normal(ks[1], (B, S, G, D))
+    v = jax.random.normal(ks[2], (B, S, G, D))
+    out = flash_attention(q, k, v, causal=causal, window=window, kv_chunk=8)
+    ref = naive_attention(q, k, v, causal, window)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               atol=2e-5, rtol=2e-5)
+
+
+def test_flash_q_offset_decoding_window():
+    """q_offset semantics: rows attend relative to absolute positions."""
+    key = jax.random.PRNGKey(0)
+    B, S, H, D = 1, 16, 2, 8
+    ks = jax.random.split(key, 3)
+    q = jax.random.normal(ks[0], (B, 4, H, D))
+    k = jax.random.normal(ks[1], (B, S, H, D))
+    v = jax.random.normal(ks[2], (B, S, H, D))
+    out = flash_attention(q, k, v, causal=True, q_offset=12, kv_chunk=4)
+    ref = naive_attention(q, k, v, True, q_offset=12)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               atol=2e-5, rtol=2e-5)
+
+
+def test_decode_attention_matches_flash_last_row():
+    key = jax.random.PRNGKey(1)
+    B, S, H, G, D = 2, 24, 4, 2, 16
+    ks = jax.random.split(key, 3)
+    q = jax.random.normal(ks[0], (B, 1, H, D))
+    k = jax.random.normal(ks[1], (B, S, G, D))
+    v = jax.random.normal(ks[2], (B, S, G, D))
+    a = decode_attention(q[:, 0], k, v, S)
+    b = flash_attention(q, k, v, causal=True, q_offset=S - 1, kv_chunk=8)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b[:, 0]),
+                               atol=2e-5, rtol=2e-5)
+
+
+def test_chunked_xent_matches_direct():
+    key = jax.random.PRNGKey(2)
+    B, S, d, V, Vp = 2, 20, 16, 29, 32
+    ks = jax.random.split(key, 3)
+    x = jax.random.normal(ks[0], (B, S, d))
+    w = jax.random.normal(ks[1], (d, Vp)) * 0.1
+    labels = jax.random.randint(ks[2], (B, S), 0, V)
+    loss = chunked_xent(x, w, labels, V, chunk=7)
+    logits = x @ w
+    logits = jnp.where(jnp.arange(Vp) < V, logits, -1e30)
+    logp = jax.nn.log_softmax(logits)
+    ref = -jnp.mean(jnp.take_along_axis(logp, labels[..., None], -1))
+    np.testing.assert_allclose(float(loss), float(ref), rtol=1e-5)
+
+
+def test_mla_absorption_decode_equals_prefill():
+    """The matrix-absorbed latent decode (DeepSeek trick) must agree with
+    the expanded prefill attention at the last position."""
+    from repro.configs import get_smoke_config
+    from repro.models import mla as MLA
+
+    cfg = get_smoke_config("deepseek-v2-236b").replace(dtype="float32")
+    key = jax.random.PRNGKey(3)
+    p = MLA.mla_params(key, cfg)
+    B, S = 2, 9
+    x = jax.random.normal(key, (B, S, cfg.d_model), jnp.float32) * 0.3
+
+    out_seq, (c_kv, k_rope) = MLA.mla_prefill(p, cfg, x, jnp.arange(S))
+
+    cache = {
+        "c_kv": jnp.zeros((B, S, cfg.kv_lora_rank), jnp.float32
+                          ).at[:, :S - 1].set(c_kv[:, :S - 1]),
+        "k_rope": jnp.zeros((B, S, MLA.ROPE_DIM), jnp.float32
+                            ).at[:, :S - 1].set(k_rope[:, :S - 1]),
+    }
+    out_dec, _ = MLA.mla_decode(p, cfg, x[:, S - 1:S], cache, S - 1)
+    np.testing.assert_allclose(np.asarray(out_dec[:, 0]),
+                               np.asarray(out_seq[:, -1]),
+                               atol=5e-4, rtol=5e-4)

@@ -1,0 +1,32 @@
+"""Checkpoint round-trip incl. bf16 and nested structures."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import save_checkpoint, load_checkpoint, list_checkpoints
+
+
+def test_roundtrip(tmp_path):
+    tree = {
+        "layers": {"w": jnp.arange(6, dtype=jnp.bfloat16).reshape(2, 3),
+                   "b": jnp.ones(3, jnp.float32)},
+        "step_like": [jnp.int32(7), jnp.zeros((2, 2))],
+    }
+    save_checkpoint(str(tmp_path), 42, tree, extra={"note": "hi"})
+    assert list_checkpoints(str(tmp_path)) == [42]
+    restored, meta = load_checkpoint(str(tmp_path), tree)
+    assert meta["step"] == 42 and meta["extra"]["note"] == "hi"
+    for a, b in zip(jax.tree_util.tree_leaves(tree),
+                    jax.tree_util.tree_leaves(restored)):
+        assert a.dtype == b.dtype
+        np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                      np.asarray(b, np.float32))
+
+
+def test_multiple_steps_latest_wins(tmp_path):
+    t = {"w": jnp.zeros(2)}
+    save_checkpoint(str(tmp_path), 1, t)
+    save_checkpoint(str(tmp_path), 2, {"w": jnp.ones(2)})
+    restored, meta = load_checkpoint(str(tmp_path), t)
+    assert meta["step"] == 2
+    assert float(restored["w"][0]) == 1.0

@@ -1,0 +1,64 @@
+"""Eq. (3) similarity + DBSCAN."""
+import numpy as np
+
+from repro.core.clustering import (connectivity_matrix, cluster_clients,
+                                   dbscan, similarity_matrix)
+
+
+def test_similarity_eq3():
+    f = np.array([[2, 0], [1, 0], [0, 3]], dtype=np.int64)
+    d = similarity_matrix(f)
+    assert d[0, 1] == (2 * 1) / (2 * 2)      # <f0,f1>/<f0,f0>
+    assert d[1, 0] == (2 * 1) / (1 * 1)      # asymmetric
+    assert d[0, 2] == 0
+
+
+def test_zero_freq_rows_are_safe():
+    f = np.zeros((3, 4), np.int64)
+    d = similarity_matrix(f)
+    assert np.all(np.isfinite(d))
+
+
+def test_dbscan_two_blobs():
+    # 4 points: two tight pairs far apart
+    dist = np.array([
+        [0.0, 0.1, 0.9, 0.9],
+        [0.1, 0.0, 0.9, 0.9],
+        [0.9, 0.9, 0.0, 0.1],
+        [0.9, 0.9, 0.1, 0.0],
+    ])
+    labels = dbscan(dist, eps=0.2, min_pts=2)
+    assert labels[0] == labels[1] != labels[2]
+    assert labels[2] == labels[3]
+
+
+def test_dbscan_noise():
+    dist = np.array([
+        [0.0, 0.1, 0.9],
+        [0.1, 0.0, 0.9],
+        [0.9, 0.9, 0.0],
+    ])
+    labels = dbscan(dist, eps=0.2, min_pts=2)
+    assert labels[2] == -1
+
+
+def test_cluster_clients_recovers_paper_pairs():
+    rng = np.random.default_rng(0)
+    # 6 clients in 3 pairs; pairs request from disjoint index ranges
+    freq = np.zeros((6, 300), np.int64)
+    for i in range(6):
+        base = (i // 2) * 100
+        sel = base + rng.integers(0, 100, 400)
+        np.add.at(freq[i], sel, 1)
+    labels = cluster_clients(freq, eps=0.3, min_pts=2)
+    assert labels[0] == labels[1]
+    assert labels[2] == labels[3]
+    assert labels[4] == labels[5]
+    assert len({labels[0], labels[2], labels[4]}) == 3
+
+
+def test_connectivity_in_unit_interval():
+    f = np.abs(np.random.default_rng(1).integers(0, 5, (4, 20)))
+    c = connectivity_matrix(f)
+    assert np.all(c >= 0) and np.all(c <= 1)
+    assert np.allclose(c, c.T)

@@ -1,0 +1,67 @@
+"""Data pipeline: synthetic sets, paper splits, batching, determinism."""
+import numpy as np
+
+from repro.data import (BatchIterator, cifar10_like, label_partition,
+                        mnist_like, paper_cifar_split, paper_mnist_split,
+                        token_stream)
+from repro.data.federated import PAPER_CIFAR_LABELS, PAPER_MNIST_LABELS
+
+
+def test_mnist_like_shapes_and_determinism():
+    (xa, ya), (xt, yt) = mnist_like(n_train=500, n_test=100, seed=3)
+    (xb, yb), _ = mnist_like(n_train=500, n_test=100, seed=3)
+    assert xa.shape == (500, 28, 28, 1) and xt.shape == (100, 28, 28, 1)
+    np.testing.assert_array_equal(xa, xb)
+    assert set(np.unique(ya)) <= set(range(10))
+
+
+def test_cifar_like_shapes():
+    (x, y), _ = cifar10_like(n_train=300, n_test=50)
+    assert x.shape == (300, 32, 32, 3)
+
+
+def test_paper_mnist_split_labels():
+    (x, y), _ = mnist_like(n_train=2000, n_test=10)
+    shards = paper_mnist_split(x, y)
+    assert len(shards) == 10
+    for i, (xs, ys) in enumerate(shards):
+        assert set(np.unique(ys)) <= set(PAPER_MNIST_LABELS[i])
+        assert len(ys) > 0
+
+
+def test_paper_cifar_split_pairs_share_labels():
+    (x, y), _ = cifar10_like(n_train=2000, n_test=10)
+    shards = paper_cifar_split(x, y)
+    assert len(shards) == 6
+    for a, b in ((0, 1), (2, 3), (4, 5)):
+        assert (set(np.unique(shards[a][1]))
+                == set(np.unique(shards[b][1]))
+                == set(PAPER_CIFAR_LABELS[a]))
+
+
+def test_label_partition_shares_evenly():
+    y = np.repeat(np.arange(2), 100)
+    x = np.zeros((200, 1))
+    shards = label_partition(x, y, [[0], [0], [1]])
+    assert abs(len(shards[0][1]) - len(shards[1][1])) <= 1
+    assert len(shards[2][1]) == 100
+
+
+def test_batch_iterator_covers_epoch():
+    x = np.arange(10)[:, None]
+    y = np.arange(10)
+    it = BatchIterator(x, y, 5, seed=0)
+    seen = []
+    for _ in range(2):
+        bx, by = next(it)
+        seen.extend(by.tolist())
+    assert sorted(seen) == list(range(10))
+
+
+def test_token_stream_learnable_structure():
+    gen = token_stream(vocab=97, batch=4, seq=64, seed=0)
+    b = next(gen)
+    assert b["tokens"].shape == (4, 64)
+    assert b["labels"].shape == (4, 64)
+    # labels are tokens shifted by one
+    np.testing.assert_array_equal(b["tokens"][:, 1:], b["labels"][:, :-1])

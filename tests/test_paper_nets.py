@@ -1,0 +1,35 @@
+"""The paper's Table-I networks must match the stated parameter counts
+EXACTLY (39,760 and 2,515,338)."""
+import jax
+import jax.numpy as jnp
+
+from repro.models import paper_nets as P
+
+
+def test_mlp_param_count_exact():
+    params = P.mlp_init(jax.random.PRNGKey(0))
+    assert P.param_count(params) == 39_760
+
+
+def test_cnn_param_count_exact():
+    params, _state = P.cnn_init(jax.random.PRNGKey(0))
+    assert P.param_count(params) == 2_515_338
+
+
+def test_cnn_forward_shapes_and_bn_state():
+    params, state = P.cnn_init(jax.random.PRNGKey(1))
+    x = jax.random.normal(jax.random.PRNGKey(2), (4, 32, 32, 3))
+    logits, new_state = P.cnn_apply(params, state, x, train=True)
+    assert logits.shape == (4, 10)
+    # train mode must update running stats
+    changed = jnp.any(new_state["conv0"]["mean"] != state["conv0"]["mean"])
+    assert bool(changed)
+    # eval mode must not
+    _, st2 = P.cnn_apply(params, new_state, x, train=False)
+    assert bool(jnp.all(st2["conv0"]["mean"] == new_state["conv0"]["mean"]))
+
+
+def test_mlp_forward():
+    params = P.mlp_init(jax.random.PRNGKey(0))
+    x = jax.random.normal(jax.random.PRNGKey(1), (8, 28, 28, 1))
+    assert P.mlp_apply(params, x).shape == (8, 10)

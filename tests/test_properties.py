@@ -1,0 +1,110 @@
+"""Property-based tests (hypothesis) for the system's invariants:
+
+1. rAge-k is a compression operator: ||g - Comp(g)||^2 <= (1-gamma)||g||^2
+   with gamma = k / (k + (r-k)beta + (d-r))  (paper §II-A).
+2. top-k contraction with gamma = k/d.
+3. Age-vector invariants under arbitrary request sequences.
+4. DBSCAN label invariance under point permutation.
+5. Bucket budget conservation properties.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import sparsify as S
+from repro.core.age import AgeState
+from repro.core.clustering import dbscan
+from repro.core.compression import beta_of, contraction, gamma_rage_k
+
+settings.register_profile("fast", max_examples=25, deadline=None)
+settings.load_profile("fast")
+
+
+@st.composite
+def grad_and_params(draw):
+    d = draw(st.integers(8, 128))
+    r = draw(st.integers(2, d))
+    k = draw(st.integers(1, r))
+    seed = draw(st.integers(0, 2**31 - 1))
+    g = np.asarray(jax.random.normal(jax.random.PRNGKey(seed), (d,)))
+    # avoid degenerate all-zero vectors
+    if np.all(g == 0):
+        g[0] = 1.0
+    return g, r, k
+
+
+@given(grad_and_params())
+def test_rage_k_is_compression_operator(gp):
+    g, r, k = gp
+    d = g.shape[0]
+    age = jnp.zeros(d, jnp.int32)
+    sparse, _, _ = S.rage_k(jnp.asarray(g), age, r=r, k=k)
+    beta = beta_of(g, r)
+    if not np.isfinite(beta):
+        return
+    gamma = gamma_rage_k(k, r, d, beta)
+    c = contraction(g, np.asarray(sparse))
+    assert c <= (1 - gamma) + 1e-6
+
+
+@given(grad_and_params())
+def test_top_k_contraction_bound(gp):
+    g, r, k = gp
+    sparse, _ = S.top_k(jnp.asarray(g), k)
+    c = contraction(g, np.asarray(sparse))
+    assert c <= (1 - k / g.shape[0]) + 1e-6
+
+
+@given(grad_and_params())
+def test_rage_k_never_worse_than_keeping_worst_k(gp):
+    """rAge-k keeps k of the top-r magnitudes, so its error is at most the
+    error of dropping everything but the SMALLEST k of the top-r."""
+    g, r, k = gp
+    age = jnp.zeros(g.shape[0], jnp.int32)
+    sparse, idx, _ = S.rage_k(jnp.asarray(g), age, r=r, k=k)
+    mags = np.sort(np.abs(g))[::-1]
+    kept = np.abs(g[np.asarray(idx)])
+    # every kept entry is at least as large as the r-th magnitude
+    assert np.all(kept >= mags[r - 1] - 1e-7)
+
+
+@given(st.lists(st.lists(st.integers(0, 15), min_size=1, max_size=5),
+                min_size=1, max_size=20))
+def test_age_invariants(requests):
+    st_ = AgeState(d=16, n_clients=1)
+    for t, req in enumerate(requests, start=1):
+        idx = np.unique(np.array(req))
+        st_.record_request(0, idx)
+        a = st_.age_of(0)
+        assert np.all(a >= 0)
+        assert np.all(a <= t)                      # age can't exceed rounds
+        assert np.all(a[idx] == 0)                 # just-requested are fresh
+    total_freq = st_.freq[0].sum()
+    assert total_freq == sum(len(np.unique(r)) for r in requests)
+
+
+@given(st.integers(0, 10_000), st.integers(3, 8))
+def test_dbscan_permutation_invariance(seed, n):
+    rng = np.random.default_rng(seed)
+    pts = rng.random((n, 2))
+    dist = np.linalg.norm(pts[:, None] - pts[None], axis=-1)
+    labels = dbscan(dist, eps=0.3, min_pts=2)
+    perm = rng.permutation(n)
+    labels_p = dbscan(dist[np.ix_(perm, perm)], eps=0.3, min_pts=2)
+    # same-cluster relation must be preserved under permutation
+    for i in range(n):
+        for j in range(n):
+            same = labels[perm[i]] == labels[perm[j]] and labels[perm[i]] != -1
+            same_p = labels_p[i] == labels_p[j] and labels_p[i] != -1
+            assert same == same_p
+
+
+@given(st.lists(st.integers(1, 10_000), min_size=1, max_size=12),
+       st.integers(1, 500), st.integers(1, 100))
+def test_bucket_budget_bounds(sizes, r, k):
+    r = max(r, k)
+    budgets = S.bucket_budgets(sizes, r=r, k=k)
+    assert len(budgets) == len(sizes)
+    for (r_b, k_b), d_b in zip(budgets, sizes):
+        assert 1 <= k_b <= r_b <= d_b

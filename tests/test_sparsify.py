@@ -1,0 +1,89 @@
+"""Unit tests: Algorithm 2 and the baseline sparsifiers."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import sparsify as S
+
+
+def test_top_k_picks_largest_magnitudes():
+    g = jnp.array([1.0, -5.0, 3.0, 0.1, -2.0])
+    sparse, idx = S.top_k(g, 2)
+    assert set(np.asarray(idx).tolist()) == {1, 2}
+    np.testing.assert_allclose(np.asarray(sparse),
+                               [0, -5.0, 3.0, 0, 0])
+
+
+def test_rage_k_algorithm2_semantics():
+    # top-4 by |g| = idx [0,1,2,3]; their ages [0,3,1,0] -> top-2 ages = idx 1,2
+    g = jnp.array([5.0, -4.0, 3.0, 2.0, 1.0, 0.5, 0.1, -0.2])
+    age = jnp.array([0, 3, 1, 0, 9, 0, 0, 0], jnp.int32)
+    sparse, idx, new_age = S.rage_k(g, age, r=4, k=2)
+    assert set(np.asarray(idx).tolist()) == {1, 2}
+    # eq (2): requested reset to 0, others +1
+    exp_age = np.array([1, 0, 0, 1, 10, 1, 1, 1])
+    np.testing.assert_array_equal(np.asarray(new_age), exp_age)
+    # sparse vector has exactly k nonzeros with original values
+    assert np.count_nonzero(np.asarray(sparse)) == 2
+    np.testing.assert_allclose(np.asarray(sparse)[np.asarray(idx)],
+                               np.asarray(g)[np.asarray(idx)])
+
+
+def test_rage_k_tie_break_prefers_larger_magnitude():
+    g = jnp.array([5.0, -4.0, 3.0, 2.0])
+    age = jnp.zeros(4, jnp.int32)           # all ages equal
+    _, idx, _ = S.rage_k(g, age, r=4, k=2)
+    assert set(np.asarray(idx).tolist()) == {0, 1}
+
+
+def test_rage_k_equals_top_k_when_r_eq_k_and_age_uniform():
+    key = jax.random.PRNGKey(0)
+    g = jax.random.normal(key, (64,))
+    age = jnp.zeros(64, jnp.int32)
+    s1, i1, _ = S.rage_k(g, age, r=8, k=8)
+    s2, i2 = S.top_k(g, 8)
+    assert set(np.asarray(i1).tolist()) == set(np.asarray(i2).tolist())
+    np.testing.assert_allclose(np.asarray(s1), np.asarray(s2))
+
+
+def test_rage_k_exclusion():
+    g = jnp.array([5.0, -4.0, 3.0, 2.0, 1.0])
+    age = jnp.array([5, 5, 5, 5, 5], jnp.int32)
+    excl = jnp.array([True, True, False, False, False])
+    _, idx, _ = S.rage_k(g, age, r=4, k=2, exclude=excl)
+    assert set(np.asarray(idx).tolist()) == {2, 3}
+
+
+def test_rtop_k_subset_of_top_r():
+    key = jax.random.PRNGKey(1)
+    g = jax.random.normal(key, (128,))
+    _, cand = jax.lax.top_k(jnp.abs(g), 16)
+    _, idx = S.rtop_k(g, key, r=16, k=4)
+    assert set(np.asarray(idx).tolist()) <= set(np.asarray(cand).tolist())
+
+
+def test_bucket_budgets_invariants():
+    sizes = [100, 10_000, 393]
+    budgets = S.bucket_budgets(sizes, r=75, k=10)
+    for (r_b, k_b), d_b in zip(budgets, sizes):
+        assert 1 <= k_b <= r_b <= d_b
+
+
+def test_flatten_unflatten_roundtrip():
+    tree = {"a": jnp.arange(6).reshape(2, 3), "b": [jnp.ones(4), jnp.zeros(2)]}
+    flat, spec = S.flatten_buckets(tree)
+    tree2 = S.unflatten_buckets(flat, spec)
+    assert jax.tree_util.tree_all(
+        jax.tree_util.tree_map(lambda x, y: bool(jnp.all(x == y)), tree, tree2))
+
+
+def test_apply_method_dispatch():
+    g = jnp.arange(16.0)
+    age = jnp.zeros(16, jnp.int32)
+    key = jax.random.PRNGKey(0)
+    for m in ("rage_k", "rtop_k", "top_k", "random_k", "dense"):
+        s, idx, na = S.apply_method(m, g, age=age, key=key, r=8, k=4)
+        assert s.shape == g.shape
+    with pytest.raises(ValueError):
+        S.apply_method("nope", g)

@@ -1,0 +1,85 @@
+"""End-to-end behaviour tests for the paper's system (integration level):
+a short FL run must (a) learn, (b) recover the paper's client clusters,
+(c) use orders of magnitude less uplink than dense, and (d) bucketed
+rAge-k with one bucket must equal the paper's flat algorithm.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import RAgeKConfig
+from repro.core import sparsify as S
+from repro.data.federated import paper_mnist_split
+from repro.data.synthetic import mnist_like
+from repro.fl.simulation import run_fl
+
+
+@pytest.fixture(scope="module")
+def mnist_setup():
+    (xtr, ytr), (xte, yte) = mnist_like(n_train=3000, n_test=1500, seed=0)
+    return paper_mnist_split(xtr, ytr), (xte, yte)
+
+
+def test_fl_rage_k_learns_and_clusters(mnist_setup):
+    shards, test = mnist_setup
+    hp = RAgeKConfig(r=150, k=40, H=4, M=10, lr=2e-3, batch_size=64,
+                     method="rage_k")
+    res = run_fl("mlp", shards, test, hp, rounds=60, eval_every=30)
+    # learning: clearly above 10-class chance
+    assert res.acc[-1] > 0.25, res.summary()
+    assert res.loss[-1] < res.loss[0] + 1e-6
+    # clustering: the five label pairs (0,1),(2,3),... are recovered
+    labels = res.cluster_labels[-1]
+    for a in range(0, 10, 2):
+        assert labels[a] == labels[a + 1], labels
+    pair_ids = {labels[a] for a in range(0, 10, 2)}
+    assert len(pair_ids) == 5, labels
+
+
+def test_fl_uplink_budget(mnist_setup):
+    shards, test = mnist_setup
+    k, r, d = 10, 75, 39760
+    hp = RAgeKConfig(r=r, k=k, H=4, M=10, lr=1e-3, batch_size=32,
+                     method="rage_k")
+    res = run_fl("mlp", shards, test, hp, rounds=4, eval_every=4)
+    hp_d = RAgeKConfig(r=r, k=k, H=4, M=10, lr=1e-3, batch_size=32,
+                       method="dense")
+    res_d = run_fl("mlp", shards, test, hp_d, rounds=4, eval_every=4)
+    assert res.uplink_bytes[-1] < res_d.uplink_bytes[-1] / 100
+
+
+def test_fl_dense_beats_chance_quickly(mnist_setup):
+    shards, test = mnist_setup
+    hp = RAgeKConfig(lr=2e-3, H=4, batch_size=64, method="dense")
+    res = run_fl("mlp", shards, test, hp, rounds=30, eval_every=30)
+    assert res.acc[-1] > 0.6
+
+
+def test_bucketed_single_bucket_equals_flat():
+    """DESIGN.md §3: the bucketed generalization with ONE bucket is the
+    paper's algorithm exactly."""
+    key = jax.random.PRNGKey(0)
+    g = jax.random.normal(key, (256,))
+    age = jax.random.randint(key, (256,), 0, 50)
+    r, k = 32, 8
+    s_flat, i_flat, a_flat = S.rage_k(g, age, r=r, k=k)
+
+    buckets, spec = S.flatten_buckets({"all": g})
+    budgets = S.bucket_budgets([b.size for b in buckets], r, k)
+    assert budgets == [(r, k)]
+    s_b, i_b, a_b = S.rage_k(buckets[0], age, *budgets[0])
+    np.testing.assert_array_equal(np.asarray(s_flat), np.asarray(s_b))
+    np.testing.assert_array_equal(np.asarray(a_flat), np.asarray(a_b))
+
+
+def test_cnn_single_round_runs():
+    from repro.data.synthetic import cifar10_like
+    from repro.data.federated import paper_cifar_split
+    (xtr, ytr), (xte, yte) = cifar10_like(n_train=600, n_test=300, seed=1)
+    shards = paper_cifar_split(xtr, ytr)
+    hp = RAgeKConfig(r=500, k=100, H=2, M=4, lr=1e-3, batch_size=16,
+                     method="rage_k")
+    res = run_fl("cnn", shards, (xte, yte), hp, rounds=4, eval_every=4)
+    assert np.isfinite(res.loss[-1])
+    assert res.uplink_bytes[-1] > 0
