@@ -8,7 +8,7 @@ from benchmarks.common import save_json
 from repro.configs.base import RAgeKConfig
 from repro.data.federated import paper_mnist_split
 from repro.data.synthetic import mnist_like
-from repro.fl.simulation import run_fl
+from repro.fl import FederatedEngine
 
 
 def main(fast: bool = True):
@@ -19,8 +19,8 @@ def main(fast: bool = True):
     for method in ("rage_k", "rtop_k", "top_k", "random_k", "dense"):
         hp = RAgeKConfig(r=75, k=10, H=4, M=20, lr=2e-3, batch_size=64,
                          method=method)
-        res = run_fl("mlp", shards, (xte, yte), hp, rounds=rounds,
-                     eval_every=max(rounds // 10, 1))
+        res = FederatedEngine("mlp", shards, (xte, yte), hp).run(
+            rounds, eval_every=max(rounds // 10, 1))
         curves[method] = {"rounds": res.rounds, "acc": res.acc,
                           "loss": res.loss}
         rows.append((f"ablation_{method}", 0.0,
@@ -29,8 +29,8 @@ def main(fast: bool = True):
     # error feedback on rAge-k
     hp = RAgeKConfig(r=75, k=10, H=4, M=20, lr=2e-3, batch_size=64,
                      method="rage_k")
-    res_ef = run_fl("mlp", shards, (xte, yte), hp, rounds=rounds,
-                    eval_every=max(rounds // 10, 1), ef=True)
+    res_ef = FederatedEngine("mlp", shards, (xte, yte), hp, ef=True).run(
+        rounds, eval_every=max(rounds // 10, 1))
     curves["rage_k_ef"] = {"rounds": res_ef.rounds, "acc": res_ef.acc,
                            "loss": res_ef.loss}
     rows.append(("ablation_rage_k_ef", 0.0,

@@ -5,7 +5,7 @@ settings, plus the distributed bucketed variant's wire format.
 from __future__ import annotations
 
 from benchmarks.common import save_json
-from repro.core.compression import bytes_per_round
+from repro.core.compression import bytes_per_index, bytes_per_round
 
 
 def main(fast: bool = True):
@@ -16,11 +16,14 @@ def main(fast: bool = True):
     rows = []
     table = {}
     for name, s in settings.items():
+        ib = bytes_per_index(s["d"])               # ceil(log2(d)/8)
         dense = bytes_per_round(0, s["d"], dense=True)
         sparse = bytes_per_round(s["k"], s["d"])
-        sparse_rep = sparse + s["r"] * 4            # rAge-k adds the r-report
-        sparse_bf16 = s["k"] * (4 + 2) + s["r"] * 4  # beyond-paper bf16 wire
+        sparse_rep = sparse + s["r"] * ib           # rAge-k adds the r-report
+        sparse_bf16 = (bytes_per_round(s["k"], s["d"], wire_dtype="bfloat16")
+                       + s["r"] * ib)               # beyond-paper bf16 wire
         table[name] = {
+            "index_bytes": ib,
             "dense_fp32": dense,
             "rtop_k/top_k": sparse,
             "rage_k(+r-report)": sparse_rep,

@@ -11,7 +11,7 @@ from benchmarks.common import art_dir, save_json
 from repro.configs.base import RAgeKConfig
 from repro.data.federated import paper_mnist_split
 from repro.data.synthetic import mnist_like
-from repro.fl.simulation import run_fl
+from repro.fl import FederatedEngine
 
 
 def pair_score(labels: np.ndarray) -> float:
@@ -30,8 +30,8 @@ def main(fast: bool = True):
     shards = paper_mnist_split(xtr, ytr)
     hp = RAgeKConfig(r=75, k=10, H=4, M=20, lr=1e-3, batch_size=64,
                      method="rage_k")
-    res = run_fl("mlp", shards, (xte, yte), hp, rounds=rounds,
-                 eval_every=rounds, heatmap_at=heat_at)
+    res = FederatedEngine("mlp", shards, (xte, yte), hp).run(
+        rounds, eval_every=rounds, heatmap_at=heat_at)
     save_json("fig2_heatmaps", {str(t): h.tolist()
                                 for t, h in res.heatmaps.items()})
     _plot(res.heatmaps)

@@ -15,7 +15,7 @@ from benchmarks.common import art_dir, save_json
 from repro.configs.base import RAgeKConfig
 from repro.data.federated import paper_mnist_split
 from repro.data.synthetic import mnist_like
-from repro.fl.simulation import run_fl
+from repro.fl import FederatedEngine
 
 
 def main(fast: bool = True):
@@ -33,8 +33,8 @@ def main(fast: bool = True):
         hp = RAgeKConfig(r=75, k=10, H=4, M=20, lr=lr, batch_size=bs,
                          method=method)
         t0 = time.time()
-        res = run_fl("mlp", shards, (xte, yte), hp, rounds=rounds,
-                     eval_every=max(rounds // 20, 1))
+        res = FederatedEngine("mlp", shards, (xte, yte), hp).run(
+            rounds, eval_every=max(rounds // 20, 1))
         curves[method] = {"rounds": res.rounds, "acc": res.acc,
                           "loss": res.loss, "uplink": res.uplink_bytes}
         us = (time.time() - t0) / rounds * 1e6

@@ -13,7 +13,7 @@ from benchmarks.common import art_dir, save_json
 from repro.configs.base import RAgeKConfig
 from repro.data.federated import paper_cifar_split
 from repro.data.synthetic import cifar10_like
-from repro.fl.simulation import run_fl
+from repro.fl import FederatedEngine
 
 
 def main(fast: bool = True):
@@ -34,9 +34,9 @@ def main(fast: bool = True):
         hp = RAgeKConfig(r=2500, k=100, H=H, M=M, lr=lr, batch_size=bs,
                          method=method)
         t0 = time.time()
-        res = run_fl("cnn", shards, (xte, yte), hp, rounds=rounds,
-                     eval_every=max(rounds // 8, 1),
-                     heatmap_at=(1, rounds) if method == "rage_k" else ())
+        res = FederatedEngine("cnn", shards, (xte, yte), hp).run(
+            rounds, eval_every=max(rounds // 8, 1),
+            heatmap_at=(1, rounds) if method == "rage_k" else ())
         curves[method] = {"rounds": res.rounds, "acc": res.acc,
                           "loss": res.loss, "uplink": res.uplink_bytes}
         if method == "rage_k":

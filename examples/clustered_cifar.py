@@ -9,10 +9,9 @@ import argparse
 import numpy as np
 
 from repro.configs.base import RAgeKConfig
-from repro.core.clustering import connectivity_matrix
 from repro.data.federated import paper_cifar_split
 from repro.data.synthetic import cifar10_like
-from repro.fl.simulation import run_fl
+from repro.fl import FederatedEngine
 
 
 def main():
@@ -25,9 +24,9 @@ def main():
 
     hp = RAgeKConfig(r=2500, k=100, H=5, M=8, lr=1e-3, batch_size=32,
                      method="rage_k")
-    res = run_fl("cnn", shards, (xte, yte), hp, rounds=args.rounds,
-                 eval_every=max(args.rounds // 6, 1),
-                 heatmap_at=(args.rounds,), verbose=True)
+    engine = FederatedEngine("cnn", shards, (xte, yte), hp)
+    res = engine.run(args.rounds, eval_every=max(args.rounds // 6, 1),
+                     heatmap_at=(args.rounds,), verbose=True)
     print("\nconnectivity matrix (rounded):")
     hm = res.heatmaps[args.rounds]
     print(np.round(hm, 2))

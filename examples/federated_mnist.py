@@ -8,7 +8,7 @@ import argparse
 from repro.configs.base import RAgeKConfig
 from repro.data.federated import paper_mnist_split
 from repro.data.synthetic import mnist_like
-from repro.fl.simulation import run_fl
+from repro.fl import FederatedEngine
 
 
 def main():
@@ -24,8 +24,9 @@ def main():
     for method in ("rage_k", "rtop_k"):
         hp = RAgeKConfig(r=75, k=10, H=4, M=20, lr=2e-3, batch_size=64,
                          method=method)
-        res = run_fl("mlp", shards, (xte, yte), hp, rounds=args.rounds,
-                     eval_every=max(args.rounds // 10, 1), verbose=True)
+        engine = FederatedEngine("mlp", shards, (xte, yte), hp)
+        res = engine.run(args.rounds,
+                         eval_every=max(args.rounds // 10, 1), verbose=True)
         s = res.summary()
         print(f"[{method}] final acc={s['final_acc']:.3f} "
               f"uplink={s['total_uplink_mb']:.2f} MiB "

@@ -3,6 +3,10 @@ from repro.core.sparsify import (  # noqa: F401
     rage_k, rtop_k, top_k, random_k, apply_method,
     bucket_budgets, flatten_buckets, unflatten_buckets,
 )
+from repro.core.strategies import (  # noqa: F401
+    Strategy, RAgeK, RTopK, TopK, RandomK, Dense, make_strategy,
+    age_select,
+)
 from repro.core.age import AgeState  # noqa: F401
 from repro.core.clustering import (  # noqa: F401
     similarity_matrix, connectivity_matrix, dbscan, cluster_clients,

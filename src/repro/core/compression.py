@@ -10,7 +10,13 @@ tests (tests/test_properties.py).
 """
 from __future__ import annotations
 
+import math
+
 import numpy as np
+
+# wire dtypes the protocol supports (RAgeKConfig.wire_dtype)
+_WIRE_BYTES = {"float64": 8, "float32": 4, "bfloat16": 2, "float16": 2,
+               "int8": 1, "uint8": 1}
 
 
 def gamma_rage_k(k: int, r: int, d: int, beta: float) -> float:
@@ -41,9 +47,35 @@ def contraction(g, g_sparse) -> float:
     return float(np.sum((g - gs) ** 2) / n)
 
 
-def bytes_per_round(k: int, d: int, value_bytes: int = 4,
-                    index_bytes: int = 4, dense: bool = False) -> int:
-    """Uplink bytes for one client in one global round."""
+def bytes_per_index(d: int) -> int:
+    """Bytes needed to address one of d coordinates: ceil(log2(d) / 8)."""
+    if d <= 1:
+        return 1
+    return max(1, math.ceil(math.log2(d) / 8))
+
+
+def value_bytes_of(wire_dtype: str) -> int:
+    """Payload bytes per value for a RAgeKConfig.wire_dtype string."""
+    try:
+        return _WIRE_BYTES[str(wire_dtype)]
+    except KeyError:
+        return int(np.dtype(wire_dtype).itemsize)
+
+
+def bytes_per_round(k: int, d: int, value_bytes: int | None = None,
+                    index_bytes: int | None = None, dense: bool = False,
+                    wire_dtype: str | None = None) -> int:
+    """Uplink bytes for one client in one global round.
+
+    Values are sized by ``wire_dtype`` (e.g. RAgeKConfig.wire_dtype;
+    fp32 values unless overridden), indices by ceil(log2(d)/8) — a
+    d-coordinate model needs only that many bytes per index, not a
+    hard-coded 4. Explicit value_bytes / index_bytes win over both.
+    """
+    if value_bytes is None:
+        value_bytes = value_bytes_of(wire_dtype) if wire_dtype else 4
     if dense:
         return d * value_bytes
+    if index_bytes is None:
+        index_bytes = bytes_per_index(d)
     return k * (value_bytes + index_bytes)

@@ -4,6 +4,9 @@ All operators work on FLAT gradient vectors, are pure and jit-able, and
 return ``(g_sparse, indices, extra)``. ``rage_k`` additionally threads the
 age vector (eq. 2 update) through.
 
+The selection math lives in :mod:`repro.core.strategies`; the functions
+here are the functional (dense-output) surface over those classes.
+
 Tie-breaking note: ``lax.top_k`` is stable w.r.t. position; since the
 candidate indices are ordered by decreasing |g|, age ties resolve in favor
 of LARGER magnitude — the natural choice, pinned by tests.
@@ -15,28 +18,29 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
+from repro.core import strategies as _S
+
+
+def _densify(g, idx, vals):
+    return jnp.zeros_like(g).at[idx].set(vals)
+
 
 def top_k(g: jnp.ndarray, k: int):
     """Classic top-k magnitude sparsification [Lin et al. 2018]."""
-    _, idx = jax.lax.top_k(jnp.abs(g), k)
-    sparse = jnp.zeros_like(g).at[idx].set(g[idx])
-    return sparse, idx
+    idx, vals, _ = _S.TopK(k=k).select(g, ())
+    return _densify(g, idx, vals), idx
 
 
 def rtop_k(g: jnp.ndarray, key, r: int, k: int):
     """rTop-k [Barnes et al. 2020]: random k of the top-r magnitudes."""
-    _, cand = jax.lax.top_k(jnp.abs(g), r)
-    pick = jax.random.choice(key, r, (k,), replace=False)
-    idx = cand[pick]
-    sparse = jnp.zeros_like(g).at[idx].set(g[idx])
-    return sparse, idx
+    idx, vals, _ = _S.RTopK(r=r, k=k).select(g, key)
+    return _densify(g, idx, vals), idx
 
 
 def random_k(g: jnp.ndarray, key, k: int):
     """Uniform random-k (exploration-only baseline)."""
-    idx = jax.random.choice(key, g.shape[0], (k,), replace=False)
-    sparse = jnp.zeros_like(g).at[idx].set(g[idx])
-    return sparse, idx
+    idx, vals, _ = _S.RandomK(k=k).select(g, key)
+    return _densify(g, idx, vals), idx
 
 
 def rage_k(g: jnp.ndarray, age: jnp.ndarray, r: int, k: int,
@@ -50,36 +54,31 @@ def rage_k(g: jnp.ndarray, age: jnp.ndarray, r: int, k: int,
     Returns (g_sparse, idx (k,), new_age) — eq. (2): requested ages reset
     to 0, all others +1.
     """
-    _, cand = jax.lax.top_k(jnp.abs(g), r)          # (r,) by |g| desc
-    cand_age = age[cand].astype(jnp.int32)
-    if exclude is not None:
-        # excluded indices get age -1 so they lose every comparison
-        cand_age = jnp.where(exclude[cand], jnp.int32(-1), cand_age)
-    _, sel = jax.lax.top_k(cand_age, k)             # positions into cand
-    idx = cand[sel]
-    sparse = jnp.zeros_like(g).at[idx].set(g[idx])
-    new_age = (age + 1).at[idx].set(0)
-    return sparse, idx, new_age
+    idx, vals, new_age = _S.RAgeK(r=r, k=k).select(g, age, exclude)
+    return _densify(g, idx, vals), idx, new_age
 
 
 def apply_method(method: str, g, *, age=None, key=None, r=0, k=0,
                  exclude=None):
-    """Uniform dispatcher used by the FL server. Returns
-    (g_sparse, idx, new_age_or_None)."""
+    """Uniform dispatcher (legacy surface). Returns
+    (g_sparse, idx, new_age_or_None).
+
+    Thin shim over :mod:`repro.core.strategies` — the Strategy protocol
+    is the real dispatch layer now; this keeps the old tuple convention
+    for existing callers.
+    """
+    from repro.core.strategies import make_strategy
+
+    strat = make_strategy(method, r=r, k=k)
     if method == "rage_k":
-        return rage_k(g, age, r, k, exclude)
-    if method == "rtop_k":
-        s, i = rtop_k(g, key, r, k)
-        return s, i, None
-    if method == "top_k":
-        s, i = top_k(g, k)
-        return s, i, None
-    if method == "random_k":
-        s, i = random_k(g, key, k)
-        return s, i, None
+        idx, vals, new_age = strat.select(g, age, exclude)
+        return jnp.zeros_like(g).at[idx].set(vals), idx, new_age
     if method == "dense":
-        return g, jnp.arange(g.shape[0]), None
-    raise ValueError(f"unknown method {method!r}")
+        idx, vals, _ = strat.select(g, ())
+        return g, idx, None
+    state = key if method in ("rtop_k", "random_k") else ()
+    idx, vals, _ = strat.select(g, state)
+    return jnp.zeros_like(g).at[idx].set(vals), idx, None
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,166 @@
+"""Pluggable index-selection strategies — the round API's selection layer.
+
+A ``Strategy`` encapsulates ONE method's per-vector selection rule behind
+a uniform, jit-able protocol:
+
+    state = strategy.init_state(d[, key])
+    idx, vals, state = strategy.select(g, state)     # g: (d,) flat
+
+``state`` is a jnp pytree threaded through rounds on DEVICE: the age
+vector for rAge-k (paper eq. 2), a PRNG key for the stochastic baselines,
+and ``()`` for the deterministic ones. Every consumer of the old string
+dispatch (`fl.simulation`, `core.sparsify.apply_method`,
+`dist.sparse_sync`) now goes through these classes; adding an age-aware
+variant (CAFe-style cost weighting, timely-FL deadlines, ...) is a new
+Strategy, not a new ``elif``.
+
+The FL engine's rAge-k path additionally coordinates clients of one
+cluster (shared age vector + disjoint requests); it reuses
+``age_select`` below so the selection math exists exactly once.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Protocol, runtime_checkable
+
+import jax
+import jax.numpy as jnp
+
+
+def age_select(cand: jnp.ndarray, cand_age: jnp.ndarray, k: int):
+    """Paper Algorithm 2 inner step: pick the k highest-age candidates.
+
+    cand: (r,) indices ordered by decreasing |g|; cand_age: (r,) their
+    ages (excluded candidates pre-masked to -1). lax.top_k is stable, so
+    age ties resolve in favor of LARGER magnitude (pinned by tests).
+    Returns (sel_positions, idx): positions into cand and the indices.
+    """
+    _, sel = jax.lax.top_k(cand_age, k)
+    return sel, cand[sel]
+
+
+@runtime_checkable
+class Strategy(Protocol):
+    """select(g, state) -> (idx, vals, state); all jit-able."""
+
+    name: str
+    k: int
+
+    def init_state(self, d: int, key=None) -> Any: ...
+
+    def select(self, g: jnp.ndarray, state: Any): ...
+
+
+@dataclass(frozen=True)
+class Dense:
+    """No compression — every client uploads the full gradient."""
+
+    name: str = "dense"
+    k: int = 0
+
+    def init_state(self, d: int, key=None):
+        return ()
+
+    def select(self, g, state):
+        return jnp.arange(g.shape[0]), g, state
+
+
+@dataclass(frozen=True)
+class TopK:
+    """Classic top-k magnitude sparsification [Lin et al. 2018]."""
+
+    k: int
+    name: str = "top_k"
+
+    def init_state(self, d: int, key=None):
+        return ()
+
+    def select(self, g, state):
+        _, idx = jax.lax.top_k(jnp.abs(g), self.k)
+        return idx, g[idx], state
+
+
+def _require_key(key, name: str):
+    if key is None:
+        raise ValueError(
+            f"{name} is stochastic: init_state needs an explicit PRNG key "
+            "(a silent shared default would make every client draw the "
+            "same indices)")
+    return key
+
+
+@dataclass(frozen=True)
+class RandomK:
+    """Uniform random-k (exploration-only baseline). State: PRNG key."""
+
+    k: int
+    name: str = "random_k"
+
+    def init_state(self, d: int, key=None):
+        return _require_key(key, "RandomK")
+
+    def select(self, g, key):
+        key, sub = jax.random.split(key)
+        idx = jax.random.choice(sub, g.shape[0], (self.k,), replace=False)
+        return idx, g[idx], key
+
+
+@dataclass(frozen=True)
+class RTopK:
+    """rTop-k [Barnes et al. 2020]: random k of the top-r magnitudes."""
+
+    r: int
+    k: int
+    name: str = "rtop_k"
+
+    def init_state(self, d: int, key=None):
+        return _require_key(key, "RTopK")
+
+    def select(self, g, key):
+        key, sub = jax.random.split(key)
+        _, cand = jax.lax.top_k(jnp.abs(g), self.r)
+        pick = jax.random.choice(sub, self.r, (self.k,), replace=False)
+        idx = cand[pick]
+        return idx, g[idx], key
+
+
+@dataclass(frozen=True)
+class RAgeK:
+    """Paper Algorithm 2: k highest-AGE indices of the top-r magnitude
+    candidates; eq. (2) resets requested ages, ages the rest. State: the
+    (d,) int32 age vector."""
+
+    r: int
+    k: int
+    name: str = "rage_k"
+
+    def init_state(self, d: int, key=None):
+        return jnp.zeros((d,), jnp.int32)
+
+    def select(self, g, age, exclude=None):
+        _, cand = jax.lax.top_k(jnp.abs(g), self.r)
+        cand_age = age[cand].astype(jnp.int32)
+        if exclude is not None:
+            cand_age = jnp.where(exclude[cand], jnp.int32(-1), cand_age)
+        _, idx = age_select(cand, cand_age, self.k)
+        new_age = (age + 1).at[idx].set(0)
+        return idx, g[idx], new_age
+
+
+def make_strategy(method: str, *, r: int = 0, k: int = 0) -> Strategy:
+    """Config-string factory ('rage_k' | 'rtop_k' | 'top_k' | 'random_k'
+    | 'dense')."""
+    if method == "rage_k":
+        return RAgeK(r=r, k=k)
+    if method == "rtop_k":
+        return RTopK(r=r, k=k)
+    if method == "top_k":
+        return TopK(k=k)
+    if method == "random_k":
+        return RandomK(k=k)
+    if method == "dense":
+        return Dense()
+    raise ValueError(f"unknown method {method!r}")
+
+
+STRATEGIES = ("rage_k", "rtop_k", "top_k", "random_k", "dense")

@@ -1,0 +1,7 @@
+"""Distributed runtime: the sharding rules engine and the sparse
+(rAge-k) gradient synchronization backends.
+
+``repro.dist.sharding``    — logical-axis rules, mesh context, constraint()
+``repro.dist.sparse_sync`` — age state + dense/sparse gradient exchange
+"""
+from repro.dist import sharding  # noqa: F401

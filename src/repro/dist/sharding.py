@@ -1,0 +1,180 @@
+"""Sharding rules engine (mesh context + logical-axis resolution).
+
+Models annotate activations/params with LOGICAL axis names ("batch",
+"d_ff", "heads", ...); this module resolves them against the ACTIVE mesh
+with per-dim divisibility fallbacks, so the same model code lowers on
+(data, model), (pod, data, model) and 1-device test meshes. Without an
+active mesh every annotation is a strict no-op (CPU unit tests).
+
+    with use_mesh(mesh):                      # optionally rules={...}
+        x = constraint(x, ("batch", "seq", "embed"))
+        specs = param_specs(params)           # pytree of PartitionSpec
+        shardings = named(specs)              # pytree of NamedSharding
+
+Resolution rules (override per-``use_mesh`` via ``rules=``):
+  logical name -> tuple of mesh axes tried in order. A dim is sharded
+  over the surviving axes only when (a) they exist in the mesh, (b) none
+  was already used by an earlier dim of the same array, and (c) the dim
+  size is divisible by their total size. Anything else replicates —
+  never a GSPMD error at lowering time.
+"""
+from __future__ import annotations
+
+import threading
+from contextlib import contextmanager
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+# logical axis -> mesh axes (order matters: earlier dims claim axes first)
+DEFAULT_RULES: dict = {
+    "batch": ("pod", "data"),
+    "fsdp": ("pod", "data"),          # ZeRO-3 parameter/optimizer sharding
+    "model": ("model",),
+    "d_ff": ("model",),
+    "heads": ("model",),
+    "vocab": ("model",),
+    "expert": ("model",),
+    "ssm_heads": ("model",),
+    "seq_model": ("model",),          # sequence-parallel attention
+    "seq": None,                      # replicated unless a rule maps it
+    "embed": None,
+    None: None,
+}
+
+# parameter leaf name -> logical names for the TRAILING dims (leading
+# scan-over-layers / expert-stack dims replicate)
+DEFAULT_PARAM_RULES: dict = {
+    "wq": ("fsdp", "heads"), "wk": ("fsdp", "heads"), "wv": ("fsdp", "heads"),
+    "wo": ("heads", "fsdp"),
+    "w1": ("fsdp", "d_ff"), "w3": ("fsdp", "d_ff"), "w2": ("d_ff", "fsdp"),
+    "w": ("vocab", "fsdp"),           # embedding / lm_head
+    "router": ("fsdp", None),         # n_experts rarely divides any axis
+    "experts_w1": ("expert", "fsdp", None),
+    "experts_w3": ("expert", "fsdp", None),
+    "experts_w2": ("expert", "fsdp", None),
+    "in_proj": ("fsdp", "model"), "out_proj": ("model", "fsdp"),
+    "w_dkv": ("fsdp", None), "w_kr": ("fsdp", None),
+    "w_uk": (None, "fsdp", "heads"), "w_uv": (None, "fsdp", "heads"),
+    # 1D / small leaves (norm scales, biases, conv taps, A_log, D): replicate
+}
+
+
+class _Ctx(threading.local):
+    def __init__(self):
+        self.stack: list = []
+
+
+_CTX = _Ctx()
+
+
+@contextmanager
+def use_mesh(mesh, rules: dict | None = None):
+    """Activate ``mesh`` (and optional logical-rule overrides) for the
+    dynamic extent. ``rules={"fsdp": None}`` disables ZeRO sharding, etc."""
+    merged = dict(DEFAULT_RULES)
+    if rules:
+        merged.update(rules)
+    _CTX.stack.append((mesh, merged))
+    try:
+        yield mesh
+    finally:
+        _CTX.stack.pop()
+
+
+def active_mesh():
+    """The innermost mesh activated by use_mesh, or None."""
+    return _CTX.stack[-1][0] if _CTX.stack else None
+
+
+def _active_rules() -> dict:
+    return _CTX.stack[-1][1] if _CTX.stack else DEFAULT_RULES
+
+
+def resolve_spec(names: tuple, shape: tuple) -> P:
+    """Resolve logical names against the active mesh with divisibility
+    fallbacks. names[i] annotates shape[i]; unknown/None names replicate."""
+    mesh = active_mesh()
+    if mesh is None:
+        return P(*([None] * len(shape)))
+    rules = _active_rules()
+    used: set = set()
+    out: list = []
+    for name, dim in zip(names, shape):
+        axes = rules.get(name, None)
+        if axes is None:
+            out.append(None)
+            continue
+        cand = tuple(a for a in axes
+                     if a in mesh.shape and a not in used and mesh.shape[a] > 1)
+        n = 1
+        for a in cand:
+            n *= mesh.shape[a]
+        if n > 1 and dim % n == 0:
+            out.append(cand if len(cand) > 1 else cand[0])
+            used.update(cand)
+        else:
+            out.append(None)
+    return P(*out)
+
+
+def constraint(x, names: tuple):
+    """with_sharding_constraint under the active mesh; identity without
+    one (so model code needs no mesh plumbing in unit tests)."""
+    mesh = active_mesh()
+    if mesh is None:
+        return x
+    spec = resolve_spec(tuple(names), x.shape)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+# ---------------------------------------------------------------------------
+# parameter specs
+# ---------------------------------------------------------------------------
+
+def _path_str(path) -> str:
+    """Leaf name of a tree_map_with_path key path ('wq', 'k', 'state')."""
+    if not path:
+        return ""
+    last = path[-1]
+    for attr in ("key", "name", "idx"):
+        if hasattr(last, attr):
+            return str(getattr(last, attr))
+    return str(last)
+
+
+def _leaf_spec(path, leaf, overrides: dict) -> P:
+    name = _path_str(path)
+    logical = overrides.get(name, DEFAULT_PARAM_RULES.get(name))
+    shape = tuple(leaf.shape)
+    if logical is None:
+        if len(shape) >= 2:
+            logical = ("fsdp", "model")       # generic matmul weight
+        else:
+            return P(*([None] * len(shape)))
+    # logical names annotate the trailing dims; leading (layer-stack) dims
+    # replicate
+    pad = len(shape) - len(logical)
+    if pad < 0:
+        logical = logical[-len(shape):]
+        pad = 0
+    names = (None,) * pad + tuple(logical)
+    return resolve_spec(names, shape)
+
+
+def param_specs(params, overrides: dict | None = None):
+    """Pytree of PartitionSpec matching ``params`` (ShapeDtypeStructs or
+    arrays). ``overrides``: leaf name -> logical names for trailing dims."""
+    ov = overrides or {}
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: _leaf_spec(path, leaf, ov), params)
+
+
+def named(specs):
+    """PartitionSpec pytree -> NamedSharding pytree on the active mesh."""
+    mesh = active_mesh()
+    if mesh is None:
+        raise RuntimeError("named() requires an active mesh (use_mesh)")
+    return jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s), specs,
+        is_leaf=lambda x: isinstance(x, P))

@@ -1,0 +1,231 @@
+"""Sparse (rAge-k) gradient synchronization — the paper's protocol as a
+data-parallel collective (DESIGN.md §4).
+
+Age state is a pytree of int32 arrays shaped like the params: one age per
+coordinate, bucketed per leaf with the global (r, k) budget split
+proportionally (``core.sparsify.bucket_budgets``). Selection per bucket
+goes through the SAME ``core.strategies`` classes as the FL engine — the
+sharded sync is just another backend of the Strategy API.
+
+Two entry points:
+
+``make_sync_train_step``  — single-program (GSPMD) step: grads are
+    sparsified in place of a dense exchange; the partitioner moves the
+    k-entry payloads. CPU-scale drivers (launch/train.py, examples/).
+
+``make_manual_sync``      — explicit shard_map exchange for production
+    meshes: each data shard selects its k entries per bucket LOCALLY,
+    all-gathers (idx, vals) over the data axes, and scatter-adds. Params
+    must be replicated over the data axes (lower_combo passes
+    rules={"fsdp": None}); the model axes keep their shards untouched.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.experimental.shard_map import shard_map
+from jax.sharding import PartitionSpec as P
+
+from repro.core.sparsify import bucket_budgets
+from repro.core.strategies import make_strategy
+from repro.optim.optimizers import apply_updates
+
+# Indices here are accounted at 4 B: the shard_map exchange physically
+# all-gathers int32 index arrays, so that IS the wire payload of this
+# implementation. The idealized ceil(log2(d)/8) sizing (what an
+# entropy-aware encoding would need — see core.compression.bytes_per_index)
+# applies to the FL protocol accounting, not to this collective.
+_INDEX_BYTES = 4
+
+
+def init_age_state(params):
+    """Age pytree: int32 zeros shaped like every param leaf."""
+    return jax.tree_util.tree_map(
+        lambda p: jnp.zeros(p.shape, jnp.int32), params)
+
+
+def init_age_state_sharded(shapes):
+    """Same as init_age_state but from ShapeDtypeStructs (abstract
+    params); usable under jax.eval_shape for lowering-only paths."""
+    return init_age_state(shapes)
+
+
+def _wire_bytes(dtype) -> int:
+    return jnp.dtype(dtype).itemsize
+
+
+def _leaf_sizes(shapes) -> list:
+    return [int(jnp.prod(jnp.asarray(l.shape))) if l.shape else 1
+            for l in jax.tree_util.tree_leaves(shapes)]
+
+
+def _select_bucket(method: str, flat, age_flat, r_b: int, k_b: int):
+    """One bucket's selection via the Strategy API. Returns
+    (idx (k_b,), vals (k_b,), new_age_flat)."""
+    d_b = flat.shape[0]
+    r_b, k_b = min(r_b, d_b), min(k_b, d_b)
+    strat = make_strategy(method, r=r_b, k=k_b)
+    if method == "rage_k":
+        return strat.select(flat, age_flat)
+    if method in ("top_k",):
+        idx, vals, _ = strat.select(flat, ())
+        return idx, vals, age_flat
+    raise ValueError(
+        f"sparse_sync supports 'rage_k' | 'top_k' | 'dense', got {method!r}"
+        " (stochastic baselines need per-step keys; use the FL engine)")
+
+
+# ---------------------------------------------------------------------------
+# single-program (GSPMD) sync
+# ---------------------------------------------------------------------------
+
+def make_sync_train_step(loss_fn, opt, mesh, *, method: str = "rage_k",
+                         r: int = 0, k: int = 0,
+                         wire_dtype=jnp.bfloat16):
+    """Returns step(params, opt_state, ages, batch) ->
+    (params, opt_state, ages, loss, stats).
+
+    The gradient is replaced by its wire form before the optimizer:
+    dense -> a wire_dtype cast round-trip; sparse -> the k_b selected
+    entries per bucket (everything else zero), ages updated per eq. (2).
+    stats["wire_bytes_per_shard"] counts k_b * (4B index + wire value).
+    """
+    del mesh  # GSPMD path: partitioning is inferred; kept for API parity
+    vb = _wire_bytes(wire_dtype)
+
+    def step(params, opt_state, ages, batch):
+        loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+        leaves, treedef = jax.tree_util.tree_flatten(grads)
+        age_leaves = jax.tree_util.tree_leaves(ages)
+        sizes = [int(l.size) for l in leaves]
+        if method == "dense":
+            synced = [l.astype(wire_dtype).astype(l.dtype) for l in leaves]
+            new_ages = age_leaves
+            wire = sum(sizes) * vb
+        else:
+            budgets = bucket_budgets(sizes, r, k)
+            synced, new_ages = [], []
+            wire = 0
+            for l, a, (r_b, k_b) in zip(leaves, age_leaves, budgets):
+                flat = l.reshape(-1)
+                idx, vals, new_a = _select_bucket(
+                    method, flat, a.reshape(-1), r_b, k_b)
+                vals = vals.astype(wire_dtype).astype(flat.dtype)
+                synced.append(
+                    jnp.zeros_like(flat).at[idx].set(vals).reshape(l.shape))
+                new_ages.append(new_a.reshape(a.shape))
+                wire += min(k_b, int(flat.shape[0])) * (_INDEX_BYTES + vb)
+        synced = jax.tree_util.tree_unflatten(treedef, synced)
+        new_ages = jax.tree_util.tree_unflatten(treedef, new_ages)
+        updates, opt_state = opt.update(synced, opt_state, params)
+        params = apply_updates(params, updates)
+        stats = {"wire_bytes_per_shard": jnp.int32(wire)}
+        return params, opt_state, new_ages, loss, stats
+
+    return step
+
+
+# ---------------------------------------------------------------------------
+# explicit shard_map sync (production meshes)
+# ---------------------------------------------------------------------------
+
+def make_manual_sync(mesh, specs, shapes, *, method: str = "rage_k",
+                     r: int = 0, k: int = 0, wire_dtype=jnp.bfloat16):
+    """Explicit gradient exchange over the mesh's data axes.
+
+    specs/shapes: pytrees of PartitionSpec / ShapeDtypeStruct for the
+    grads (= params). Returns sync(grads, ages) -> (synced, new_ages,
+    stats); the closure exposes ``.age_specs`` (ages sharded like grads).
+
+    Each data shard selects its k_b entries per bucket from its LOCAL
+    gradient (its microbatch's view), all-gathers the (idx, vals)
+    payloads over the data axes, and scatter-adds the union divided by
+    the shard count (a sparse pmean). Ages are updated with the UNION of
+    requested indices — the merged-vector semantics of the paper's
+    cluster age (§II) applied to data shards.
+    """
+    data_axes = tuple(a for a in ("pod", "data") if a in mesh.shape)
+    n_data = 1
+    for a in data_axes:
+        n_data *= mesh.shape[a]
+    sizes = _leaf_sizes(shapes)
+    spec_leaves_for_budget = jax.tree_util.tree_leaves(
+        specs, is_leaf=lambda x: isinstance(x, P))
+
+    def _shard_count(spec) -> int:
+        """Model-axis shards of one leaf (its replica group is 'one
+        client'; params are data-replicated under manual sync)."""
+        n = 1
+        for entry in spec:
+            if entry is None:
+                continue
+            for a in (entry if isinstance(entry, tuple) else (entry,)):
+                n *= mesh.shape.get(a, 1)
+        return n
+
+    if method != "dense":
+        # split each leaf's GLOBAL (r_b, k_b) across its model shards,
+        # so the whole replica group uploads k_b entries, not shards*k_b
+        budgets = []
+        for (r_b, k_b), spec in zip(bucket_budgets(sizes, r, k),
+                                    spec_leaves_for_budget):
+            ns = _shard_count(spec)
+            r_l = max(1, r_b // ns)
+            k_l = max(1, min(r_l, k_b // ns if k_b >= ns else 1))
+            budgets.append((r_l, k_l))
+    else:
+        budgets = [(0, 0)] * len(sizes)
+    vb = _wire_bytes(wire_dtype)
+    spec_leaves = jax.tree_util.tree_leaves(
+        specs, is_leaf=lambda x: isinstance(x, P))
+    treedef = jax.tree_util.tree_structure(shapes)
+
+    def _exchange(*flat_args):
+        n = len(flat_args) // 2
+        g_leaves, age_leaves = flat_args[:n], flat_args[n:]
+        synced, new_ages = [], []
+        wire = 0
+        for g, a, (r_b, k_b) in zip(g_leaves, age_leaves, budgets):
+            flat = g.reshape(-1).astype(jnp.float32)
+            if method == "dense":
+                w = flat.astype(wire_dtype).astype(jnp.float32)
+                if data_axes:
+                    w = jax.lax.pmean(w, data_axes)
+                synced.append(w.reshape(g.shape).astype(g.dtype))
+                new_ages.append(a)
+                wire += flat.shape[0] * vb
+                continue
+            idx, vals, _ = _select_bucket(
+                method, flat, a.reshape(-1), r_b, k_b)
+            vals = vals.astype(wire_dtype)
+            if data_axes:
+                idx = jax.lax.all_gather(idx, data_axes, tiled=True)
+                vals = jax.lax.all_gather(vals, data_axes, tiled=True)
+            dense = jnp.zeros_like(flat).at[idx].add(
+                vals.astype(jnp.float32) / n_data)
+            hit = jnp.zeros(flat.shape, bool).at[idx].set(True)
+            new_a = jnp.where(hit, 0, a.reshape(-1) + 1).astype(jnp.int32)
+            synced.append(dense.reshape(g.shape).astype(g.dtype))
+            new_ages.append(new_a.reshape(a.shape))
+            wire += min(k_b, int(flat.shape[0])) * (_INDEX_BYTES + vb)
+        stats = {"wire_bytes_per_shard": jnp.int32(wire)}
+        return tuple(synced) + tuple(new_ages) + (stats,)
+
+    in_specs = tuple(spec_leaves) * 2
+    out_specs = tuple(spec_leaves) * 2 + ({"wire_bytes_per_shard": P()},)
+    mapped = shard_map(_exchange, mesh=mesh, in_specs=in_specs,
+                       out_specs=out_specs, check_rep=False)
+
+    def sync(grads, ages):
+        g_leaves = jax.tree_util.tree_leaves(grads)
+        age_leaves = jax.tree_util.tree_leaves(ages)
+        out = mapped(*g_leaves, *age_leaves)
+        n = len(g_leaves)
+        synced = jax.tree_util.tree_unflatten(treedef, out[:n])
+        new_ages = jax.tree_util.tree_unflatten(treedef, out[n:2 * n])
+        return synced, new_ages, out[-1]
+
+    sync.age_specs = specs          # ages are sharded exactly like grads
+    return sync

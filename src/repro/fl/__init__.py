@@ -1,1 +1,7 @@
-from repro.fl.simulation import run_fl, FLResult  # noqa: F401
+from repro.fl.engine import (  # noqa: F401
+    DeviceAgeState, FederatedEngine, FLResult, rage_select,
+)
+from repro.fl.simulation import run_fl  # noqa: F401
+from repro.fl.server import (  # noqa: F401
+    GlobalServer, aggregate_sparse, aggregate_sparse_fused,
+)

@@ -1,0 +1,407 @@
+"""FederatedEngine — the unified federated-round API (paper Algorithm 1).
+
+One global round is ONE jitted device program: local phase (H vmapped
+client steps), candidate top-r, age-based index selection, sparse
+aggregation, global update, broadcast. The parameter server's age state
+lives on DEVICE as a jnp pytree (``DeviceAgeState``): per-cluster age
+vectors (eq. 2), per-client request frequencies (eq. 3 inputs), and the
+cluster assignment. Only two things ever cross to host:
+
+  * tiny per-round metrics — losses (N,), requested indices (N, k);
+  * the (N, d) int32 frequency matrix, every M rounds, for DBSCAN
+    clustering (eq. 3) — the one genuinely host-shaped step.
+
+The dense (N, d) float gradient matrix never leaves the accelerator
+(pinned by tests/test_engine_golden.py). Method dispatch goes through
+``core.strategies`` — a new selection rule is a new Strategy, not a new
+``elif``. ``fl.simulation.run_fl`` is a thin compatibility wrapper.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from functools import partial
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import RAgeKConfig
+from repro.core.age import AgeState
+from repro.core.clustering import cluster_clients, connectivity_matrix
+from repro.core.compression import bytes_per_index, bytes_per_round
+from repro.core.strategies import make_strategy
+from repro.data.pipeline import BatchIterator
+from repro.fl import client as C
+from repro.fl.server import aggregate_sparse, aggregate_sparse_fused
+from repro.models import paper_nets as P
+from repro.optim.optimizers import adam, sgd, apply_updates
+
+
+class DeviceAgeState(NamedTuple):
+    """PS age state as a device pytree (threaded through the jitted round).
+
+    cluster_age: (N, d) int32 — row c is cluster c's age vector (rows
+                 beyond the live cluster count are unused; clusters <= N).
+    freq:        (N, d) int32 — per-client request counts (eq. 3 inputs).
+    cluster_of:  (N,) int32   — cluster id per client (singletons at t=0).
+    """
+
+    cluster_age: jnp.ndarray
+    freq: jnp.ndarray
+    cluster_of: jnp.ndarray
+
+    @classmethod
+    def create(cls, d: int, n_clients: int) -> "DeviceAgeState":
+        return cls(cluster_age=jnp.zeros((n_clients, d), jnp.int32),
+                   freq=jnp.zeros((n_clients, d), jnp.int32),
+                   cluster_of=jnp.arange(n_clients, dtype=jnp.int32))
+
+
+@dataclass
+class FLResult:
+    rounds: list = field(default_factory=list)       # global round index
+    loss: list = field(default_factory=list)
+    acc: list = field(default_factory=list)
+    uplink_bytes: list = field(default_factory=list) # cumulative
+    cluster_labels: list = field(default_factory=list)
+    heatmaps: dict = field(default_factory=dict)     # round -> (N,N)
+    requested: list = field(default_factory=list)    # per round: (N,k)|None
+    wall_s: float = 0.0
+
+    def summary(self) -> dict:
+        return {
+            "final_acc": self.acc[-1] if self.acc else float("nan"),
+            "final_loss": self.loss[-1] if self.loss else float("nan"),
+            "total_uplink_mb": (self.uplink_bytes[-1] / 2**20
+                                if self.uplink_bytes else 0.0),
+            "wall_s": self.wall_s,
+        }
+
+
+def _build_model(kind: str, key):
+    if kind == "mlp":
+        params = P.mlp_init(key)
+        state: dict = {}
+
+        def apply_loss(params, state, batch):
+            x, y = batch
+            logits = P.mlp_apply(params, x)
+            return C.softmax_xent(logits, y), state
+
+        def predict(params, state, x):
+            return P.mlp_apply(params, x)
+        return params, state, apply_loss, predict
+    if kind == "cnn":
+        params, state = P.cnn_init(key)
+
+        def apply_loss(params, state, batch):
+            x, y = batch
+            logits, new_state = P.cnn_apply(params, state, x, train=True)
+            return C.softmax_xent(logits, y), new_state
+
+        def predict(params, state, x):
+            logits, _ = P.cnn_apply(params, state, x, train=False)
+            return logits
+        return params, state, apply_loss, predict
+    raise ValueError(kind)
+
+
+# ---------------------------------------------------------------------------
+# device-side rAge-k selection (the PS control loop, on accelerator)
+# ---------------------------------------------------------------------------
+
+@partial(jax.jit, static_argnames=("r", "k", "disjoint"))
+def rage_select(g: jnp.ndarray, age: DeviceAgeState, *, r: int, k: int,
+                disjoint: bool = True):
+    """Algorithm 1 steps 2-3 + eq. (2), entirely on device.
+
+    g: (N, d) client gradients. Clients are processed in order; within a
+    cluster, indices already requested this round are excluded for the
+    remaining members (disjointness, §II). Selection reads ROUND-START
+    ages for every client; eq. (2) is then applied sequentially per
+    member (+1 per member, requested set to 0) — bit-identical to the
+    host ``core.protocol.ParameterServer`` reference.
+
+    Returns (idx (N, k) int32, new DeviceAgeState).
+    """
+    n, d = g.shape
+    cands = jax.vmap(lambda gi: jax.lax.top_k(jnp.abs(gi), r)[1])(g)
+
+    def sel_body(taken, inp):
+        cand, cl = inp
+        ages = age.cluster_age[cl, cand]
+        if disjoint:
+            ages = jnp.where(taken[cl, cand], jnp.int32(-1), ages)
+        _, sel = jax.lax.top_k(ages, k)             # stable: |g| tie-break
+        idx = cand[sel]
+        if disjoint:
+            taken = taken.at[cl, idx].set(True)
+        return taken, idx
+
+    taken0 = jnp.zeros((n, d), bool)
+    _, idx = jax.lax.scan(sel_body, taken0, (cands, age.cluster_of))
+
+    def age_body(ca, inp):
+        idx_i, cl = inp
+        row = ca[cl] + 1
+        row = row.at[idx_i].set(0)
+        return ca.at[cl].set(row), None
+
+    cluster_age, _ = jax.lax.scan(age_body, age.cluster_age,
+                                  (idx, age.cluster_of))
+    freq = age.freq.at[jnp.arange(n)[:, None], idx].add(1)
+    return idx.astype(jnp.int32), DeviceAgeState(cluster_age, freq,
+                                                 age.cluster_of)
+
+
+def recluster(age: DeviceAgeState, eps: float, min_pts: int) -> DeviceAgeState:
+    """Eq. (3) similarity -> DBSCAN -> merge/reset of cluster age vectors.
+
+    The ONE host round-trip of the control loop (every M rounds): the
+    (N, d) int32 freq matrix comes down, labels go back up. Merge/reset
+    semantics are delegated to ``core.age.AgeState.apply_clusters`` so
+    they exist exactly once."""
+    n, d = age.freq.shape
+    freq = np.asarray(age.freq)
+    labels = cluster_clients(freq, eps, min_pts)
+    st = AgeState(d, n)
+    st.cluster_of = np.asarray(age.cluster_of).astype(np.int64)
+    ca = np.asarray(age.cluster_age)
+    st.ages = {int(c): ca[int(c)].copy() for c in np.unique(st.cluster_of)}
+    st.apply_clusters(labels)
+    new_ca = np.zeros((n, d), np.int32)
+    for c, v in st.ages.items():
+        new_ca[c] = v
+    return DeviceAgeState(
+        cluster_age=jnp.asarray(new_ca), freq=age.freq,
+        cluster_of=jnp.asarray(st.cluster_of, dtype=jnp.int32))
+
+
+# ---------------------------------------------------------------------------
+# the engine
+# ---------------------------------------------------------------------------
+
+class FederatedEngine:
+    """Owns the paper's round loop as a single jitted step.
+
+    Usage::
+
+        engine = FederatedEngine("mlp", shards, test, hp, seed=0)
+        result = engine.run(rounds=200, eval_every=5)
+
+    or round-at-a-time via :meth:`step` for custom drivers. ``hp.method``
+    picks the Strategy ('rage_k' | 'rtop_k' | 'top_k' | 'random_k' |
+    'dense'); all five share the same engine, state layout and metrics.
+    """
+
+    def __init__(self, kind: str, shards: list, test: tuple,
+                 hp: RAgeKConfig, *, seed: int = 0, ef: bool = False,
+                 global_opt: str = "adam", aggregate_impl: str = "auto"):
+        if hp.method in ("rage_k", "rtop_k") and hp.r < hp.k:
+            raise ValueError(
+                f"method {hp.method!r} selects k of the top-r candidates; "
+                f"need r >= k (got r={hp.r}, k={hp.k})")
+        self.hp = hp
+        self.kind = kind
+        self.n = len(shards)
+        self.seed = seed
+        self.ef = ef
+        key = jax.random.PRNGKey(seed)
+        g_params, state0, apply_loss, predict = _build_model(kind, key)
+        self._predict = predict
+        self._state0 = state0
+        self.d = sum(int(x.size)
+                     for x in jax.tree_util.tree_leaves(g_params))
+        self._unflatten = C.unflattener(g_params)
+        self._strategy = make_strategy(hp.method, r=hp.r, k=hp.k)
+        self._local_phase = C.make_local_phase(apply_loss, hp.lr)
+        self._g_opt = adam(hp.lr) if global_opt == "adam" else sgd(hp.lr)
+        if aggregate_impl == "auto":
+            aggregate_impl = ("pallas" if jax.default_backend() == "tpu"
+                              else "jnp")
+        self._agg_impl = aggregate_impl
+        # uploaded values take the protocol's wire form (fp32 paper
+        # default; bf16 beyond-paper) — the cast round-trip below keeps
+        # curves and the byte accounting talking about the same payload
+        self._wire_dtype = jnp.dtype(hp.wire_dtype)
+
+        # --- device state --------------------------------------------------
+        n = self.n
+        self.g_params = g_params
+        self.g_opt_state = self._g_opt.init(g_params)
+        self.params_s = C.broadcast_global(g_params, n)
+        self.opt_s = jax.vmap(adam(hp.lr).init)(self.params_s)
+        self.state_s = C.stack_clients([state0] * n) if state0 else {}
+        self.age = DeviceAgeState.create(self.d, n)
+        self.ef_mem = (jnp.zeros((n, self.d), jnp.float32) if ef else None)
+        self._key = jax.random.PRNGKey(seed + 99)
+        self.round_idx = 0
+
+        # --- host-side input pipeline + per-client eval sets ---------------
+        self._iters = [BatchIterator(x, y, hp.batch_size, seed=seed + 17 * i)
+                       for i, (x, y) in enumerate(shards)]
+        xte, yte = test
+        self._eval_sets = []
+        for (xs, ys) in shards:
+            labels = np.unique(ys)
+            sel = np.isin(yte, labels)
+            self._eval_sets.append((jnp.asarray(xte[sel][:1024]),
+                                    jnp.asarray(yte[sel][:1024])))
+
+        # --- uplink accounting (per client per round) -----------------------
+        ib = bytes_per_index(self.d)
+        if hp.method == "dense":
+            self._per_client_bytes = bytes_per_round(
+                0, self.d, dense=True, wire_dtype=hp.wire_dtype)
+        elif hp.method == "rage_k":
+            # + the top-r candidate report uploaded for PS selection
+            self._per_client_bytes = bytes_per_round(
+                hp.k, self.d, wire_dtype=hp.wire_dtype) + hp.r * ib
+        else:
+            self._per_client_bytes = bytes_per_round(
+                hp.k, self.d, wire_dtype=hp.wire_dtype)
+        self.cum_bytes = 0
+
+        self._round = jax.jit(self._round_impl)
+        self._eval = jax.jit(self._eval_impl)
+
+    # ------------------------------------------------------------------
+    # jitted bodies
+    # ------------------------------------------------------------------
+    def _aggregate(self, idx, vals):
+        if self._agg_impl == "pallas":
+            # The kernel always produces its hit-based age lane in the
+            # same pass as the scatter; the engine only consumes the
+            # dense sum (cluster ages follow the sequential eq.-2
+            # semantics in rage_select, which the hit-based update
+            # cannot express for multi-member clusters).
+            dense, _ = aggregate_sparse_fused(
+                idx, vals, jnp.zeros((self.d,), jnp.int32), impl="pallas")
+            return dense
+        return aggregate_sparse(idx, vals, self.d)
+
+    def _round_impl(self, g_params, g_opt_state, params_s, opt_s, state_s,
+                    age, ef_mem, key, bx, by):
+        hp = self.hp
+        params_s, opt_s, state_s2, g, losses = self._local_phase(
+            params_s, opt_s, state_s if state_s else {}, (bx, by))
+        if state_s:
+            state_s = state_s2
+        if ef_mem is not None:
+            g = g + ef_mem
+
+        key, sub = jax.random.split(key)
+        method = hp.method
+        if method == "rage_k":
+            idx, age = rage_select(g, age, r=hp.r, k=hp.k,
+                                   disjoint=hp.disjoint_in_cluster)
+        elif method == "dense":
+            idx = None
+        elif method in ("rtop_k", "random_k"):
+            keys = jax.random.split(sub, self.n)
+            idx, _, _ = jax.vmap(self._strategy.select)(g, keys)
+        else:                                     # top_k — deterministic
+            idx, _, _ = jax.vmap(
+                lambda gi: self._strategy.select(gi, ()))(g)
+
+        if idx is None:
+            gw = g.astype(self._wire_dtype).astype(g.dtype)
+            g_sum = gw.sum(0)
+            sent = gw
+        else:
+            vals = jnp.take_along_axis(g, idx, axis=1)
+            vals = vals.astype(self._wire_dtype).astype(g.dtype)
+            g_sum = self._aggregate(idx, vals)
+            sent = jax.vmap(
+                lambda i, v: jnp.zeros((self.d,), g.dtype).at[i].set(v)
+            )(idx, vals)
+        if ef_mem is not None:
+            ef_mem = g - sent
+
+        updates, g_opt_state = self._g_opt.update(
+            self._unflatten(g_sum), g_opt_state, g_params)
+        g_params = apply_updates(g_params, updates)
+        params_s = C.broadcast_global(g_params, self.n)
+
+        metrics = {"losses": losses,
+                   "idx": idx if idx is not None else jnp.zeros((), jnp.int32)}
+        return (g_params, g_opt_state, params_s, opt_s, state_s, age,
+                ef_mem, key, metrics)
+
+    def _eval_impl(self, params_s, state_s):
+        accs = []
+        for i in range(self.n):
+            p_i = jax.tree_util.tree_map(lambda x: x[i], params_s)
+            s_i = (jax.tree_util.tree_map(lambda x: x[i], state_s)
+                   if state_s else self._state0)
+            xe, ye = self._eval_sets[i]
+            logits = self._predict(p_i, s_i, xe)
+            accs.append(jnp.mean(
+                (jnp.argmax(logits, -1) == ye).astype(jnp.float32)))
+        return jnp.stack(accs)
+
+    # ------------------------------------------------------------------
+    # host control plane
+    # ------------------------------------------------------------------
+    def _next_batches(self):
+        hp = self.hp
+        batches = [[next(self._iters[i]) for _ in range(hp.H)]
+                   for i in range(self.n)]
+        bx = jnp.asarray(np.stack([[b[0] for b in bc] for bc in batches]))
+        by = jnp.asarray(np.stack([[b[1] for b in bc] for bc in batches]))
+        return bx, by
+
+    def step(self) -> dict:
+        """Advance one global round. Returns {"losses": (N,), "idx":
+        (N, k)|None} — the only per-round device->host traffic."""
+        bx, by = self._next_batches()
+        (self.g_params, self.g_opt_state, self.params_s, self.opt_s,
+         self.state_s, self.age, self.ef_mem, self._key, metrics) = \
+            self._round(self.g_params, self.g_opt_state, self.params_s,
+                        self.opt_s, self.state_s, self.age, self.ef_mem,
+                        self._key, bx, by)
+        self.round_idx += 1
+        self.cum_bytes += self._per_client_bytes * self.n
+        if self.hp.method == "rage_k" and self.round_idx % self.hp.M == 0:
+            self._recluster()
+        idx = (np.asarray(metrics["idx"])
+               if self.hp.method != "dense" else None)
+        return {"losses": np.asarray(metrics["losses"]), "idx": idx}
+
+    def _recluster(self):
+        self.age = recluster(self.age, self.hp.eps, self.hp.min_pts)
+
+    @property
+    def cluster_of(self) -> np.ndarray:
+        return np.asarray(self.age.cluster_of).astype(np.int64)
+
+    def eval_acc(self) -> float:
+        return float(jnp.mean(self._eval(self.params_s, self.state_s)))
+
+    def run(self, rounds: int, *, eval_every: int = 5, heatmap_at=(),
+            verbose: bool = False) -> FLResult:
+        t0 = time.time()
+        res = FLResult()
+        end = self.round_idx + rounds
+        for t in range(self.round_idx + 1, end + 1):
+            metrics = self.step()
+            res.requested.append(metrics["idx"])
+            if t % eval_every == 0 or t == end:
+                acc = self.eval_acc()
+                res.rounds.append(t)
+                res.loss.append(float(metrics["losses"].mean()))
+                res.acc.append(acc)
+                res.uplink_bytes.append(self.cum_bytes)
+                res.cluster_labels.append(self.cluster_of)
+                if verbose:
+                    print(f"[{self.hp.method}] round {t:4d} "
+                          f"loss={metrics['losses'].mean():.4f} "
+                          f"acc={acc:.4f} "
+                          f"upl={self.cum_bytes/2**20:.2f}MB")
+            if t in heatmap_at:
+                res.heatmaps[t] = connectivity_matrix(
+                    np.asarray(self.age.freq))
+        res.wall_s = time.time() - t0
+        return res

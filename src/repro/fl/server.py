@@ -22,6 +22,29 @@ def aggregate_sparse(idx: jnp.ndarray, vals: jnp.ndarray, d: int):
         vals.reshape(-1).astype(jnp.float32))
 
 
+def aggregate_sparse_fused(idx: jnp.ndarray, vals: jnp.ndarray,
+                           age: jnp.ndarray, *, impl: str = "auto"):
+    """Fused scatter-add + hit-based eq. (2) age update.
+
+    idx/vals: (N, k) or flat (NK,); age: (d,) int32. Returns
+    (dense (d,) f32, new_age) with new_age = 0 where any client requested
+    the index, age+1 elsewhere.
+
+    impl: 'pallas' routes through the one-hot-matmul TPU kernel
+    (``kernels.sparse_aggregate``, interpret-mode on CPU), 'jnp' is the
+    XLA scatter fallback, 'auto' picks pallas only on a real TPU backend
+    (interpret mode is Python-speed — wrong default for CPU tests).
+    """
+    use_pallas = impl == "pallas" or (
+        impl == "auto" and jax.default_backend() == "tpu")
+    if use_pallas:
+        from repro.kernels import ops
+        return ops.sparse_aggregate(idx.reshape(-1), vals.reshape(-1), age)
+    dense = aggregate_sparse(idx, vals, age.shape[0])
+    hit = jnp.zeros(age.shape, bool).at[idx.reshape(-1)].set(True)
+    return dense, jnp.where(hit, 0, age + 1).astype(age.dtype)
+
+
 class GlobalServer:
     """Global model + optimizer at the PS."""
 

@@ -1,78 +1,21 @@
-"""End-to-end FL simulation (paper Algorithm 1) on the paper's two models
-with the paper's non-i.i.d. splits.
+"""Compatibility wrapper around :mod:`repro.fl.engine`.
 
-Methods: rage_k (ours/paper), rtop_k, top_k, random_k, dense.
-Tracks per-round: mean client loss, mean per-client accuracy (each client
-evaluated on test data of its OWN labels, as the paper averages over
-users), uplink bytes, cluster labels, connectivity heatmaps.
+``run_fl`` keeps the original end-to-end signature (paper Algorithm 1 on
+the paper's two models with the paper's non-i.i.d. splits) but the round
+loop now lives in ``FederatedEngine`` — a single jitted device step with
+device-resident age state and Strategy-based method dispatch. New code
+should construct the engine directly::
+
+    from repro.fl import FederatedEngine
+    engine = FederatedEngine("mlp", shards, test, hp, seed=0)
+    res = engine.run(rounds=200, eval_every=5)
 """
 from __future__ import annotations
 
-import time
-from dataclasses import dataclass, field
-
-import jax
-import jax.numpy as jnp
-import numpy as np
-
 from repro.configs.base import RAgeKConfig
-from repro.core.clustering import connectivity_matrix
-from repro.core.compression import bytes_per_round
-from repro.core.protocol import ParameterServer
-from repro.core.sparsify import top_k as jt_top_k
-from repro.data.pipeline import BatchIterator
-from repro.fl import client as C
-from repro.fl.server import GlobalServer, aggregate_sparse
-from repro.models import paper_nets as P
-from repro.optim.error_feedback import ef_init
-
-
-@dataclass
-class FLResult:
-    rounds: list = field(default_factory=list)       # global round index
-    loss: list = field(default_factory=list)
-    acc: list = field(default_factory=list)
-    uplink_bytes: list = field(default_factory=list) # cumulative
-    cluster_labels: list = field(default_factory=list)
-    heatmaps: dict = field(default_factory=dict)     # round -> (N,N)
-    wall_s: float = 0.0
-
-    def summary(self) -> dict:
-        return {
-            "final_acc": self.acc[-1] if self.acc else float("nan"),
-            "final_loss": self.loss[-1] if self.loss else float("nan"),
-            "total_uplink_mb": (self.uplink_bytes[-1] / 2**20
-                                if self.uplink_bytes else 0.0),
-            "wall_s": self.wall_s,
-        }
-
-
-def _build_model(kind: str, key):
-    if kind == "mlp":
-        params = P.mlp_init(key)
-        state: dict = {}
-
-        def apply_loss(params, state, batch):
-            x, y = batch
-            logits = P.mlp_apply(params, x)
-            return C.softmax_xent(logits, y), state
-
-        def predict(params, state, x):
-            return P.mlp_apply(params, x)
-        return params, state, apply_loss, predict
-    if kind == "cnn":
-        params, state = P.cnn_init(key)
-
-        def apply_loss(params, state, batch):
-            x, y = batch
-            logits, new_state = P.cnn_apply(params, state, x, train=True)
-            return C.softmax_xent(logits, y), new_state
-
-        def predict(params, state, x):
-            logits, _ = P.cnn_apply(params, state, x, train=False)
-            return logits
-        return params, state, apply_loss, predict
-    raise ValueError(kind)
+from repro.fl.engine import (  # noqa: F401  (re-exported for back-compat)
+    DeviceAgeState, FederatedEngine, FLResult, _build_model,
+)
 
 
 def run_fl(kind: str, shards: list, test: tuple, hp: RAgeKConfig, *,
@@ -81,121 +24,7 @@ def run_fl(kind: str, shards: list, test: tuple, hp: RAgeKConfig, *,
            verbose: bool = False) -> FLResult:
     """shards: [(x_i, y_i)] per client. test: (x_test, y_test).
     `rounds` counts GLOBAL iterations (each = hp.H local steps)."""
-    t0 = time.time()
-    key = jax.random.PRNGKey(seed)
-    n = len(shards)
-    g_params, state0, apply_loss, predict = _build_model(kind, key)
-    d = sum(int(x.size) for x in jax.tree_util.tree_leaves(g_params))
-    unflatten = C.unflattener(g_params)
-
-    server = GlobalServer(g_params, opt=global_opt, lr=hp.lr)
-    ps = ParameterServer(d, n, hp)
-    local_phase = C.make_local_phase(apply_loss, hp.lr)
-
-    params_s = C.broadcast_global(server.params, n)
-    opt0 = C.stack_clients([jax.tree_util.tree_map(
-        lambda x: jnp.zeros(x.shape, jnp.float32), g_params)] * n)
-    from repro.optim.optimizers import adam as _adam, OptState
-    opt_s = jax.vmap(_adam(hp.lr).init)(params_s)
-    state_s = C.stack_clients([state0] * n) if state0 else {}
-    ef_mem = np.zeros((n, d), np.float32) if ef else None
-
-    iters = [BatchIterator(x, y, hp.batch_size, seed=seed + 17 * i)
-             for i, (x, y) in enumerate(shards)]
-    # per-client eval subsets (own labels)
-    xte, yte = test
-    eval_sets = []
-    for (xs, ys) in shards:
-        labels = np.unique(ys)
-        sel = np.isin(yte, labels)
-        eval_sets.append((jnp.asarray(xte[sel][:1024]),
-                          jnp.asarray(yte[sel][:1024])))
-
-    topr = jax.jit(jax.vmap(lambda g: jax.lax.top_k(jnp.abs(g), hp.r)[1]))
-    topk_vals = jax.jit(jax.vmap(lambda g, i: g[i]))
-
-    @jax.jit
-    def eval_acc(params_s):
-        accs = []
-        for i in range(n):
-            p_i = jax.tree_util.tree_map(lambda x: x[i], params_s)
-            s_i = (jax.tree_util.tree_map(lambda x: x[i], state_s)
-                   if state_s else state0)
-            logits = predict(p_i, s_i, eval_sets[i][0])
-            accs.append(jnp.mean(
-                (jnp.argmax(logits, -1) == eval_sets[i][1]).astype(jnp.float32)))
-        return jnp.stack(accs)
-
-    res = FLResult()
-    cum_bytes = 0
-    rng = np.random.default_rng(seed + 99)
-
-    for t in range(1, rounds + 1):
-        # ---- H local steps per client ----
-        batches = [[next(iters[i]) for _ in range(hp.H)] for i in range(n)]
-        bx = jnp.asarray(np.stack([[b[0] for b in bc] for bc in batches]))
-        by = jnp.asarray(np.stack([[b[1] for b in bc] for bc in batches]))
-        params_s, opt_s, state_s2, flat_grads, losses = local_phase(
-            params_s, opt_s, state_s if state_s else {}, (bx, by))
-        if state_s:
-            state_s = state_s2
-        g_np = np.asarray(flat_grads, np.float32)             # (N, d)
-        if ef is not None and ef_mem is not None:
-            g_np = g_np + ef_mem
-
-        # ---- sparsify + request (method dispatch) ----
-        if hp.method == "rage_k":
-            cands = np.asarray(topr(jnp.asarray(g_np)))        # (N, r)
-            rnd = ps.select_indices({i: cands[i] for i in range(n)})
-            idx = np.stack([rnd.requested[i] for i in range(n)])
-            ps.finish_round(rnd)
-            per_client = bytes_per_round(hp.k, d) + hp.r * 4   # + r-report
-        elif hp.method in ("rtop_k", "random_k"):
-            idx = np.empty((n, hp.k), np.int64)
-            for i in range(n):
-                if hp.method == "rtop_k":
-                    cand = np.argsort(-np.abs(g_np[i]))[: hp.r]
-                    idx[i] = rng.choice(cand, hp.k, replace=False)
-                else:
-                    idx[i] = rng.choice(d, hp.k, replace=False)
-            per_client = bytes_per_round(hp.k, d)
-        elif hp.method == "top_k":
-            idx = np.argsort(-np.abs(g_np))[:, : hp.k]
-            per_client = bytes_per_round(hp.k, d)
-        elif hp.method == "dense":
-            idx = None
-            per_client = bytes_per_round(0, d, dense=True)
-        else:
-            raise ValueError(hp.method)
-
-        # ---- aggregate + global update + broadcast ----
-        if idx is None:
-            g_sum = jnp.asarray(g_np.sum(0))
-            sent = g_np
-        else:
-            vals = np.take_along_axis(g_np, idx, axis=1)
-            g_sum = aggregate_sparse(jnp.asarray(idx), jnp.asarray(vals), d)
-            sent = np.zeros_like(g_np)
-            np.put_along_axis(sent, idx, vals, axis=1)
-        if ef_mem is not None:
-            ef_mem = g_np - sent
-        server.apply_gradient(unflatten(g_sum))
-        params_s = C.broadcast_global(server.params, n)
-        cum_bytes += per_client * n
-
-        # ---- bookkeeping ----
-        if t % eval_every == 0 or t == rounds:
-            acc = float(jnp.mean(eval_acc(params_s)))
-            res.rounds.append(t)
-            res.loss.append(float(losses.mean()))
-            res.acc.append(acc)
-            res.uplink_bytes.append(cum_bytes)
-            res.cluster_labels.append(ps.age.cluster_of.copy())
-            if verbose:
-                print(f"[{hp.method}] round {t:4d} loss={losses.mean():.4f} "
-                      f"acc={acc:.4f} upl={cum_bytes/2**20:.2f}MB")
-        if t in heatmap_at:
-            res.heatmaps[t] = connectivity_matrix(ps.age.freq)
-
-    res.wall_s = time.time() - t0
-    return res
+    engine = FederatedEngine(kind, shards, test, hp, seed=seed, ef=ef,
+                             global_opt=global_opt)
+    return engine.run(rounds, eval_every=eval_every, heatmap_at=heatmap_at,
+                      verbose=verbose)

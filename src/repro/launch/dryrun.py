@@ -87,8 +87,17 @@ def roofline_terms(flops_per_dev: float, bytes_per_dev: float,
     }
 
 
-def _metrics(compiled) -> dict:
+def cost_dict(compiled) -> dict:
+    """compiled.cost_analysis() returns [dict] on jax 0.4.x, dict on
+    newer versions — normalize to a dict."""
     ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0] if ca else {}
+    return ca
+
+
+def _metrics(compiled) -> dict:
+    ca = cost_dict(compiled)
     coll = collective_bytes(compiled.as_text())
     return {"flops": float(ca.get("flops", 0.0)),
             "bytes": float(ca.get("bytes accessed", 0.0)),

@@ -14,7 +14,7 @@ import numpy as np
 from repro.configs.base import RAgeKConfig
 from repro.data.federated import paper_cifar_split, paper_mnist_split
 from repro.data.synthetic import cifar10_like, mnist_like
-from repro.fl.simulation import run_fl
+from repro.fl import FederatedEngine
 
 
 def main():
@@ -35,6 +35,10 @@ def main():
     ap.add_argument("--ef", action="store_true", help="error feedback")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--out", default=None, help="write curves JSON here")
+    ap.add_argument("--aggregate", default="auto",
+                    choices=("auto", "jnp", "pallas"),
+                    help="sparse-aggregation backend (pallas = fused "
+                         "scatter-add kernel; auto picks it on TPU)")
     args = ap.parse_args()
 
     if args.dataset == "mnist":
@@ -65,10 +69,10 @@ def main():
         defaults["batch_size"] = args.batch
     hp = RAgeKConfig(method=args.method, **defaults)
 
-    res = run_fl(kind, shards, test, hp, rounds=args.rounds,
-                 eval_every=max(args.rounds // 20, 1),
-                 heatmap_at=(1, args.rounds), seed=args.seed,
-                 ef=args.ef, verbose=True)
+    engine = FederatedEngine(kind, shards, test, hp, seed=args.seed,
+                             ef=args.ef, aggregate_impl=args.aggregate)
+    res = engine.run(args.rounds, eval_every=max(args.rounds // 20, 1),
+                     heatmap_at=(1, args.rounds), verbose=True)
     print("summary:", res.summary())
     print("final clusters:", res.cluster_labels[-1].tolist())
     if args.out:

@@ -9,14 +9,23 @@ state (the dry-run forces 512 host devices BEFORE any jax import).
 from __future__ import annotations
 
 import jax
-from jax.sharding import AxisType
+
+try:  # jax >= 0.5 spells explicit/auto axis kinds; 0.4.x has none
+    from jax.sharding import AxisType
+except ImportError:  # pragma: no cover - version-dependent
+    AxisType = None
+
+
+def _mk_mesh(shape, axes):
+    if AxisType is None:
+        return jax.make_mesh(shape, axes)
+    return jax.make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(axes))
 
 
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes,
-                         axis_types=(AxisType.Auto,) * len(axes))
+    return _mk_mesh(shape, axes)
 
 
 def make_host_mesh(data: int = 1, model: int = 1):
@@ -24,8 +33,7 @@ def make_host_mesh(data: int = 1, model: int = 1):
     n = len(jax.devices())
     data = min(data, n)
     model = max(1, min(model, n // max(data, 1)))
-    return jax.make_mesh((data, model), ("data", "model"),
-                         axis_types=(AxisType.Auto,) * 2)
+    return _mk_mesh((data, model), ("data", "model"))
 
 
 # hardware constants for the roofline (TPU v5e)

@@ -32,6 +32,28 @@ def test_sparse_aggregate_duplicates_accumulate():
     assert int(na[3]) == 0 and int(na[0]) == 1
 
 
+@pytest.mark.parametrize("impl", ["pallas", "jnp"])
+def test_fused_aggregate_parity_with_fl_server(impl):
+    """The FederatedEngine aggregation path (fl.server.aggregate_sparse_fused,
+    pallas kernel or jnp fallback) matches the plain fl.server.aggregate_sparse
+    sum and the hit-based eq. (2) age update."""
+    from repro.fl.server import aggregate_sparse, aggregate_sparse_fused
+    key = jax.random.PRNGKey(5)
+    n, k, d = 10, 12, 1000
+    k1, k2, k3 = jax.random.split(key, 3)
+    idx = jax.random.randint(k1, (n, k), 0, d, jnp.int32)
+    vals = jax.random.normal(k2, (n, k))
+    age = jax.random.randint(k3, (d,), 0, 50, jnp.int32)
+    dense, new_age = aggregate_sparse_fused(idx, vals, age, impl=impl)
+    ref_dense = aggregate_sparse(idx, vals, d)
+    np.testing.assert_allclose(np.asarray(dense), np.asarray(ref_dense),
+                               rtol=1e-5, atol=1e-5)
+    hit = np.zeros(d, bool)
+    hit[np.asarray(idx).reshape(-1)] = True
+    ref_age = np.where(hit, 0, np.asarray(age) + 1)
+    np.testing.assert_array_equal(np.asarray(new_age), ref_age)
+
+
 @pytest.mark.parametrize("d", [4096, 8192, 12_288])
 @pytest.mark.parametrize("scale_pow", [-12, 0, 7])
 def test_maghist_sweep(d, scale_pow):

@@ -1,0 +1,102 @@
+"""Unit tests for the Strategy protocol (core.strategies) and the wire
+accounting (core.compression.bytes_per_round)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import sparsify as S
+from repro.core.compression import (bytes_per_index, bytes_per_round,
+                                    value_bytes_of)
+from repro.core.strategies import (Dense, RAgeK, RandomK, RTopK, Strategy,
+                                   TopK, make_strategy)
+
+
+def test_factory_round_trips_names():
+    for m in ("rage_k", "rtop_k", "top_k", "random_k", "dense"):
+        strat = make_strategy(m, r=8, k=4)
+        assert strat.name == m
+        assert isinstance(strat, Strategy)
+    with pytest.raises(ValueError):
+        make_strategy("nope")
+
+
+def test_topk_select_matches_functional():
+    g = jax.random.normal(jax.random.PRNGKey(0), (64,))
+    strat = TopK(k=8)
+    idx, vals, _ = strat.select(g, strat.init_state(64))
+    sparse_ref, idx_ref = S.top_k(g, 8)
+    np.testing.assert_array_equal(np.asarray(idx), np.asarray(idx_ref))
+    np.testing.assert_allclose(np.asarray(vals), np.asarray(g)[idx_ref])
+
+
+def test_rage_k_select_matches_functional():
+    g = jax.random.normal(jax.random.PRNGKey(1), (64,))
+    age = jax.random.randint(jax.random.PRNGKey(2), (64,), 0, 5, jnp.int32)
+    strat = RAgeK(r=16, k=4)
+    idx, vals, new_age = strat.select(g, age)
+    sparse_ref, idx_ref, age_ref = S.rage_k(g, age, r=16, k=4)
+    np.testing.assert_array_equal(np.asarray(idx), np.asarray(idx_ref))
+    np.testing.assert_array_equal(np.asarray(new_age), np.asarray(age_ref))
+
+
+def test_rtop_k_within_candidates_and_key_advances():
+    g = jax.random.normal(jax.random.PRNGKey(3), (128,))
+    strat = RTopK(r=16, k=4)
+    key = strat.init_state(128, jax.random.PRNGKey(7))
+    _, cand = jax.lax.top_k(jnp.abs(g), 16)
+    idx1, _, key2 = strat.select(g, key)
+    idx2, _, _ = strat.select(g, key2)
+    assert set(np.asarray(idx1).tolist()) <= set(np.asarray(cand).tolist())
+    assert not np.array_equal(np.asarray(key), np.asarray(key2))
+    # different key -> (almost surely) different draw
+    assert not np.array_equal(np.asarray(idx1), np.asarray(idx2))
+
+
+def test_random_k_unique_indices():
+    strat = RandomK(k=16)
+    idx, _, _ = strat.select(jnp.ones(64), jax.random.PRNGKey(0))
+    assert len(set(np.asarray(idx).tolist())) == 16
+
+
+def test_dense_identity():
+    g = jnp.arange(8.0)
+    idx, vals, _ = Dense().select(g, ())
+    np.testing.assert_array_equal(np.asarray(idx), np.arange(8))
+    np.testing.assert_allclose(np.asarray(vals), np.asarray(g))
+
+
+def test_select_is_jittable_and_vmappable():
+    g = jax.random.normal(jax.random.PRNGKey(0), (4, 64))
+    strat = RAgeK(r=16, k=4)
+    ages = jnp.zeros((4, 64), jnp.int32)
+    idx, vals, new_age = jax.jit(jax.vmap(strat.select))(g, ages)
+    assert idx.shape == (4, 4) and new_age.shape == (4, 64)
+
+
+# ---------------------------------------------------------------------------
+# wire accounting
+# ---------------------------------------------------------------------------
+
+def test_bytes_per_index_log2_sizing():
+    assert bytes_per_index(200) == 1          # < 2^8
+    assert bytes_per_index(40_000) == 2       # < 2^16
+    assert bytes_per_index(1 << 16) == 2
+    assert bytes_per_index((1 << 16) + 1) == 3
+    assert bytes_per_index(1 << 30) == 4
+
+
+def test_bytes_per_round_honors_wire_dtype():
+    d, k = 39_760, 10                          # mnist MLP scale: 2B indices
+    assert value_bytes_of("float32") == 4
+    assert value_bytes_of("bfloat16") == 2
+    assert bytes_per_round(k, d, wire_dtype="float32") == k * (4 + 2)
+    assert bytes_per_round(k, d, wire_dtype="bfloat16") == k * (2 + 2)
+    assert bytes_per_round(0, d, dense=True, wire_dtype="bfloat16") == d * 2
+    # explicit overrides still win (legacy callers)
+    assert bytes_per_round(k, d, value_bytes=4, index_bytes=4) == k * 8
+
+
+def test_bytes_per_round_defaults_fp32_values():
+    assert bytes_per_round(10, 100) == 10 * (4 + 1)
+    assert bytes_per_round(0, 100, dense=True) == 400

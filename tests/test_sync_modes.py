@@ -9,6 +9,7 @@ import pytest
 from repro.configs import get_smoke_config
 from repro.configs.base import InputShape
 from repro.launch.mesh import make_host_mesh
+from repro.launch.dryrun import cost_dict
 from repro.launch.steps import lower_combo
 
 TRAIN = InputShape("t", 64, 2, "train")
@@ -21,7 +22,7 @@ def test_sync_modes_lower(sync):
     lowered, kind = lower_combo(cfg, TRAIN, mesh, sync=sync)
     compiled = lowered.compile()
     assert kind == "train"
-    assert compiled.cost_analysis().get("flops", 0) > 0
+    assert cost_dict(compiled).get("flops", 0) > 0
 
 
 def test_manual_sync_semantics_single_shard():
