@@ -19,7 +19,7 @@ def main(fast: bool = True):
     for method in ("rage_k", "rtop_k", "top_k", "random_k", "dense"):
         hp = RAgeKConfig(r=75, k=10, H=4, M=20, lr=2e-3, batch_size=64,
                          method=method)
-        res = FederatedEngine("mlp", shards, (xte, yte), hp).run(
+        res = FederatedEngine("mlp", shards, (xte, yte), hp).run_scanned(
             rounds, eval_every=max(rounds // 10, 1))
         curves[method] = {"rounds": res.rounds, "acc": res.acc,
                           "loss": res.loss}
@@ -29,7 +29,8 @@ def main(fast: bool = True):
     # error feedback on rAge-k
     hp = RAgeKConfig(r=75, k=10, H=4, M=20, lr=2e-3, batch_size=64,
                      method="rage_k")
-    res_ef = FederatedEngine("mlp", shards, (xte, yte), hp, ef=True).run(
+    res_ef = FederatedEngine("mlp", shards, (xte, yte), hp,
+                             ef=True).run_scanned(
         rounds, eval_every=max(rounds // 10, 1))
     curves["rage_k_ef"] = {"rounds": res_ef.rounds, "acc": res_ef.acc,
                            "loss": res_ef.loss}

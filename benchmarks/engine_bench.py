@@ -1,0 +1,75 @@
+"""Engine driver bench: step (one dispatch per round) vs scan (chunked
+lax.scan) on the fig3 MNIST config. Records rounds/sec and the
+host-dispatch fraction — the share of wall time the driver spends
+OUTSIDE blocking device calls (python loop, metrics pulls, reclustering)
+— to experiments/bench/BENCH_engine.json.
+
+Fast mode is the 5-round CI smoke; --slow grows the round count.
+"""
+from __future__ import annotations
+
+import time
+
+from benchmarks.common import save_json
+from repro.configs.base import RAgeKConfig
+from repro.data.federated import paper_mnist_split
+from repro.data.synthetic import mnist_like
+from repro.fl import FederatedEngine
+
+
+DRIVERS = ("step", "scan")
+
+
+def main(fast: bool = True):
+    # 5-round smoke for CI; more repeats because short walls are noisy
+    rounds, repeats = (5, 9) if fast else (20, 5)
+    (xtr, ytr), test = mnist_like(n_train=2_000, n_test=500, seed=0)
+    shards = paper_mnist_split(xtr, ytr)
+    # fig3 MNIST config (CPU-reduced data, paper r/k/H/M)
+    hp = RAgeKConfig(r=75, k=10, H=4, M=20, lr=2e-3, batch_size=64,
+                     method="rage_k")
+
+    # one warmed engine per driver; repeats interleaved so machine noise
+    # hits both drivers alike, best-of so the systematic per-round
+    # dispatch savings aren't drowned by scheduler jitter
+    runs = {}
+    for driver in DRIVERS:
+        engine = FederatedEngine("mlp", shards, test, hp, seed=0)
+        run = engine.run if driver == "step" else engine.run_scanned
+        run(rounds, eval_every=rounds)                # compile + warm
+        runs[driver] = (engine, run)
+    best = {d: float("inf") for d in DRIVERS}
+    host_frac = {d: 0.0 for d in DRIVERS}
+    for _ in range(repeats):
+        for driver in DRIVERS:
+            engine, run = runs[driver]
+            engine.device_s = 0.0
+            t0 = time.perf_counter()
+            run(rounds, eval_every=rounds)
+            wall = time.perf_counter() - t0
+            if wall < best[driver]:
+                best[driver] = wall
+                host_frac[driver] = max(0.0, 1.0 - engine.device_s / wall)
+
+    out = {"config": {"rounds": rounds, "repeats": repeats,
+                      "method": hp.method, "r": hp.r, "k": hp.k,
+                      "H": hp.H, "M": hp.M, "batch_size": hp.batch_size}}
+    rows = []
+    for driver in DRIVERS:
+        m = {"rounds_per_s": rounds / best[driver],
+             "host_dispatch_fraction": host_frac[driver],
+             "wall_s": best[driver]}
+        out[driver] = m
+        rows.append((f"engine_{driver}", 1e6 / m["rounds_per_s"],
+                     f"rounds_per_s={m['rounds_per_s']:.2f};"
+                     f"host_dispatch_frac={m['host_dispatch_fraction']:.3f}"))
+    speedup = out["scan"]["rounds_per_s"] / out["step"]["rounds_per_s"]
+    out["scan_speedup"] = speedup
+    save_json("BENCH_engine", out)
+    rows.append(("engine_scan_speedup", 0.0, f"x{speedup:.2f}"))
+    return rows
+
+
+if __name__ == "__main__":
+    for r in main(fast=False):
+        print(r)

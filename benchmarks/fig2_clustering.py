@@ -30,7 +30,7 @@ def main(fast: bool = True):
     shards = paper_mnist_split(xtr, ytr)
     hp = RAgeKConfig(r=75, k=10, H=4, M=20, lr=1e-3, batch_size=64,
                      method="rage_k")
-    res = FederatedEngine("mlp", shards, (xte, yte), hp).run(
+    res = FederatedEngine("mlp", shards, (xte, yte), hp).run_scanned(
         rounds, eval_every=rounds, heatmap_at=heat_at)
     save_json("fig2_heatmaps", {str(t): h.tolist()
                                 for t, h in res.heatmaps.items()})

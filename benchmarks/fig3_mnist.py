@@ -33,7 +33,7 @@ def main(fast: bool = True):
         hp = RAgeKConfig(r=75, k=10, H=4, M=20, lr=lr, batch_size=bs,
                          method=method)
         t0 = time.time()
-        res = FederatedEngine("mlp", shards, (xte, yte), hp).run(
+        res = FederatedEngine("mlp", shards, (xte, yte), hp).run_scanned(
             rounds, eval_every=max(rounds // 20, 1))
         curves[method] = {"rounds": res.rounds, "acc": res.acc,
                           "loss": res.loss, "uplink": res.uplink_bytes}

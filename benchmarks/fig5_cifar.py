@@ -34,7 +34,7 @@ def main(fast: bool = True):
         hp = RAgeKConfig(r=2500, k=100, H=H, M=M, lr=lr, batch_size=bs,
                          method=method)
         t0 = time.time()
-        res = FederatedEngine("cnn", shards, (xte, yte), hp).run(
+        res = FederatedEngine("cnn", shards, (xte, yte), hp).run_scanned(
             rounds, eval_every=max(rounds // 8, 1),
             heatmap_at=(1, rounds) if method == "rage_k" else ())
         curves[method] = {"rounds": res.rounds, "acc": res.acc,

@@ -23,14 +23,16 @@ def main() -> None:
     args = ap.parse_args()
     fast = not args.slow
 
-    from benchmarks import (ablation, comm_table, fig2_clustering,
-                            fig3_mnist, fig5_cifar, kernel_bench, roofline)
+    from benchmarks import (ablation, comm_table, engine_bench,
+                            fig2_clustering, fig3_mnist, fig5_cifar,
+                            kernel_bench, roofline)
     modules = {
         "comm_table": comm_table,
         "fig2_clustering": fig2_clustering,
         "fig3_mnist": fig3_mnist,
         "fig5_cifar": fig5_cifar,
         "ablation": ablation,
+        "engine_bench": engine_bench,
         "kernel_bench": kernel_bench,
         "roofline": roofline,
     }

@@ -25,8 +25,9 @@ def main():
     hp = RAgeKConfig(r=2500, k=100, H=5, M=8, lr=1e-3, batch_size=32,
                      method="rage_k")
     engine = FederatedEngine("cnn", shards, (xte, yte), hp)
-    res = engine.run(args.rounds, eval_every=max(args.rounds // 6, 1),
-                     heatmap_at=(args.rounds,), verbose=True)
+    res = engine.run_scanned(args.rounds,
+                             eval_every=max(args.rounds // 6, 1),
+                             heatmap_at=(args.rounds,), verbose=True)
     print("\nconnectivity matrix (rounded):")
     hm = res.heatmaps[args.rounds]
     print(np.round(hm, 2))

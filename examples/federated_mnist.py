@@ -25,8 +25,9 @@ def main():
         hp = RAgeKConfig(r=75, k=10, H=4, M=20, lr=2e-3, batch_size=64,
                          method=method)
         engine = FederatedEngine("mlp", shards, (xte, yte), hp)
-        res = engine.run(args.rounds,
-                         eval_every=max(args.rounds // 10, 1), verbose=True)
+        res = engine.run_scanned(args.rounds,
+                                 eval_every=max(args.rounds // 10, 1),
+                                 verbose=True)
         s = res.summary()
         print(f"[{method}] final acc={s['final_acc']:.3f} "
               f"uplink={s['total_uplink_mb']:.2f} MiB "

@@ -2,4 +2,6 @@ from repro.data.synthetic import (  # noqa: F401
     make_image_dataset, mnist_like, cifar10_like,
 )
 from repro.data.federated import label_partition, paper_mnist_split, paper_cifar_split  # noqa: F401
-from repro.data.pipeline import BatchIterator, token_stream  # noqa: F401
+from repro.data.pipeline import (  # noqa: F401
+    BatchIterator, DeviceShardStore, SamplerState, token_stream,
+)

@@ -1,6 +1,22 @@
-"""Batching / streaming pipeline (deterministic, prefetch-free: CPU sim)."""
+"""Batching / streaming pipeline.
+
+Two data planes share the same epoch semantics:
+
+* :class:`BatchIterator` — the host-paced numpy reference (one batch per
+  ``next()``, reshuffle when fewer than a full batch remains).
+* :class:`DeviceShardStore` — the device-resident plane: every client
+  shard is uploaded ONCE (padded to a common capacity) and per-round
+  batches are drawn *inside* the jitted program from PRNG-derived
+  permutations. ``tests/test_data.py`` pins the sampler to the
+  BatchIterator semantics (epoch-exact, without-replacement,
+  discard-the-non-dividing-tail) for arbitrary ``(len(y), batch_size)``.
+"""
 from __future__ import annotations
 
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
 import numpy as np
 
 
@@ -24,6 +40,102 @@ class BatchIterator:
 
     def __iter__(self):
         return self
+
+
+class SamplerState(NamedTuple):
+    """Per-client shuffle state, threaded through the jitted round loop.
+
+    order: (N, capacity) int32 — current epoch permutation per client
+           (positions >= length hold padding slots, sorted last, never
+           visible within an epoch).
+    pos:   (N,) int32 — cursor into the permutation.
+    key:   (N, 2) uint32 — per-client PRNG key (split once per draw;
+           the subkey is only consumed on epoch wrap).
+    """
+
+    order: jnp.ndarray
+    pos: jnp.ndarray
+    key: jnp.ndarray
+
+
+class DeviceShardStore:
+    """Client shards resident on device; batches drawn inside jit.
+
+    Shards are padded along the sample axis to a common ``capacity`` so
+    the store is one stacked ``(N, capacity, ...)`` array pair; the true
+    per-client ``lengths`` bound every permutation so padding is never
+    sampled. The batch size is uniform across clients
+    (``min(batch_size, min(lengths))``) because the engine stacks client
+    batches into one ``(N, H, B, ...)`` tensor.
+
+    ``draw`` is a pure function of ``(data, state)`` — call it from any
+    jitted program (single round or a ``lax.scan`` over rounds); the
+    sampled epochs are bit-identical either way.
+    """
+
+    def __init__(self, shards: list, batch_size: int, *, seed: int = 0):
+        lengths = [len(y) for _, y in shards]
+        self.n = len(shards)
+        self.capacity = max(lengths)
+        self.bs = min(batch_size, min(lengths))
+        feat = shards[0][0].shape[1:]
+        x = np.zeros((self.n, self.capacity) + feat,
+                     dtype=shards[0][0].dtype)
+        y = np.zeros((self.n, self.capacity), dtype=shards[0][1].dtype)
+        for i, (xi, yi) in enumerate(shards):
+            x[i, :len(yi)] = xi
+            y[i, :len(yi)] = yi
+        # one upload per shard set; afterwards only metrics leave device
+        self.data = (jnp.asarray(x), jnp.asarray(y),
+                     jnp.asarray(lengths, jnp.int32))
+        base = jax.random.PRNGKey(seed)
+        self._keys = jax.vmap(lambda i: jax.random.fold_in(base, i))(
+            jnp.arange(self.n))
+
+    # -- permutation of the first `length` slots (padding sorts last) ----
+    @staticmethod
+    def _perm(key, length, capacity: int):
+        u = jax.random.uniform(key, (capacity,))
+        u = jnp.where(jnp.arange(capacity) < length, u, 2.0)
+        return jnp.argsort(u).astype(jnp.int32)
+
+    def init_state(self) -> SamplerState:
+        _, _, lengths = self.data
+
+        def one(key, length):
+            key, sub = jax.random.split(key)
+            return self._perm(sub, length, self.capacity), key
+
+        order, key = jax.vmap(one)(self._keys, lengths)
+        return SamplerState(order=order,
+                            pos=jnp.zeros((self.n,), jnp.int32), key=key)
+
+    def draw(self, data, state: SamplerState, H: int):
+        """Draw the next H batches per client, entirely on device.
+
+        Returns ``(bx (N, H, B, ...), by (N, H, B), new_state)``.
+        """
+        x, y, lengths = data
+        bs, cap = self.bs, self.capacity
+
+        def one_client(xi, yi, length, order, pos, key):
+            def step(carry, _):
+                order, pos, key = carry
+                wrap = pos + bs > length
+                key, sub = jax.random.split(key)
+                order = jnp.where(wrap, self._perm(sub, length, cap), order)
+                pos = jnp.where(wrap, 0, pos)
+                sel = jax.lax.dynamic_slice(order, (pos,), (bs,))
+                return ((order, pos + bs, key),
+                        (jnp.take(xi, sel, axis=0), jnp.take(yi, sel, axis=0)))
+
+            (order, pos, key), (bx, by) = jax.lax.scan(
+                step, (order, pos, key), None, length=H)
+            return bx, by, order, pos, key
+
+        bx, by, order, pos, key = jax.vmap(one_client)(
+            x, y, lengths, state.order, state.pos, state.key)
+        return bx, by, SamplerState(order=order, pos=pos, key=key)
 
 
 def token_stream(vocab: int, batch: int, seq: int, *, seed: int = 0,

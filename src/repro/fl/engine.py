@@ -1,13 +1,30 @@
 """FederatedEngine — the unified federated-round API (paper Algorithm 1).
 
-One global round is ONE jitted device program: local phase (H vmapped
-client steps), candidate top-r, age-based index selection, sparse
-aggregation, global update, broadcast. The parameter server's age state
-lives on DEVICE as a jnp pytree (``DeviceAgeState``): per-cluster age
-vectors (eq. 2), per-client request frequencies (eq. 3 inputs), and the
-cluster assignment. Only two things ever cross to host:
+One global round is ONE jitted device program: batch draw from the
+device-resident shard store, local phase (H vmapped client steps),
+candidate top-r, age-based index selection, sparse aggregation, global
+update, broadcast. The parameter server's age state lives on DEVICE as a
+jnp pytree (``DeviceAgeState``): per-cluster age vectors (eq. 2),
+per-client request frequencies (eq. 3 inputs), and the cluster
+assignment. Client data lives on device too (``data.DeviceShardStore``,
+uploaded once at construction); per-round batches come from PRNG-derived
+permutations inside the program, so a round consumes NO host input.
 
-  * tiny per-round metrics — losses (N,), requested indices (N, k);
+Two drivers share the identical round body (``_round_impl``):
+
+  * :meth:`step` / :meth:`run` — one dispatch per round, metrics pulled
+    every round (host-paced; the debugging/inspection driver);
+  * :meth:`run_scanned` — chunks of rounds executed as one ``lax.scan``
+    per dispatch, chunk boundaries aligned to the every-``M`` recluster
+    host round-trip (and eval/heatmap rounds), metrics stacked on device
+    and pulled ONCE per chunk. Bit-identical to repeated :meth:`step`
+    (pinned by tests/test_scan_driver.py, which also wraps a chunk in
+    ``jax.transfer_guard("disallow")``).
+
+Only two things ever cross to host:
+
+  * per-round metrics — losses (N,), requested indices (N, k) — pulled
+    per round (step) or per chunk (scan);
   * the (N, d) int32 frequency matrix, every M rounds, for DBSCAN
     clustering (eq. 3) — the one genuinely host-shaped step.
 
@@ -32,7 +49,7 @@ from repro.core.age import AgeState
 from repro.core.clustering import cluster_clients, connectivity_matrix
 from repro.core.compression import bytes_per_index, bytes_per_round
 from repro.core.strategies import make_strategy
-from repro.data.pipeline import BatchIterator
+from repro.data.pipeline import DeviceShardStore
 from repro.fl import client as C
 from repro.fl.server import aggregate_sparse, aggregate_sparse_fused
 from repro.models import paper_nets as P
@@ -239,9 +256,11 @@ class FederatedEngine:
         self._key = jax.random.PRNGKey(seed + 99)
         self.round_idx = 0
 
-        # --- host-side input pipeline + per-client eval sets ---------------
-        self._iters = [BatchIterator(x, y, hp.batch_size, seed=seed + 17 * i)
-                       for i, (x, y) in enumerate(shards)]
+        # --- device-resident data plane + per-client eval sets -------------
+        self._store = DeviceShardStore(shards, hp.batch_size,
+                                       seed=seed + 17)
+        self._data = self._store.data
+        self.samp = self._store.init_state()
         xte, yte = test
         self._eval_sets = []
         for (xs, ys) in shards:
@@ -265,7 +284,9 @@ class FederatedEngine:
         self.cum_bytes = 0
 
         self._round = jax.jit(self._round_impl)
+        self._chunks: dict = {}          # scan length -> jitted chunk
         self._eval = jax.jit(self._eval_impl)
+        self.device_s = 0.0              # wall spent blocking on device
 
     # ------------------------------------------------------------------
     # jitted bodies
@@ -282,9 +303,17 @@ class FederatedEngine:
             return dense
         return aggregate_sparse(idx, vals, self.d)
 
-    def _round_impl(self, g_params, g_opt_state, params_s, opt_s, state_s,
-                    age, ef_mem, key, bx, by):
+    def _round_impl(self, data, carry):
+        """One global round, device-pure: (data, carry) -> (carry, metrics).
+
+        ``data`` is the uploaded shard store; ``carry`` threads all
+        mutable engine state (params, opt, ages, ef memory, PRNG keys,
+        sampler). The SAME traced body backs both drivers, which is what
+        makes run_scanned bit-identical to repeated step()."""
+        (g_params, g_opt_state, params_s, opt_s, state_s, age, ef_mem,
+         key, samp) = carry
         hp = self.hp
+        bx, by, samp = self._store.draw(data, samp, hp.H)
         params_s, opt_s, state_s2, g, losses = self._local_phase(
             params_s, opt_s, state_s if state_s else {}, (bx, by))
         if state_s:
@@ -328,7 +357,7 @@ class FederatedEngine:
         metrics = {"losses": losses,
                    "idx": idx if idx is not None else jnp.zeros((), jnp.int32)}
         return (g_params, g_opt_state, params_s, opt_s, state_s, age,
-                ef_mem, key, metrics)
+                ef_mem, key, samp), metrics
 
     def _eval_impl(self, params_s, state_s):
         accs = []
@@ -345,27 +374,42 @@ class FederatedEngine:
     # ------------------------------------------------------------------
     # host control plane
     # ------------------------------------------------------------------
-    def _next_batches(self):
-        hp = self.hp
-        batches = [[next(self._iters[i]) for _ in range(hp.H)]
-                   for i in range(self.n)]
-        bx = jnp.asarray(np.stack([[b[0] for b in bc] for bc in batches]))
-        by = jnp.asarray(np.stack([[b[1] for b in bc] for bc in batches]))
-        return bx, by
+    def _pack(self):
+        return (self.g_params, self.g_opt_state, self.params_s, self.opt_s,
+                self.state_s, self.age, self.ef_mem, self._key, self.samp)
 
-    def step(self) -> dict:
-        """Advance one global round. Returns {"losses": (N,), "idx":
-        (N, k)|None} — the only per-round device->host traffic."""
-        bx, by = self._next_batches()
+    def _unpack(self, carry):
         (self.g_params, self.g_opt_state, self.params_s, self.opt_s,
-         self.state_s, self.age, self.ef_mem, self._key, metrics) = \
-            self._round(self.g_params, self.g_opt_state, self.params_s,
-                        self.opt_s, self.state_s, self.age, self.ef_mem,
-                        self._key, bx, by)
+         self.state_s, self.age, self.ef_mem, self._key, self.samp) = carry
+
+    def _chunk(self, length: int):
+        """Jitted `length`-round chunk: one lax.scan over `_round_impl`,
+        metrics stacked (length, ...) on device. Cached per length (chunk
+        boundaries produce only a handful of distinct lengths)."""
+        fn = self._chunks.get(length)
+        if fn is None:
+            def chunk(data, carry):
+                return jax.lax.scan(lambda c, _: self._round_impl(data, c),
+                                    carry, None, length=length)
+            fn = self._chunks[length] = jax.jit(chunk)
+        return fn
+
+    def _bookkeep(self):
+        """Per-round host accounting shared by both drivers."""
         self.round_idx += 1
         self.cum_bytes += self._per_client_bytes * self.n
         if self.hp.method == "rage_k" and self.round_idx % self.hp.M == 0:
             self._recluster()
+
+    def step(self) -> dict:
+        """Advance one global round. Returns {"losses": (N,), "idx":
+        (N, k)|None} — the only per-round device->host traffic."""
+        t0 = time.perf_counter()
+        carry, metrics = self._round(self._data, self._pack())
+        jax.block_until_ready(metrics)
+        self.device_s += time.perf_counter() - t0
+        self._unpack(carry)
+        self._bookkeep()
         idx = (np.asarray(metrics["idx"])
                if self.hp.method != "dense" else None)
         return {"losses": np.asarray(metrics["losses"]), "idx": idx}
@@ -378,30 +422,86 @@ class FederatedEngine:
         return np.asarray(self.age.cluster_of).astype(np.int64)
 
     def eval_acc(self) -> float:
-        return float(jnp.mean(self._eval(self.params_s, self.state_s)))
+        t0 = time.perf_counter()
+        accs = self._eval(self.params_s, self.state_s)
+        jax.block_until_ready(accs)
+        self.device_s += time.perf_counter() - t0
+        return float(jnp.mean(accs))
+
+    def _record(self, res: FLResult, losses, *, end: int, eval_every: int,
+                heatmap_at, verbose: bool) -> None:
+        """Eval/record/heatmap at the current round — the shared tail of
+        both drivers (run() after each step, run_scanned() at chunk
+        boundaries, which land exactly on the same rounds). `losses` is
+        the CURRENT round's (N,) loss vector."""
+        t = self.round_idx
+        if t % eval_every == 0 or t == end:
+            acc = self.eval_acc()
+            res.rounds.append(t)
+            res.loss.append(float(losses.mean()))
+            res.acc.append(acc)
+            res.uplink_bytes.append(self.cum_bytes)
+            res.cluster_labels.append(self.cluster_of)
+            if verbose:
+                print(f"[{self.hp.method}] round {t:4d} "
+                      f"loss={losses.mean():.4f} "
+                      f"acc={acc:.4f} "
+                      f"upl={self.cum_bytes/2**20:.2f}MB")
+        if t in heatmap_at:
+            res.heatmaps[t] = connectivity_matrix(np.asarray(self.age.freq))
 
     def run(self, rounds: int, *, eval_every: int = 5, heatmap_at=(),
             verbose: bool = False) -> FLResult:
         t0 = time.time()
         res = FLResult()
         end = self.round_idx + rounds
-        for t in range(self.round_idx + 1, end + 1):
+        while self.round_idx < end:
             metrics = self.step()
             res.requested.append(metrics["idx"])
-            if t % eval_every == 0 or t == end:
-                acc = self.eval_acc()
-                res.rounds.append(t)
-                res.loss.append(float(metrics["losses"].mean()))
-                res.acc.append(acc)
-                res.uplink_bytes.append(self.cum_bytes)
-                res.cluster_labels.append(self.cluster_of)
-                if verbose:
-                    print(f"[{self.hp.method}] round {t:4d} "
-                          f"loss={metrics['losses'].mean():.4f} "
-                          f"acc={acc:.4f} "
-                          f"upl={self.cum_bytes/2**20:.2f}MB")
-            if t in heatmap_at:
-                res.heatmaps[t] = connectivity_matrix(
-                    np.asarray(self.age.freq))
+            self._record(res, metrics["losses"], end=end,
+                         eval_every=eval_every, heatmap_at=heatmap_at,
+                         verbose=verbose)
+        res.wall_s = time.time() - t0
+        return res
+
+    # ------------------------------------------------------------------
+    # scanned driver: many rounds per dispatch
+    # ------------------------------------------------------------------
+    def _next_stop(self, end: int, eval_every: int, heatmap_at) -> int:
+        """First round after `round_idx` where the host must intervene:
+        recluster (every M, rage_k), eval, heatmap, or the end."""
+        t = self.round_idx
+        stops = [end, t + eval_every - t % eval_every]
+        if self.hp.method == "rage_k":
+            stops.append(t + self.hp.M - t % self.hp.M)
+        stops.extend(h for h in heatmap_at if h > t)
+        return min(stops)
+
+    def run_scanned(self, rounds: int, *, eval_every: int = 5,
+                    heatmap_at=(), verbose: bool = False) -> FLResult:
+        """Drive `rounds` with lax.scan chunks — same math as :meth:`run`
+        (bit-identical, tests/test_scan_driver.py) but the host touches
+        the device once per CHUNK, not once per round: stacked metrics
+        come down at chunk ends, which are aligned to the every-M
+        recluster round-trip and the eval/heatmap cadence."""
+        t0 = time.time()
+        res = FLResult()
+        end = self.round_idx + rounds
+        while self.round_idx < end:
+            T = self._next_stop(end, eval_every, heatmap_at) - self.round_idx
+            td = time.perf_counter()
+            carry, metrics = self._chunk(T)(self._data, self._pack())
+            jax.block_until_ready(metrics)
+            self.device_s += time.perf_counter() - td
+            self._unpack(carry)
+            # the ONE per-chunk host pull: (T, N) losses, (T, N, k) indices
+            losses = np.asarray(metrics["losses"])
+            idx = (np.asarray(metrics["idx"])
+                   if self.hp.method != "dense" else None)
+            for j in range(T):
+                self._bookkeep()
+                res.requested.append(idx[j] if idx is not None else None)
+            self._record(res, losses[-1], end=end, eval_every=eval_every,
+                         heatmap_at=heatmap_at, verbose=verbose)
         res.wall_s = time.time() - t0
         return res

@@ -39,6 +39,12 @@ def main():
                     choices=("auto", "jnp", "pallas"),
                     help="sparse-aggregation backend (pallas = fused "
                          "scatter-add kernel; auto picks it on TPU)")
+    ap.add_argument("--driver", default="scan", choices=("step", "scan"),
+                    help="round driver: 'step' dispatches one jitted "
+                         "round at a time (host-paced, easiest to "
+                         "inspect); 'scan' runs whole chunks of rounds "
+                         "per dispatch via lax.scan (bit-identical, "
+                         "faster)")
     args = ap.parse_args()
 
     if args.dataset == "mnist":
@@ -71,8 +77,9 @@ def main():
 
     engine = FederatedEngine(kind, shards, test, hp, seed=args.seed,
                              ef=args.ef, aggregate_impl=args.aggregate)
-    res = engine.run(args.rounds, eval_every=max(args.rounds // 20, 1),
-                     heatmap_at=(1, args.rounds), verbose=True)
+    drive = engine.run if args.driver == "step" else engine.run_scanned
+    res = drive(args.rounds, eval_every=max(args.rounds // 20, 1),
+                heatmap_at=(1, args.rounds), verbose=True)
     print("summary:", res.summary())
     print("final clusters:", res.cluster_labels[-1].tolist())
     if args.out:

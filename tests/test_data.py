@@ -1,9 +1,11 @@
-"""Data pipeline: synthetic sets, paper splits, batching, determinism."""
+"""Data pipeline: synthetic sets, paper splits, batching, determinism,
+and the device-resident sampler's BatchIterator-equivalence."""
 import numpy as np
+import pytest
 
-from repro.data import (BatchIterator, cifar10_like, label_partition,
-                        mnist_like, paper_cifar_split, paper_mnist_split,
-                        token_stream)
+from repro.data import (BatchIterator, DeviceShardStore, cifar10_like,
+                        label_partition, mnist_like, paper_cifar_split,
+                        paper_mnist_split, token_stream)
 from repro.data.federated import PAPER_CIFAR_LABELS, PAPER_MNIST_LABELS
 
 
@@ -56,6 +58,97 @@ def test_batch_iterator_covers_epoch():
         bx, by = next(it)
         seen.extend(by.tolist())
     assert sorted(seen) == list(range(10))
+
+
+def test_device_store_multi_client_draw_shapes():
+    rng = np.random.default_rng(0)
+    # labels 1..5 only: padding slots hold 0, so a sampled padding row
+    # would be visible as a zero label
+    shards = [(rng.normal(size=(n, 3, 2)).astype(np.float32),
+               rng.integers(1, 6, n)) for n in (12, 17, 9)]
+    store = DeviceShardStore(shards, 4, seed=0)
+    assert store.bs == 4 and store.capacity == 17
+    state = store.init_state()
+    bx, by, state = store.draw(store.data, state, 3)
+    assert bx.shape == (3, 3, 4, 3, 2) and by.shape == (3, 3, 4)
+    # padding never sampled: all labels come from the true shard rows
+    for i, (_, yi) in enumerate(shards):
+        drawn = set(np.asarray(by[i]).ravel().tolist())
+        assert 0 not in drawn
+        assert drawn <= set(yi.tolist())
+
+
+def _epoch_structure(draws, length, bs):
+    """Split a draw sequence into BatchIterator epochs: `length // bs`
+    full batches per epoch, the non-dividing tail discarded at the
+    reshuffle. Returns the per-epoch index lists."""
+    per_epoch = length // bs
+    epochs = [draws[i:i + per_epoch]
+              for i in range(0, len(draws), per_epoch)]
+    return per_epoch, epochs
+
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:                                   # pragma: no cover
+    HAVE_HYPOTHESIS = False
+
+
+def _check_sampler_vs_batch_iterator(length, batch_size, seed):
+    """The on-device sampler is epoch-exact with BatchIterator semantics
+    for arbitrary (len(y), batch_size), including the non-dividing tail:
+    within an epoch every sample appears at most once, epochs of
+    `length // bs` full batches cover exactly that many distinct samples,
+    and when bs divides length every sample is visited exactly once."""
+    x = np.arange(length, dtype=np.float32)[:, None]
+    y = np.arange(length)
+    store = DeviceShardStore([(x, y)], batch_size, seed=seed)
+    it = BatchIterator(x, y, batch_size, seed=seed)
+    bs = store.bs
+    assert bs == it.bs == min(batch_size, length)
+
+    per_epoch = length // bs
+    n_draws = 2 * per_epoch + 1            # crosses >= 2 reshuffles
+    state = store.init_state()
+    dev_draws, host_draws = [], []
+    for _ in range(n_draws):
+        _, by, state = store.draw(store.data, state, 1)
+        dev_draws.append(np.asarray(by[0, 0]).tolist())
+        host_draws.append(next(it)[1].tolist())
+
+    for draws in (dev_draws, host_draws):
+        pe, epochs = _epoch_structure(draws, length, bs)
+        assert pe == per_epoch
+        for epoch in epochs:
+            flat = [s for b in epoch for s in b]
+            # without replacement within an epoch; all real samples
+            assert len(set(flat)) == len(flat)
+            assert set(flat) <= set(range(length))
+            if len(epoch) == per_epoch and length % bs == 0:
+                assert sorted(flat) == list(range(length))  # exact cover
+        # every batch is full-size — the tail is discarded, not truncated
+        assert all(len(b) == bs for b in draws)
+
+
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=25, deadline=None)
+    @given(length=st.integers(1, 37), batch_size=st.integers(1, 41),
+           seed=st.integers(0, 2**16))
+    def test_device_sampler_epoch_exact_like_batch_iterator(
+            length, batch_size, seed):
+        _check_sampler_vs_batch_iterator(length, batch_size, seed)
+else:                                                 # pragma: no cover
+    @pytest.mark.skip(reason="hypothesis not installed")
+    def test_device_sampler_epoch_exact_like_batch_iterator():
+        pass
+
+
+def test_device_sampler_non_dividing_tail():
+    """Deterministic anchor for the tail case (hypothesis-independent):
+    L=10, bs=4 -> 2 full batches per epoch, 8 distinct samples, then a
+    reshuffle starts the next epoch with a full-size batch."""
+    _check_sampler_vs_batch_iterator(10, 4, seed=7)
 
 
 def test_token_stream_learnable_structure():

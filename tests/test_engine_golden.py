@@ -9,7 +9,11 @@
    five methods on a fixed seed.
 3. The per-round device->host traffic on the rage_k path is O(N * k):
    the dense (N, d) gradient matrix never leaves the accelerator
-   between clustering rounds.
+   between clustering rounds — rage_select runs under
+   jax.transfer_guard("disallow") once compiled.
+4. Golden coverage extends to the cnn model kind and the
+   error-feedback path (run_fl == engine for both); the scanned-driver
+   parity lives in tests/test_scan_driver.py.
 """
 import jax
 import jax.numpy as jnp
@@ -46,9 +50,17 @@ def test_rage_select_matches_parameter_server_reference():
         rnd = ps.select_indices({i: cands[i] for i in range(n)})
         idx_host = np.stack([rnd.requested[i] for i in range(n)])
         ps.finish_round(rnd)
-        # device path
-        idx_dev, age = rage_select(jnp.asarray(g), age, r=r, k=k,
-                                   disjoint=hp.disjoint_in_cluster)
+        # device path: after the first (compiling) round, selection runs
+        # under transfer_guard — it consumes and produces only device
+        # arrays, no host round-trip
+        g_dev = jnp.asarray(g)
+        if t == 1:
+            idx_dev, age = rage_select(g_dev, age, r=r, k=k,
+                                       disjoint=hp.disjoint_in_cluster)
+        else:
+            with jax.transfer_guard("disallow"):
+                idx_dev, age = rage_select(g_dev, age, r=r, k=k,
+                                           disjoint=hp.disjoint_in_cluster)
         if t % M == 0:
             age = recluster(age, hp.eps, hp.min_pts)
 
@@ -141,6 +153,45 @@ def test_engine_ef_dense_learns(mnist_setup):
     hp = RAgeKConfig(r=40, k=8, H=2, M=10, lr=2e-3, batch_size=32,
                      method="top_k")
     engine = FederatedEngine("mlp", shards, test, hp, seed=0, ef=True)
-    res = engine.run(6, eval_every=3)
+    res = engine.run(12, eval_every=3)
     assert res.loss[-1] < res.loss[0] + 1e-6
+    assert isinstance(engine.ef_mem, jax.Array)
+
+
+@pytest.fixture(scope="module")
+def cifar_setup():
+    from repro.data.federated import paper_cifar_split
+    from repro.data.synthetic import cifar10_like
+    (xtr, ytr), test = cifar10_like(n_train=600, n_test=240, seed=0)
+    return paper_cifar_split(xtr, ytr, seed=0), test
+
+
+def test_run_fl_equals_engine_cnn(cifar_setup):
+    """Golden coverage for the cnn model kind (BatchNorm state threaded
+    through the round carry): wrapper and engine agree bit-exactly."""
+    shards, test = cifar_setup
+    hp = RAgeKConfig(r=200, k=20, H=1, M=2, lr=1e-3, batch_size=8,
+                     method="rage_k")
+    res_a = run_fl("cnn", shards, test, hp, rounds=3, eval_every=3, seed=1)
+    engine = FederatedEngine("cnn", shards, test, hp, seed=1)
+    res_b = engine.run(3, eval_every=3)
+    np.testing.assert_allclose(res_a.loss, res_b.loss, rtol=0, atol=0)
+    np.testing.assert_allclose(res_a.acc, res_b.acc, rtol=0, atol=0)
+    for ia, ib in zip(res_a.requested, res_b.requested):
+        np.testing.assert_array_equal(ia, ib)
+
+
+def test_run_fl_equals_engine_ef(mnist_setup):
+    """Golden coverage for the error-feedback path: the ef memory evolves
+    identically through wrapper and engine."""
+    shards, test = mnist_setup
+    hp = RAgeKConfig(r=40, k=8, H=2, M=3, lr=2e-3, batch_size=32,
+                     method="rage_k")
+    res_a = run_fl("mlp", shards, test, hp, rounds=4, eval_every=2,
+                   seed=5, ef=True)
+    engine = FederatedEngine("mlp", shards, test, hp, seed=5, ef=True)
+    res_b = engine.run(4, eval_every=2)
+    np.testing.assert_allclose(res_a.loss, res_b.loss, rtol=0, atol=0)
+    for ia, ib in zip(res_a.requested, res_b.requested):
+        np.testing.assert_array_equal(ia, ib)
     assert isinstance(engine.ef_mem, jax.Array)

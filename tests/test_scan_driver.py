@@ -1,0 +1,125 @@
+"""Golden-parity + transfer-guard tests for the scanned multi-round driver.
+
+1. `FederatedEngine.run_scanned` is BIT-IDENTICAL to repeated `step()`
+   (params, losses, requested (N, k) indices, cluster labels, age state)
+   for all five strategies, across at least two recluster boundaries —
+   the scan chunks replay exactly the host-paced round sequence.
+2. The scanned chunk runs under `jax.transfer_guard("disallow")`: a
+   chunk consumes ONLY device-resident state (shard store, carry) and
+   produces device-stacked metrics — no per-round host stacking, no
+   implicit transfer. Only the per-chunk metrics pull and the every-M
+   freq matrix (outside the guard) ever cross.
+3. Coverage extends to the `cnn` model kind (BatchNorm state in the
+   carry) and the error-feedback path (`ef=True`).
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro.configs.base import RAgeKConfig
+from repro.data.federated import paper_cifar_split, paper_mnist_split
+from repro.data.synthetic import cifar10_like, mnist_like
+from repro.fl import FederatedEngine
+
+METHODS = ("rage_k", "rtop_k", "top_k", "random_k", "dense")
+
+# M=3, 7 rounds -> recluster boundaries at rounds 3 and 6
+HP = dict(r=30, k=6, H=2, M=3, lr=2e-3, batch_size=16)
+ROUNDS, EVAL_EVERY = 7, 2
+
+
+@pytest.fixture(scope="module")
+def mnist_setup():
+    (xtr, ytr), test = mnist_like(n_train=1200, n_test=400, seed=0)
+    return paper_mnist_split(xtr, ytr, seed=0), test
+
+
+@pytest.fixture(scope="module")
+def cifar_setup():
+    (xtr, ytr), test = cifar10_like(n_train=600, n_test=240, seed=0)
+    return paper_cifar_split(xtr, ytr, seed=0), test
+
+
+def _assert_same_run(ea, ra, eb, rb, method):
+    np.testing.assert_allclose(ra.loss, rb.loss, rtol=0, atol=0)
+    np.testing.assert_allclose(ra.acc, rb.acc, rtol=0, atol=0)
+    assert ra.uplink_bytes == rb.uplink_bytes
+    assert ra.rounds == rb.rounds
+    for ia, ib in zip(ra.requested, rb.requested):
+        if method == "dense":
+            assert ia is None and ib is None
+        else:
+            np.testing.assert_array_equal(ia, ib)
+    for la, lb in zip(ra.cluster_labels, rb.cluster_labels):
+        np.testing.assert_array_equal(la, lb)
+    # engine state itself: params, ages, ef memory — bit-identical
+    for pa, pb in zip(jax.tree_util.tree_leaves(ea.g_params),
+                      jax.tree_util.tree_leaves(eb.g_params)):
+        np.testing.assert_array_equal(np.asarray(pa), np.asarray(pb))
+    np.testing.assert_array_equal(np.asarray(ea.age.cluster_age),
+                                  np.asarray(eb.age.cluster_age))
+    np.testing.assert_array_equal(np.asarray(ea.age.freq),
+                                  np.asarray(eb.age.freq))
+    np.testing.assert_array_equal(ea.cluster_of, eb.cluster_of)
+    if ea.ef_mem is not None:
+        np.testing.assert_array_equal(np.asarray(ea.ef_mem),
+                                      np.asarray(eb.ef_mem))
+
+
+@pytest.mark.parametrize("method", METHODS)
+def test_run_scanned_equals_step(mnist_setup, method):
+    shards, test = mnist_setup
+    hp = RAgeKConfig(method=method, **HP)
+    ea = FederatedEngine("mlp", shards, test, hp, seed=3)
+    ra = ea.run(ROUNDS, eval_every=EVAL_EVERY, heatmap_at=(ROUNDS,))
+    eb = FederatedEngine("mlp", shards, test, hp, seed=3)
+    rb = eb.run_scanned(ROUNDS, eval_every=EVAL_EVERY, heatmap_at=(ROUNDS,))
+    _assert_same_run(ea, ra, eb, rb, method)
+    np.testing.assert_array_equal(ra.heatmaps[ROUNDS], rb.heatmaps[ROUNDS])
+    # rage_k crossed two recluster boundaries (rounds 3 and 6)
+    if method == "rage_k":
+        assert ea.round_idx > 2 * hp.M
+
+
+def test_run_scanned_equals_step_ef(mnist_setup):
+    """Error-feedback memory is part of the scan carry: parity holds."""
+    shards, test = mnist_setup
+    hp = RAgeKConfig(method="rage_k", **HP)
+    ea = FederatedEngine("mlp", shards, test, hp, seed=3, ef=True)
+    ra = ea.run(ROUNDS, eval_every=EVAL_EVERY)
+    eb = FederatedEngine("mlp", shards, test, hp, seed=3, ef=True)
+    rb = eb.run_scanned(ROUNDS, eval_every=EVAL_EVERY)
+    assert eb.ef_mem is not None
+    _assert_same_run(ea, ra, eb, rb, "rage_k")
+
+
+def test_run_scanned_equals_step_cnn(cifar_setup):
+    """cnn model kind: BatchNorm running stats thread through the scan
+    carry; parity across the round-2 and round-4 recluster boundaries."""
+    shards, test = cifar_setup
+    hp = RAgeKConfig(r=200, k=20, H=1, M=2, lr=1e-3, batch_size=8,
+                     method="rage_k")
+    ea = FederatedEngine("cnn", shards, test, hp, seed=1)
+    ra = ea.run(5, eval_every=5)
+    eb = FederatedEngine("cnn", shards, test, hp, seed=1)
+    rb = eb.run_scanned(5, eval_every=5)
+    _assert_same_run(ea, ra, eb, rb, "rage_k")
+
+
+def test_scanned_chunk_is_transfer_free(mnist_setup):
+    """The jitted chunk performs no host transfer: data plane and carry
+    are device-resident, metrics stay stacked on device until the
+    explicit per-chunk pull (which happens OUTSIDE the guard)."""
+    shards, test = mnist_setup
+    hp = RAgeKConfig(method="rage_k", **HP)
+    engine = FederatedEngine("mlp", shards, test, hp, seed=0)
+    chunk = engine._chunk(hp.M)
+    # warm-up compile outside the guard (lowering may stage constants)
+    carry, metrics = chunk(engine._data, engine._pack())
+    jax.block_until_ready(metrics)
+    with jax.transfer_guard("disallow"):
+        carry, metrics = chunk(engine._data, carry)
+        jax.block_until_ready((carry, metrics))
+    assert metrics["losses"].shape == (hp.M, engine.n)
+    assert metrics["idx"].shape == (hp.M, engine.n, hp.k)
+    assert isinstance(metrics["losses"], jax.Array)
