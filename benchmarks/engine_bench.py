@@ -1,10 +1,14 @@
-"""Engine driver bench: step (one dispatch per round) vs scan (chunked
-lax.scan) on the fig3 MNIST config. Records rounds/sec and the
-host-dispatch fraction — the share of wall time the driver spends
-OUTSIDE blocking device calls (python loop, metrics pulls, reclustering)
-— to experiments/bench/BENCH_engine.json.
+"""Engine driver bench on the fig3 MNIST config, two axes:
 
-Fast mode is the 5-round CI smoke; --slow grows the round count.
+* DRIVER: step (one dispatch per round) vs scan (chunked lax.scan) —
+  records rounds/sec and the host-dispatch fraction (share of wall time
+  the driver spends OUTSIDE blocking device calls: python loop, metrics
+  pulls, reclustering);
+* SELECTION plane (rage_k): segmented per-cluster parallel (default) vs
+  the sequential all-clients scan — both under the scan driver.
+
+Results land in experiments/bench/BENCH_engine.json. Fast mode is the
+5-round CI smoke; --slow grows the round count.
 """
 from __future__ import annotations
 
@@ -17,7 +21,10 @@ from repro.data.synthetic import mnist_like
 from repro.fl import FederatedEngine
 
 
-DRIVERS = ("step", "scan")
+# (name, driver, selection plane)
+VARIANTS = (("step", "step", "segmented"),
+            ("scan", "scan", "segmented"),
+            ("scan_seqsel", "scan", "scan"))
 
 
 def main(fast: bool = True):
@@ -29,44 +36,49 @@ def main(fast: bool = True):
     hp = RAgeKConfig(r=75, k=10, H=4, M=20, lr=2e-3, batch_size=64,
                      method="rage_k")
 
-    # one warmed engine per driver; repeats interleaved so machine noise
-    # hits both drivers alike, best-of so the systematic per-round
+    # one warmed engine per variant; repeats interleaved so machine noise
+    # hits all variants alike, best-of so the systematic per-round
     # dispatch savings aren't drowned by scheduler jitter
     runs = {}
-    for driver in DRIVERS:
-        engine = FederatedEngine("mlp", shards, test, hp, seed=0)
+    for name, driver, sel in VARIANTS:
+        engine = FederatedEngine("mlp", shards, test, hp, seed=0,
+                                 selection=sel)
         run = engine.run if driver == "step" else engine.run_scanned
         run(rounds, eval_every=rounds)                # compile + warm
-        runs[driver] = (engine, run)
-    best = {d: float("inf") for d in DRIVERS}
-    host_frac = {d: 0.0 for d in DRIVERS}
+        runs[name] = (engine, run)
+    best = {name: float("inf") for name, _, _ in VARIANTS}
+    host_frac = {name: 0.0 for name, _, _ in VARIANTS}
     for _ in range(repeats):
-        for driver in DRIVERS:
-            engine, run = runs[driver]
+        for name, _, _ in VARIANTS:
+            engine, run = runs[name]
             engine.device_s = 0.0
             t0 = time.perf_counter()
             run(rounds, eval_every=rounds)
             wall = time.perf_counter() - t0
-            if wall < best[driver]:
-                best[driver] = wall
-                host_frac[driver] = max(0.0, 1.0 - engine.device_s / wall)
+            if wall < best[name]:
+                best[name] = wall
+                host_frac[name] = max(0.0, 1.0 - engine.device_s / wall)
 
     out = {"config": {"rounds": rounds, "repeats": repeats,
                       "method": hp.method, "r": hp.r, "k": hp.k,
                       "H": hp.H, "M": hp.M, "batch_size": hp.batch_size}}
     rows = []
-    for driver in DRIVERS:
-        m = {"rounds_per_s": rounds / best[driver],
-             "host_dispatch_fraction": host_frac[driver],
-             "wall_s": best[driver]}
-        out[driver] = m
-        rows.append((f"engine_{driver}", 1e6 / m["rounds_per_s"],
+    for name, driver, sel in VARIANTS:
+        m = {"rounds_per_s": rounds / best[name],
+             "host_dispatch_fraction": host_frac[name],
+             "wall_s": best[name], "driver": driver, "selection": sel}
+        out[name] = m
+        rows.append((f"engine_{name}", 1e6 / m["rounds_per_s"],
                      f"rounds_per_s={m['rounds_per_s']:.2f};"
                      f"host_dispatch_frac={m['host_dispatch_fraction']:.3f}"))
     speedup = out["scan"]["rounds_per_s"] / out["step"]["rounds_per_s"]
     out["scan_speedup"] = speedup
+    out["selection_speedup"] = (out["scan"]["rounds_per_s"]
+                                / out["scan_seqsel"]["rounds_per_s"])
     save_json("BENCH_engine", out)
     rows.append(("engine_scan_speedup", 0.0, f"x{speedup:.2f}"))
+    rows.append(("engine_selection_speedup", 0.0,
+                 f"x{out['selection_speedup']:.2f}"))
     return rows
 
 

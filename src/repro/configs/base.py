@@ -210,6 +210,7 @@ class RAgeKConfig:
     min_pts: int = 2                 # DBSCAN minPts
     lr: float = 1e-4                 # Adam lr (paper)
     batch_size: int = 256
-    method: str = "rage_k"           # rage_k | rtop_k | top_k | random_k | dense
+    method: str = "rage_k"           # rage_k | rtop_k | top_k | random_k | dense | cafe
     disjoint_in_cluster: bool = True # PS requests disjoint sets within a cluster
     wire_dtype: str = "float32"      # paper: fp32 values; bf16 = beyond-paper
+    cafe_lam: float = 0.1            # CAFe cost weight (method == "cafe")

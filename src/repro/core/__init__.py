@@ -4,8 +4,9 @@ from repro.core.sparsify import (  # noqa: F401
     bucket_budgets, flatten_buckets, unflatten_buckets,
 )
 from repro.core.strategies import (  # noqa: F401
-    Strategy, RAgeK, RTopK, TopK, RandomK, Dense, make_strategy,
-    age_select,
+    Strategy, RAgeK, RTopK, TopK, RandomK, Dense, CAFeAgeK, make_strategy,
+    age_select, segment_pack, segmented_age_topk, segmented_rage_select,
+    SegmentedSelection,
 )
 from repro.core.age import AgeState  # noqa: F401
 from repro.core.clustering import (  # noqa: F401

@@ -6,22 +6,35 @@ a uniform, jit-able protocol:
     state = strategy.init_state(d[, key])
     idx, vals, state = strategy.select(g, state)     # g: (d,) flat
 
+and a BATCHED protocol over the full client population:
+
+    state = strategy.init_batch_state(d, n[, key])
+    idx, vals, state = strategy.select_batch(G, state)   # G: (N, d)
+
 ``state`` is a jnp pytree threaded through rounds on DEVICE: the age
 vector for rAge-k (paper eq. 2), a PRNG key for the stochastic baselines,
-and ``()`` for the deterministic ones. Every consumer of the old string
-dispatch (`fl.simulation`, `core.sparsify.apply_method`,
-`dist.sparse_sync`) now goes through these classes; adding an age-aware
-variant (CAFe-style cost weighting, timely-FL deadlines, ...) is a new
-Strategy, not a new ``elif``.
+and ``()`` for the deterministic ones. The batched default is a vmap of
+the per-vector rule (clients are independent for every baseline); every
+consumer of the old string dispatch (`fl.simulation`,
+`core.sparsify.apply_method`, `dist.sparse_sync`) goes through these
+classes — adding an age-aware variant (CAFe-style cost weighting,
+timely-FL deadlines, ...) is a new Strategy, not a new ``elif``.
 
 The FL engine's rAge-k path additionally coordinates clients of one
-cluster (shared age vector + disjoint requests); it reuses
-``age_select`` below so the selection math exists exactly once.
+cluster (shared age vector + disjoint requests, §II). That coordination
+is a SEGMENTED computation: clusters are mutually independent, so the
+disjointness recursion only has to run *within* a cluster. The segmented
+formulation below (``segment_pack`` + ``segmented_age_topk`` +
+``segmented_rage_select``) groups clients by cluster, pads clusters to
+the max live cluster size, scans member positions (length = max cluster
+size, not N) and vmaps across clusters — bit-identical to the sequential
+all-clients scan (same intra-cluster client order, same ``lax.top_k``
+tie-breaking), pinned by tests/test_segmented_selection.py.
 """
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Any, Protocol, runtime_checkable
+from typing import Any, NamedTuple, Protocol, runtime_checkable
 
 import jax
 import jax.numpy as jnp
@@ -41,7 +54,8 @@ def age_select(cand: jnp.ndarray, cand_age: jnp.ndarray, k: int):
 
 @runtime_checkable
 class Strategy(Protocol):
-    """select(g, state) -> (idx, vals, state); all jit-able."""
+    """select(g, state) -> (idx, vals, state); all jit-able.
+    select_batch(G, state) is the batched form over (N, d)."""
 
     name: str
     k: int
@@ -50,9 +64,24 @@ class Strategy(Protocol):
 
     def select(self, g: jnp.ndarray, state: Any): ...
 
+    def select_batch(self, G: jnp.ndarray, state: Any): ...
+
+
+class _VmapBatch:
+    """Default batched protocol: clients are independent, so the batch is
+    a vmap of the per-vector rule over leading axis 0 of G and of every
+    array leaf of the state pytree (stateless strategies pass ``()``,
+    which has no array leaves and broadcasts)."""
+
+    def init_batch_state(self, d: int, n: int, key=None):
+        return self.init_state(d, key)
+
+    def select_batch(self, G, state):
+        return jax.vmap(self.select)(G, state)
+
 
 @dataclass(frozen=True)
-class Dense:
+class Dense(_VmapBatch):
     """No compression — every client uploads the full gradient."""
 
     name: str = "dense"
@@ -66,7 +95,7 @@ class Dense:
 
 
 @dataclass(frozen=True)
-class TopK:
+class TopK(_VmapBatch):
     """Classic top-k magnitude sparsification [Lin et al. 2018]."""
 
     k: int
@@ -90,7 +119,7 @@ def _require_key(key, name: str):
 
 
 @dataclass(frozen=True)
-class RandomK:
+class RandomK(_VmapBatch):
     """Uniform random-k (exploration-only baseline). State: PRNG key."""
 
     k: int
@@ -99,6 +128,9 @@ class RandomK:
     def init_state(self, d: int, key=None):
         return _require_key(key, "RandomK")
 
+    def init_batch_state(self, d: int, n: int, key=None):
+        return jax.random.split(_require_key(key, "RandomK"), n)
+
     def select(self, g, key):
         key, sub = jax.random.split(key)
         idx = jax.random.choice(sub, g.shape[0], (self.k,), replace=False)
@@ -106,7 +138,7 @@ class RandomK:
 
 
 @dataclass(frozen=True)
-class RTopK:
+class RTopK(_VmapBatch):
     """rTop-k [Barnes et al. 2020]: random k of the top-r magnitudes."""
 
     r: int
@@ -115,6 +147,9 @@ class RTopK:
 
     def init_state(self, d: int, key=None):
         return _require_key(key, "RTopK")
+
+    def init_batch_state(self, d: int, n: int, key=None):
+        return jax.random.split(_require_key(key, "RTopK"), n)
 
     def select(self, g, key):
         key, sub = jax.random.split(key)
@@ -137,6 +172,9 @@ class RAgeK:
     def init_state(self, d: int, key=None):
         return jnp.zeros((d,), jnp.int32)
 
+    def init_batch_state(self, d: int, n: int, key=None):
+        return jnp.zeros((n, d), jnp.int32)
+
     def select(self, g, age, exclude=None):
         _, cand = jax.lax.top_k(jnp.abs(g), self.r)
         cand_age = age[cand].astype(jnp.int32)
@@ -146,10 +184,240 @@ class RAgeK:
         new_age = (age + 1).at[idx].set(0)
         return idx, g[idx], new_age
 
+    def select_batch(self, G, state):
+        """Uncoordinated batch: one independent (d,) age vector per
+        client. Cluster-coordinated selection (shared age + disjoint
+        requests) is :meth:`select_segmented`."""
+        return jax.vmap(lambda g, a: self.select(g, a))(G, state)
 
-def make_strategy(method: str, *, r: int = 0, k: int = 0) -> Strategy:
+    def select_segmented(self, G, cluster_age, cluster_of, *,
+                         num_segments: int | None = None,
+                         max_seg: int | None = None,
+                         disjoint: bool = True, impl: str = "jnp"):
+        """Cluster-coordinated batched selection (engine PS path); see
+        :func:`segmented_rage_select`."""
+        return segmented_rage_select(
+            G, cluster_age, cluster_of, r=self.r, k=self.k,
+            num_segments=num_segments, max_seg=max_seg,
+            disjoint=disjoint, impl=impl)
+
+
+@dataclass(frozen=True)
+class CAFeAgeK(_VmapBatch):
+    """CAFe-style cost-and-age aware variant (PAPERS.md: *CAFe: Cost and
+    Age aware Federated Learning*): pick the k candidates maximizing
+    ``age - lam * cost`` among the top-r magnitudes, where ``cost`` is the
+    cumulative number of times an index was already uploaded — stale
+    coordinates are prioritized, but coordinates that have repeatedly
+    consumed uplink are discounted. ``lam = 0`` reduces exactly to
+    per-client rAge-k. State: ((d,) int32 age, (d,) int32 cost)."""
+
+    r: int
+    k: int
+    lam: float = 0.1
+    name: str = "cafe"
+
+    def init_state(self, d: int, key=None):
+        return (jnp.zeros((d,), jnp.int32), jnp.zeros((d,), jnp.int32))
+
+    def init_batch_state(self, d: int, n: int, key=None):
+        return (jnp.zeros((n, d), jnp.int32), jnp.zeros((n, d), jnp.int32))
+
+    def select(self, g, state):
+        age, cost = state
+        _, cand = jax.lax.top_k(jnp.abs(g), self.r)
+        score = (age[cand].astype(jnp.float32)
+                 - jnp.float32(self.lam) * cost[cand].astype(jnp.float32))
+        _, sel = jax.lax.top_k(score, self.k)       # stable: |g| tie-break
+        idx = cand[sel]
+        new_age = (age + 1).at[idx].set(0)
+        new_cost = cost.at[idx].add(1)
+        return idx, g[idx], (new_age, new_cost)
+
+
+# ---------------------------------------------------------------------------
+# segmented per-cluster selection plane (paper §II disjointness, batched)
+# ---------------------------------------------------------------------------
+
+class SegmentedSelection(NamedTuple):
+    """Selection output in SEGMENT layout, ready for fused aggregation.
+
+    members: (C, S) int32 — client id at (cluster, position); padded
+             slots hold the sentinel N (clip before gathering with it).
+    idx:     (C, S, k) int32 — requested indices; padded slots hold the
+             sentinel d, which sparse aggregation drops.
+    """
+
+    members: jnp.ndarray
+    idx: jnp.ndarray
+
+
+def segment_pack(cluster_of: jnp.ndarray, num_segments: int, max_seg: int):
+    """Device-side cluster->segment packing: (N,) cluster ids -> (C, S)
+    members matrix, client order preserved within each cluster (the
+    tie-break/disjointness contract). Labels must be < num_segments and
+    no cluster may exceed max_seg members (the engine recomputes both
+    bounds from the host-side DBSCAN labels at every recluster; dense
+    canonical labels always fit num_segments = N, max_seg = N).
+    """
+    n = cluster_of.shape[0]
+    cl = cluster_of.astype(jnp.int32)
+    _, order = jax.lax.sort((cl, jnp.arange(n, dtype=jnp.int32)),
+                            num_keys=1, is_stable=True)
+    sorted_cl = cl[order]
+    is_start = jnp.concatenate([jnp.ones((1,), bool),
+                                sorted_cl[1:] != sorted_cl[:-1]])
+    seg_start = jax.lax.cummax(jnp.where(is_start, jnp.arange(n), 0))
+    pos = jnp.arange(n) - seg_start
+    return jnp.full((num_segments, max_seg), n, jnp.int32).at[
+        sorted_cl, pos].set(order, mode="drop")
+
+
+def segmented_age_topk(cand: jnp.ndarray, cand_age: jnp.ndarray,
+                       valid: jnp.ndarray, k: int, *,
+                       disjoint: bool = True) -> jnp.ndarray:
+    """Masked age-top-k over segment candidates — the pure-jnp reference
+    (also the oracle for the Pallas kernel, re-exported by kernels.ref).
+
+    cand/cand_age: (C, S, r) per-member candidate indices (|g|-descending)
+    and their non-negative ages; valid: (C, S) live-member mask. Scans
+    member positions with a running buffer of already-taken indices
+    (membership test replaces the (d,) taken mask: the taken set is
+    exactly the indices selected by earlier valid members of the same
+    segment), vmapped across segments. Returns (C, S, k) selected
+    indices.
+
+    The per-member pick is k first-occurrence-argmax passes, which is
+    EXACTLY stable ``lax.top_k`` (each pass takes the max with the
+    lowest position; candidates are |g|-descending, so age ties keep
+    resolving toward larger magnitude) but avoids a batched sort per
+    scan step — ~3x faster on CPU and the same recursion the Pallas
+    kernel runs. Bit-identical to the sequential per-client scan.
+    """
+    C, S, r = cand.shape
+    neg = jnp.int32(-(2 ** 31) + 1)
+
+    def one_segment(cand_c, age_c, valid_c):
+        def body(sel_buf, inp):
+            s, c, a, v = inp
+            if disjoint:
+                taken = jnp.any(c[:, None] == sel_buf[None, :], axis=1)
+                a = jnp.where(taken, jnp.int32(-1), a)
+
+            def pick(j, st):
+                a_j, sel = st
+                p = jnp.argmax(a_j)
+                sel = sel.at[j].set(c[p])
+                return a_j.at[p].set(neg), sel
+
+            _, idx = jax.lax.fori_loop(
+                0, k, pick, (a, jnp.zeros((k,), jnp.int32)))
+            if disjoint:
+                rec = jnp.where(v, idx, jnp.int32(-1))
+                sel_buf = jax.lax.dynamic_update_slice(sel_buf, rec, (s * k,))
+            return sel_buf, idx
+
+        buf0 = jnp.full((S * k,), -1, jnp.int32)
+        _, idx = jax.lax.scan(
+            body, buf0, (jnp.arange(S), cand_c, age_c, valid_c))
+        return idx
+
+    return jax.vmap(one_segment)(cand.astype(jnp.int32),
+                                 cand_age.astype(jnp.int32), valid)
+
+
+def client_candidates(G: jnp.ndarray, r: int) -> jnp.ndarray:
+    """The per-client top-r magnitude candidate report (|g|-descending) —
+    computed CLIENT-side in the protocol and uploaded; both selection
+    planes consume it."""
+    return jax.vmap(lambda gi: jax.lax.top_k(jnp.abs(gi), r)[1])(G)
+
+
+def segmented_rage_select(G: jnp.ndarray, cluster_age: jnp.ndarray,
+                          cluster_of: jnp.ndarray, *, r: int, k: int,
+                          num_segments: int | None = None,
+                          max_seg: int | None = None,
+                          disjoint: bool = True, impl: str = "jnp",
+                          cands: jnp.ndarray | None = None):
+    """Paper Algorithm 1 steps 2-3 + eq. (2) in the segmented per-cluster
+    formulation: the disjointness recursion runs only WITHIN each padded
+    cluster (scan length = max_seg, not N) and clusters run in parallel
+    (vmap / one Pallas program per segment).
+
+    G: (N, d) client gradients; cluster_age: (>=num_segments, d) int32;
+    cluster_of: (N,) int32 labels < num_segments (each cluster <= max_seg
+    members). impl='pallas' routes the inner masked top-k through
+    ``kernels.ops.segmented_age_topk``; ``cands`` takes a precomputed
+    :func:`client_candidates` report (the PS-only entry point). Returns
+    (idx (N, k) int32, new_cluster_age, SegmentedSelection) —
+    bit-identical to the sequential all-clients scan
+    (fl.engine.rage_select), rows >= num_segments untouched.
+    """
+    n, d = G.shape
+    if num_segments is None:
+        num_segments = n
+    if max_seg is None:
+        max_seg = n
+    members = segment_pack(cluster_of, num_segments, max_seg)
+    valid = members < n
+    mclip = jnp.minimum(members, n - 1)
+    if cands is None:
+        cands = client_candidates(G, r)
+    seg_cand = cands[mclip]                                    # (C, S, r)
+    ca = cluster_age[:num_segments].astype(jnp.int32)          # (C, d)
+    seg_age = jax.vmap(lambda row, cnd: row[cnd])(ca, seg_cand)
+    if impl == "pallas":
+        from repro.kernels import ops
+        seg_idx = ops.segmented_age_topk(seg_cand, seg_age, valid, k,
+                                         disjoint=disjoint)
+    else:
+        seg_idx = segmented_age_topk(seg_cand, seg_age, valid, k,
+                                     disjoint=disjoint)
+    # back to client layout: every live client sits in exactly one slot;
+    # the padded slots' sentinel row n is dropped
+    idx = jnp.zeros((n, k), jnp.int32).at[members.reshape(-1)].set(
+        seg_idx.reshape(-1, k), mode="drop")
+
+    # eq. (2) per segment in CLOSED FORM instead of a member scan: the
+    # sequential semantics (+1 per member, requested reset to 0, later
+    # members' resets win) collapse to
+    #   requested j:   sz_c - 1 - last_pos(j)   (members after the last
+    #                                            requester each add 1)
+    #   unrequested j: row + sz_c
+    # because valid members occupy the positions 0..sz_c-1 contiguously.
+    # last_pos is a scatter-max of member positions; padded slots
+    # scatter to a dropped sentinel. The flattened (C*d,) lane is the
+    # faster scatter but its indices only fit int32 while
+    # num_segments * d < 2^31 — beyond that, fall back to the 2D form
+    # (per-row indices < d, no overflow), which is bit-identical.
+    sz = valid.sum(axis=1).astype(jnp.int32)
+    pos = jnp.broadcast_to(
+        jnp.arange(max_seg, dtype=jnp.int32)[None, :, None], seg_idx.shape)
+    if num_segments * d < 2 ** 31:
+        flat = jnp.where(
+            valid[:, :, None],
+            jnp.arange(num_segments, dtype=jnp.int32)[:, None, None] * d
+            + seg_idx,
+            num_segments * d)
+        last = jnp.full((num_segments * d,), -1, jnp.int32).at[
+            flat.reshape(-1)].max(pos.reshape(-1), mode="drop").reshape(
+                num_segments, d)
+    else:
+        idx_m = jnp.where(valid[:, :, None], seg_idx, d)
+        last = jnp.full((num_segments, d), -1, jnp.int32).at[
+            jnp.arange(num_segments)[:, None, None], idx_m].max(
+                pos, mode="drop")
+    new_rows = jnp.where(last >= 0, sz[:, None] - 1 - last,
+                         ca + sz[:, None])
+    new_cluster_age = cluster_age.at[:num_segments].set(new_rows)
+    seg_idx = jnp.where(valid[:, :, None], seg_idx, jnp.int32(d))
+    return idx, new_cluster_age, SegmentedSelection(members, seg_idx)
+
+
+def make_strategy(method: str, *, r: int = 0, k: int = 0,
+                  lam: float = 0.1) -> Strategy:
     """Config-string factory ('rage_k' | 'rtop_k' | 'top_k' | 'random_k'
-    | 'dense')."""
+    | 'dense' | 'cafe'); ``lam`` is the CAFe cost weight."""
     if method == "rage_k":
         return RAgeK(r=r, k=k)
     if method == "rtop_k":
@@ -160,7 +428,9 @@ def make_strategy(method: str, *, r: int = 0, k: int = 0) -> Strategy:
         return RandomK(k=k)
     if method == "dense":
         return Dense()
+    if method == "cafe":
+        return CAFeAgeK(r=r, k=k, lam=lam)
     raise ValueError(f"unknown method {method!r}")
 
 
-STRATEGIES = ("rage_k", "rtop_k", "top_k", "random_k", "dense")
+STRATEGIES = ("rage_k", "rtop_k", "top_k", "random_k", "dense", "cafe")

@@ -40,16 +40,20 @@ from repro.optim.optimizers import apply_updates
 _INDEX_BYTES = 4
 
 
-def init_age_state(params):
-    """Age pytree: int32 zeros shaped like every param leaf."""
+def init_age_state(params, *, method: str = "rage_k"):
+    """Age pytree: int32 zeros shaped like every param leaf. For
+    ``method='cafe'`` each leaf gains a leading (2,) axis: row 0 the age
+    vector, row 1 the cumulative upload-cost counter the CAFe score
+    discounts by."""
+    lead = (2,) if method == "cafe" else ()
     return jax.tree_util.tree_map(
-        lambda p: jnp.zeros(p.shape, jnp.int32), params)
+        lambda p: jnp.zeros(lead + tuple(p.shape), jnp.int32), params)
 
 
-def init_age_state_sharded(shapes):
+def init_age_state_sharded(shapes, *, method: str = "rage_k"):
     """Same as init_age_state but from ShapeDtypeStructs (abstract
     params); usable under jax.eval_shape for lowering-only paths."""
-    return init_age_state(shapes)
+    return init_age_state(shapes, method=method)
 
 
 def _wire_bytes(dtype) -> int:
@@ -61,20 +65,31 @@ def _leaf_sizes(shapes) -> list:
             for l in jax.tree_util.tree_leaves(shapes)]
 
 
-def _select_bucket(method: str, flat, age_flat, r_b: int, k_b: int):
+def _select_bucket(method: str, flat, age_flat, r_b: int, k_b: int,
+                   lam: float = 0.1):
     """One bucket's selection via the Strategy API. Returns
-    (idx (k_b,), vals (k_b,), new_age_flat)."""
+    (idx (k_b,), vals (k_b,), new_age_flat). For 'cafe' ``age_flat`` is
+    the stacked (2, d_b) [age; cost] state (init_age_state layout)."""
     d_b = flat.shape[0]
     r_b, k_b = min(r_b, d_b), min(k_b, d_b)
-    strat = make_strategy(method, r=r_b, k=k_b)
+    strat = make_strategy(method, r=r_b, k=k_b, lam=lam)
     if method == "rage_k":
         return strat.select(flat, age_flat)
+    if method == "cafe":
+        idx, vals, (na, nc) = strat.select(flat, (age_flat[0], age_flat[1]))
+        return idx, vals, jnp.stack([na, nc])
     if method in ("top_k",):
         idx, vals, _ = strat.select(flat, ())
         return idx, vals, age_flat
     raise ValueError(
-        f"sparse_sync supports 'rage_k' | 'top_k' | 'dense', got {method!r}"
-        " (stochastic baselines need per-step keys; use the FL engine)")
+        f"sparse_sync supports 'rage_k' | 'cafe' | 'top_k' | 'dense', got "
+        f"{method!r} (stochastic baselines need per-step keys; use the FL "
+        "engine)")
+
+
+def _flat_age(a, method: str):
+    """Bucket view of one age leaf: (d_b,) for rage_k, (2, d_b) for cafe."""
+    return a.reshape(2, -1) if method == "cafe" else a.reshape(-1)
 
 
 # ---------------------------------------------------------------------------
@@ -83,14 +98,16 @@ def _select_bucket(method: str, flat, age_flat, r_b: int, k_b: int):
 
 def make_sync_train_step(loss_fn, opt, mesh, *, method: str = "rage_k",
                          r: int = 0, k: int = 0,
-                         wire_dtype=jnp.bfloat16):
+                         wire_dtype=jnp.bfloat16, lam: float = 0.1):
     """Returns step(params, opt_state, ages, batch) ->
     (params, opt_state, ages, loss, stats).
 
     The gradient is replaced by its wire form before the optimizer:
     dense -> a wire_dtype cast round-trip; sparse -> the k_b selected
-    entries per bucket (everything else zero), ages updated per eq. (2).
-    stats["wire_bytes_per_shard"] counts k_b * (4B index + wire value).
+    entries per bucket (everything else zero), ages updated per eq. (2)
+    ('cafe' additionally threads the per-leaf cost counters; ``lam`` is
+    its cost weight). stats["wire_bytes_per_shard"] counts
+    k_b * (4B index + wire value).
     """
     del mesh  # GSPMD path: partitioning is inferred; kept for API parity
     vb = _wire_bytes(wire_dtype)
@@ -111,7 +128,7 @@ def make_sync_train_step(loss_fn, opt, mesh, *, method: str = "rage_k",
             for l, a, (r_b, k_b) in zip(leaves, age_leaves, budgets):
                 flat = l.reshape(-1)
                 idx, vals, new_a = _select_bucket(
-                    method, flat, a.reshape(-1), r_b, k_b)
+                    method, flat, _flat_age(a, method), r_b, k_b, lam=lam)
                 vals = vals.astype(wire_dtype).astype(flat.dtype)
                 synced.append(
                     jnp.zeros_like(flat).at[idx].set(vals).reshape(l.shape))
@@ -132,19 +149,23 @@ def make_sync_train_step(loss_fn, opt, mesh, *, method: str = "rage_k",
 # ---------------------------------------------------------------------------
 
 def make_manual_sync(mesh, specs, shapes, *, method: str = "rage_k",
-                     r: int = 0, k: int = 0, wire_dtype=jnp.bfloat16):
+                     r: int = 0, k: int = 0, wire_dtype=jnp.bfloat16,
+                     lam: float = 0.1):
     """Explicit gradient exchange over the mesh's data axes.
 
     specs/shapes: pytrees of PartitionSpec / ShapeDtypeStruct for the
     grads (= params). Returns sync(grads, ages) -> (synced, new_ages,
-    stats); the closure exposes ``.age_specs`` (ages sharded like grads).
+    stats); the closure exposes ``.age_specs`` (ages sharded like grads;
+    for 'cafe' the stacked (2, ...) [age; cost] leaves replicate their
+    leading axis).
 
     Each data shard selects its k_b entries per bucket from its LOCAL
     gradient (its microbatch's view), all-gathers the (idx, vals)
     payloads over the data axes, and scatter-adds the union divided by
     the shard count (a sparse pmean). Ages are updated with the UNION of
     requested indices — the merged-vector semantics of the paper's
-    cluster age (§II) applied to data shards.
+    cluster age (§II) applied to data shards ('cafe' additionally counts
+    the union into the cost lane).
     """
     data_axes = tuple(a for a in ("pod", "data") if a in mesh.shape)
     n_data = 1
@@ -197,8 +218,9 @@ def make_manual_sync(mesh, specs, shapes, *, method: str = "rage_k",
                 new_ages.append(a)
                 wire += flat.shape[0] * vb
                 continue
+            af = _flat_age(a, method)
             idx, vals, _ = _select_bucket(
-                method, flat, a.reshape(-1), r_b, k_b)
+                method, flat, af, r_b, k_b, lam=lam)
             vals = vals.astype(wire_dtype)
             if data_axes:
                 idx = jax.lax.all_gather(idx, data_axes, tiled=True)
@@ -206,15 +228,29 @@ def make_manual_sync(mesh, specs, shapes, *, method: str = "rage_k",
             dense = jnp.zeros_like(flat).at[idx].add(
                 vals.astype(jnp.float32) / n_data)
             hit = jnp.zeros(flat.shape, bool).at[idx].set(True)
-            new_a = jnp.where(hit, 0, a.reshape(-1) + 1).astype(jnp.int32)
+            if method == "cafe":
+                # union semantics on the age lane; the union also counts
+                # into the cost lane (one upload of every union index)
+                new_a = jnp.stack([
+                    jnp.where(hit, 0, af[0] + 1),
+                    af[1] + hit.astype(jnp.int32)]).astype(jnp.int32)
+            else:
+                new_a = jnp.where(hit, 0, af + 1).astype(jnp.int32)
             synced.append(dense.reshape(g.shape).astype(g.dtype))
             new_ages.append(new_a.reshape(a.shape))
             wire += min(k_b, int(flat.shape[0])) * (_INDEX_BYTES + vb)
         stats = {"wire_bytes_per_shard": jnp.int32(wire)}
         return tuple(synced) + tuple(new_ages) + (stats,)
 
-    in_specs = tuple(spec_leaves) * 2
-    out_specs = tuple(spec_leaves) * 2 + ({"wire_bytes_per_shard": P()},)
+    if method == "cafe":
+        # stacked (2, ...) [age; cost] leaves: the leading axis is
+        # replicated, the param dims keep the grad sharding
+        age_spec_leaves = [P(*((None,) + tuple(s))) for s in spec_leaves]
+    else:
+        age_spec_leaves = list(spec_leaves)
+    in_specs = tuple(spec_leaves) + tuple(age_spec_leaves)
+    out_specs = (tuple(spec_leaves) + tuple(age_spec_leaves)
+                 + ({"wire_bytes_per_shard": P()},))
     mapped = shard_map(_exchange, mesh=mesh, in_specs=in_specs,
                        out_specs=out_specs, check_rep=False)
 
@@ -227,5 +263,9 @@ def make_manual_sync(mesh, specs, shapes, *, method: str = "rage_k",
         new_ages = jax.tree_util.tree_unflatten(treedef, out[n:2 * n])
         return synced, new_ages, out[-1]
 
-    sync.age_specs = specs          # ages are sharded exactly like grads
+    # ages are sharded exactly like grads (cafe: leading lane replicated)
+    sync.age_specs = (jax.tree_util.tree_unflatten(
+        jax.tree_util.tree_structure(
+            specs, is_leaf=lambda x: isinstance(x, P)), age_spec_leaves)
+        if method == "cafe" else specs)
     return sync

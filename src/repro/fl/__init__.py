@@ -1,5 +1,6 @@
 from repro.fl.engine import (  # noqa: F401
     DeviceAgeState, FederatedEngine, FLResult, rage_select,
+    rage_select_segmented,
 )
 from repro.fl.simulation import run_fl  # noqa: F401
 from repro.fl.server import (  # noqa: F401

@@ -30,8 +30,23 @@ Only two things ever cross to host:
 
 The dense (N, d) float gradient matrix never leaves the accelerator
 (pinned by tests/test_engine_golden.py). Method dispatch goes through
-``core.strategies`` — a new selection rule is a new Strategy, not a new
-``elif``. ``fl.simulation.run_fl`` is a thin compatibility wrapper.
+``core.strategies`` batched protocol (``select_batch``) — a new
+selection rule is a new Strategy, not a new ``elif``.
+``fl.simulation.run_fl`` is a thin compatibility wrapper.
+
+The rAge-k selection plane has two implementations (DESIGN.md §7):
+
+  * ``selection='segmented'`` (default) — the per-cluster parallel
+    formulation: clients grouped by cluster on device, clusters padded
+    to the largest live cluster, the in-cluster disjointness recursion
+    scans member positions (max cluster size, not N) and clusters run
+    in parallel (:func:`rage_select_segmented`);
+  * ``selection='scan'`` — the sequential all-clients ``lax.scan``
+    reference (:func:`rage_select`), kept reachable for A/B debugging.
+
+Both are bit-identical (tests/test_segmented_selection.py); the static
+packing bounds (live cluster count, max cluster size) come from the
+host-side DBSCAN labels at every recluster — no extra transfer.
 """
 from __future__ import annotations
 
@@ -48,7 +63,8 @@ from repro.configs.base import RAgeKConfig
 from repro.core.age import AgeState
 from repro.core.clustering import cluster_clients, connectivity_matrix
 from repro.core.compression import bytes_per_index, bytes_per_round
-from repro.core.strategies import make_strategy
+from repro.core.strategies import (client_candidates, make_strategy,
+                                   segmented_rage_select)
 from repro.data.pipeline import DeviceShardStore
 from repro.fl import client as C
 from repro.fl.server import aggregate_sparse, aggregate_sparse_fused
@@ -131,7 +147,7 @@ def _build_model(kind: str, key):
 
 @partial(jax.jit, static_argnames=("r", "k", "disjoint"))
 def rage_select(g: jnp.ndarray, age: DeviceAgeState, *, r: int, k: int,
-                disjoint: bool = True):
+                disjoint: bool = True, cands=None):
     """Algorithm 1 steps 2-3 + eq. (2), entirely on device.
 
     g: (N, d) client gradients. Clients are processed in order; within a
@@ -139,12 +155,14 @@ def rage_select(g: jnp.ndarray, age: DeviceAgeState, *, r: int, k: int,
     remaining members (disjointness, §II). Selection reads ROUND-START
     ages for every client; eq. (2) is then applied sequentially per
     member (+1 per member, requested set to 0) — bit-identical to the
-    host ``core.protocol.ParameterServer`` reference.
+    host ``core.protocol.ParameterServer`` reference. ``cands`` takes a
+    precomputed ``client_candidates`` report (PS-only entry point).
 
     Returns (idx (N, k) int32, new DeviceAgeState).
     """
     n, d = g.shape
-    cands = jax.vmap(lambda gi: jax.lax.top_k(jnp.abs(gi), r)[1])(g)
+    if cands is None:
+        cands = client_candidates(g, r)
 
     def sel_body(taken, inp):
         cand, cl = inp
@@ -173,13 +191,49 @@ def rage_select(g: jnp.ndarray, age: DeviceAgeState, *, r: int, k: int,
                                                  age.cluster_of)
 
 
-def recluster(age: DeviceAgeState, eps: float, min_pts: int) -> DeviceAgeState:
+@partial(jax.jit, static_argnames=("r", "k", "disjoint", "num_segments",
+                                   "max_seg", "impl", "return_seg"))
+def rage_select_segmented(g: jnp.ndarray, age: DeviceAgeState, *, r: int,
+                          k: int, num_segments: int | None = None,
+                          max_seg: int | None = None,
+                          disjoint: bool = True, impl: str = "jnp",
+                          cands=None, return_seg: bool = False):
+    """Segmented per-cluster formulation of :func:`rage_select` — same
+    contract (idx (N, k) int32, new DeviceAgeState), BIT-IDENTICAL output
+    (pinned by tests/test_segmented_selection.py), but the disjointness
+    recursion scans only member positions WITHIN each padded cluster
+    (length = max_seg, not N) and clusters run in parallel.
+
+    num_segments/max_seg are STATIC bounds on the live cluster count /
+    largest cluster (defaults N/N always fit; the engine tightens them
+    from the host-side DBSCAN labels at every recluster — no new device
+    ->host transfer, the labels were already on host). impl='pallas'
+    routes the masked top-k through ``kernels.ops.segmented_age_topk``.
+    ``return_seg=True`` appends the ``SegmentedSelection`` (the engine's
+    fused-aggregation hand-off).
+    """
+    n = g.shape[0]
+    idx, new_ca, seg = segmented_rage_select(
+        g, age.cluster_age, age.cluster_of, r=r, k=k,
+        num_segments=num_segments, max_seg=max_seg, disjoint=disjoint,
+        impl=impl, cands=cands)
+    freq = age.freq.at[jnp.arange(n)[:, None], idx].add(1)
+    idx = idx.astype(jnp.int32)
+    new_age = DeviceAgeState(new_ca, freq, age.cluster_of)
+    if return_seg:
+        return idx, new_age, seg
+    return idx, new_age
+
+
+def recluster_packed(age: DeviceAgeState, eps: float, min_pts: int):
     """Eq. (3) similarity -> DBSCAN -> merge/reset of cluster age vectors.
 
     The ONE host round-trip of the control loop (every M rounds): the
     (N, d) int32 freq matrix comes down, labels go back up. Merge/reset
     semantics are delegated to ``core.age.AgeState.apply_clusters`` so
-    they exist exactly once."""
+    they exist exactly once. Returns (new state, host-side (N,) labels) —
+    the labels are the engine's source for the segmented packing bounds
+    (live cluster count, max cluster size) without any extra transfer."""
     n, d = age.freq.shape
     freq = np.asarray(age.freq)
     labels = cluster_clients(freq, eps, min_pts)
@@ -193,7 +247,12 @@ def recluster(age: DeviceAgeState, eps: float, min_pts: int) -> DeviceAgeState:
         new_ca[c] = v
     return DeviceAgeState(
         cluster_age=jnp.asarray(new_ca), freq=age.freq,
-        cluster_of=jnp.asarray(st.cluster_of, dtype=jnp.int32))
+        cluster_of=jnp.asarray(st.cluster_of, dtype=jnp.int32)), st.cluster_of
+
+
+def recluster(age: DeviceAgeState, eps: float, min_pts: int) -> DeviceAgeState:
+    """:func:`recluster_packed` without the label return (compat surface)."""
+    return recluster_packed(age, eps, min_pts)[0]
 
 
 # ---------------------------------------------------------------------------
@@ -215,16 +274,24 @@ class FederatedEngine:
 
     def __init__(self, kind: str, shards: list, test: tuple,
                  hp: RAgeKConfig, *, seed: int = 0, ef: bool = False,
-                 global_opt: str = "adam", aggregate_impl: str = "auto"):
-        if hp.method in ("rage_k", "rtop_k") and hp.r < hp.k:
+                 global_opt: str = "adam", aggregate_impl: str = "auto",
+                 selection: str = "segmented"):
+        if hp.method in ("rage_k", "rtop_k", "cafe") and hp.r < hp.k:
             raise ValueError(
                 f"method {hp.method!r} selects k of the top-r candidates; "
                 f"need r >= k (got r={hp.r}, k={hp.k})")
+        if selection not in ("scan", "segmented"):
+            raise ValueError(f"selection must be 'scan' or 'segmented', "
+                             f"got {selection!r}")
         self.hp = hp
         self.kind = kind
         self.n = len(shards)
         self.seed = seed
         self.ef = ef
+        # rage_k selection plane: 'segmented' (per-cluster parallel,
+        # default) or 'scan' (the sequential all-clients reference,
+        # bit-identical — kept reachable for A/B debugging)
+        self._selection = selection
         key = jax.random.PRNGKey(seed)
         g_params, state0, apply_loss, predict = _build_model(kind, key)
         self._predict = predict
@@ -232,13 +299,20 @@ class FederatedEngine:
         self.d = sum(int(x.size)
                      for x in jax.tree_util.tree_leaves(g_params))
         self._unflatten = C.unflattener(g_params)
-        self._strategy = make_strategy(hp.method, r=hp.r, k=hp.k)
+        self._strategy = make_strategy(hp.method, r=hp.r, k=hp.k,
+                                       lam=hp.cafe_lam)
         self._local_phase = C.make_local_phase(apply_loss, hp.lr)
         self._g_opt = adam(hp.lr) if global_opt == "adam" else sgd(hp.lr)
         if aggregate_impl == "auto":
             aggregate_impl = ("pallas" if jax.default_backend() == "tpu"
                               else "jnp")
         self._agg_impl = aggregate_impl
+        self._sel_impl = "pallas" if aggregate_impl == "pallas" else "jnp"
+        # segmented packing bounds: live cluster count / largest cluster.
+        # STATIC (recompile keys) — recomputed from the host-side DBSCAN
+        # labels at every recluster; singletons at t=0.
+        self._num_seg = self.n
+        self._max_seg = 1
         # uploaded values take the protocol's wire form (fp32 paper
         # default; bf16 beyond-paper) — the cast round-trip below keeps
         # curves and the byte accounting talking about the same payload
@@ -274,7 +348,7 @@ class FederatedEngine:
         if hp.method == "dense":
             self._per_client_bytes = bytes_per_round(
                 0, self.d, dense=True, wire_dtype=hp.wire_dtype)
-        elif hp.method == "rage_k":
+        elif hp.method in ("rage_k", "cafe"):
             # + the top-r candidate report uploaded for PS selection
             self._per_client_bytes = bytes_per_round(
                 hp.k, self.d, wire_dtype=hp.wire_dtype) + hp.r * ib
@@ -283,7 +357,8 @@ class FederatedEngine:
                 hp.k, self.d, wire_dtype=hp.wire_dtype)
         self.cum_bytes = 0
 
-        self._round = jax.jit(self._round_impl)
+        self._round = jax.jit(self._round_impl,
+                              static_argnames=("num_segments", "max_seg"))
         self._chunks: dict = {}          # scan length -> jitted chunk
         self._eval = jax.jit(self._eval_impl)
         self.device_s = 0.0              # wall spent blocking on device
@@ -303,13 +378,15 @@ class FederatedEngine:
             return dense
         return aggregate_sparse(idx, vals, self.d)
 
-    def _round_impl(self, data, carry):
+    def _round_impl(self, data, carry, num_segments=None, max_seg=None):
         """One global round, device-pure: (data, carry) -> (carry, metrics).
 
         ``data`` is the uploaded shard store; ``carry`` threads all
         mutable engine state (params, opt, ages, ef memory, PRNG keys,
-        sampler). The SAME traced body backs both drivers, which is what
-        makes run_scanned bit-identical to repeated step()."""
+        sampler). num_segments/max_seg are the STATIC segmented-packing
+        bounds (rage_k + selection='segmented' only). The SAME traced
+        body backs both drivers, which is what makes run_scanned
+        bit-identical to repeated step()."""
         (g_params, g_opt_state, params_s, opt_s, state_s, age, ef_mem,
          key, samp) = carry
         hp = self.hp
@@ -323,17 +400,32 @@ class FederatedEngine:
 
         key, sub = jax.random.split(key)
         method = hp.method
+        seg = None
         if method == "rage_k":
-            idx, age = rage_select(g, age, r=hp.r, k=hp.k,
-                                   disjoint=hp.disjoint_in_cluster)
+            if self._selection == "segmented":
+                idx, age, seg = rage_select_segmented(
+                    g, age, r=hp.r, k=hp.k, num_segments=num_segments,
+                    max_seg=max_seg, disjoint=hp.disjoint_in_cluster,
+                    impl=self._sel_impl, return_seg=True)
+            else:
+                idx, age = rage_select(g, age, r=hp.r, k=hp.k,
+                                       disjoint=hp.disjoint_in_cluster)
+        elif method == "cafe":
+            # per-client cost-and-age selection via the batched protocol;
+            # cluster_age doubles as the per-client age rows (clusters
+            # stay singleton — no recluster on this method) and freq is
+            # exactly the cumulative upload cost CAFe discounts by
+            idx, _, (ca, fr) = self._strategy.select_batch(
+                g, (age.cluster_age, age.freq))
+            age = DeviceAgeState(ca, fr, age.cluster_of)
+            idx = idx.astype(jnp.int32)
         elif method == "dense":
             idx = None
         elif method in ("rtop_k", "random_k"):
             keys = jax.random.split(sub, self.n)
-            idx, _, _ = jax.vmap(self._strategy.select)(g, keys)
+            idx, _, _ = self._strategy.select_batch(g, keys)
         else:                                     # top_k — deterministic
-            idx, _, _ = jax.vmap(
-                lambda gi: self._strategy.select(gi, ()))(g)
+            idx, _, _ = self._strategy.select_batch(g, ())
 
         if idx is None:
             gw = g.astype(self._wire_dtype).astype(g.dtype)
@@ -342,7 +434,19 @@ class FederatedEngine:
         else:
             vals = jnp.take_along_axis(g, idx, axis=1)
             vals = vals.astype(self._wire_dtype).astype(g.dtype)
-            g_sum = self._aggregate(idx, vals)
+            if seg is not None and self._agg_impl == "pallas":
+                # fused path: the SEGMENTED layout feeds the kernel
+                # directly — padded member slots carry the sentinel
+                # index d, which the scatter kernel drops
+                mclip = jnp.minimum(seg.members, self.n - 1)
+                seg_vals = jnp.where(seg.members[..., None] < self.n,
+                                     vals[mclip], jnp.zeros((), g.dtype))
+                dense, _ = aggregate_sparse_fused(
+                    seg.idx, seg_vals, jnp.zeros((self.d,), jnp.int32),
+                    impl="pallas")
+                g_sum = dense
+            else:
+                g_sum = self._aggregate(idx, vals)
             sent = jax.vmap(
                 lambda i, v: jnp.zeros((self.d,), g.dtype).at[i].set(v)
             )(idx, vals)
@@ -374,6 +478,14 @@ class FederatedEngine:
     # ------------------------------------------------------------------
     # host control plane
     # ------------------------------------------------------------------
+    def _seg_bounds(self):
+        """Static packing bounds for the jitted round — (None, None) for
+        every path that doesn't consume them, so e.g. selection='scan'
+        never recompiles when a recluster changes the cluster shape."""
+        if self.hp.method == "rage_k" and self._selection == "segmented":
+            return self._num_seg, self._max_seg
+        return None, None
+
     def _pack(self):
         return (self.g_params, self.g_opt_state, self.params_s, self.opt_s,
                 self.state_s, self.age, self.ef_mem, self._key, self.samp)
@@ -385,14 +497,22 @@ class FederatedEngine:
     def _chunk(self, length: int):
         """Jitted `length`-round chunk: one lax.scan over `_round_impl`,
         metrics stacked (length, ...) on device. Cached per length (chunk
-        boundaries produce only a handful of distinct lengths)."""
+        boundaries produce only a handful of distinct lengths); the
+        segmented-packing bounds ride along as STATIC jit arguments
+        (chunk boundaries align to the recluster rounds where they
+        change), pre-bound so the returned callable keeps the
+        (data, carry) signature."""
         fn = self._chunks.get(length)
         if fn is None:
-            def chunk(data, carry):
-                return jax.lax.scan(lambda c, _: self._round_impl(data, c),
-                                    carry, None, length=length)
-            fn = self._chunks[length] = jax.jit(chunk)
-        return fn
+            def chunk(data, carry, num_segments, max_seg):
+                return jax.lax.scan(
+                    lambda c, _: self._round_impl(data, c, num_segments,
+                                                  max_seg),
+                    carry, None, length=length)
+            fn = self._chunks[length] = jax.jit(
+                chunk, static_argnames=("num_segments", "max_seg"))
+        ns, ms = self._seg_bounds()
+        return partial(fn, num_segments=ns, max_seg=ms)
 
     def _bookkeep(self):
         """Per-round host accounting shared by both drivers."""
@@ -405,7 +525,9 @@ class FederatedEngine:
         """Advance one global round. Returns {"losses": (N,), "idx":
         (N, k)|None} — the only per-round device->host traffic."""
         t0 = time.perf_counter()
-        carry, metrics = self._round(self._data, self._pack())
+        ns, ms = self._seg_bounds()
+        carry, metrics = self._round(self._data, self._pack(),
+                                     num_segments=ns, max_seg=ms)
         jax.block_until_ready(metrics)
         self.device_s += time.perf_counter() - t0
         self._unpack(carry)
@@ -415,7 +537,12 @@ class FederatedEngine:
         return {"losses": np.asarray(metrics["losses"]), "idx": idx}
 
     def _recluster(self):
-        self.age = recluster(self.age, self.hp.eps, self.hp.min_pts)
+        self.age, labels = recluster_packed(self.age, self.hp.eps,
+                                            self.hp.min_pts)
+        # tighten the segmented packing to the live clustering — from the
+        # labels DBSCAN just produced ON HOST, no new device->host pull
+        self._num_seg = int(labels.max()) + 1
+        self._max_seg = int(np.bincount(labels).max())
 
     @property
     def cluster_of(self) -> np.ndarray:

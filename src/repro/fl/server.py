@@ -26,9 +26,13 @@ def aggregate_sparse_fused(idx: jnp.ndarray, vals: jnp.ndarray,
                            age: jnp.ndarray, *, impl: str = "auto"):
     """Fused scatter-add + hit-based eq. (2) age update.
 
-    idx/vals: (N, k) or flat (NK,); age: (d,) int32. Returns
-    (dense (d,) f32, new_age) with new_age = 0 where any client requested
-    the index, age+1 elsewhere.
+    idx/vals: (N, k), flat (NK,), or the engine's SEGMENTED selection
+    layout (C, max_sz, k) — any shape flattens; out-of-range indices
+    (idx >= d, the segmented layout's padded member slots) are DROPPED,
+    so selection output feeds aggregation without re-gathering into a
+    per-client layout first. age: (d,) int32. Returns (dense (d,) f32,
+    new_age) with new_age = 0 where any client requested the index,
+    age+1 elsewhere.
 
     impl: 'pallas' routes through the one-hot-matmul TPU kernel
     (``kernels.sparse_aggregate``, interpret-mode on CPU), 'jnp' is the
@@ -40,8 +44,11 @@ def aggregate_sparse_fused(idx: jnp.ndarray, vals: jnp.ndarray,
     if use_pallas:
         from repro.kernels import ops
         return ops.sparse_aggregate(idx.reshape(-1), vals.reshape(-1), age)
-    dense = aggregate_sparse(idx, vals, age.shape[0])
-    hit = jnp.zeros(age.shape, bool).at[idx.reshape(-1)].set(True)
+    d = age.shape[0]
+    fi = idx.reshape(-1)
+    dense = jnp.zeros((d,), jnp.float32).at[fi].add(
+        vals.reshape(-1).astype(jnp.float32), mode="drop")
+    hit = jnp.zeros(age.shape, bool).at[fi].set(True, mode="drop")
     return dense, jnp.where(hit, 0, age + 1).astype(age.dtype)
 
 

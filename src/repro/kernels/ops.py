@@ -10,6 +10,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels import maghist as MH
+from repro.kernels import segmented_topk as ST
 from repro.kernels import sparse_aggregate as SA
 from repro.kernels import decode_attention as DA
 
@@ -30,17 +31,46 @@ def _pad_to(x, m, fill=0):
     return x
 
 
-def sparse_aggregate(idx: jnp.ndarray, vals: jnp.ndarray, age: jnp.ndarray):
+def sparse_aggregate(idx: jnp.ndarray, vals: jnp.ndarray, age: jnp.ndarray,
+                     *, block_d: int = SA.BLOCK_D,
+                     nk_tile: int = SA.NK_TILE):
     """Public entry: arbitrary NK and d; pads idx with d (dropped) and the
-    age vector with zeros (sliced back off)."""
+    age vector with zeros (sliced back off). block_d/nk_tile expose the
+    kernel tiling for autotune sweeps (benchmarks/kernel_bench.py)."""
     d = age.shape[0]
-    dp = d + ((-d) % SA.BLOCK_D)
-    idx_p = _pad_to(idx.astype(jnp.int32), SA.NK_TILE, fill=dp)
-    vals_p = _pad_to(vals.astype(jnp.float32), SA.NK_TILE, fill=0)
-    age_p = _pad_to(age.astype(jnp.int32), SA.BLOCK_D, fill=0)
+    dp = d + ((-d) % block_d)
+    idx_p = _pad_to(idx.astype(jnp.int32), nk_tile, fill=dp)
+    vals_p = _pad_to(vals.astype(jnp.float32), nk_tile, fill=0)
+    age_p = _pad_to(age.astype(jnp.int32), block_d, fill=0)
     dense, new_age = SA.sparse_aggregate(idx_p, vals_p, age_p,
-                                         interpret=_INTERPRET)
+                                         interpret=_INTERPRET,
+                                         block_d=block_d, nk_tile=nk_tile)
     return dense[:d], new_age[:d]
+
+
+def segmented_age_topk(cand: jnp.ndarray, cand_age: jnp.ndarray,
+                       valid: jnp.ndarray, k: int, *,
+                       disjoint: bool = True):
+    """Public entry for the segmented selection kernel: cand/cand_age
+    (C, S, r) candidate indices / non-negative ages, valid (C, S) member
+    mask -> (C, S, k) int32 picks. Pads the candidate axis to the int32
+    lane width with never-selected sentinels (cand = -2 so it can't match
+    the taken buffer, age = NEG); requires k <= r so padding can never be
+    picked."""
+    C, S, r = cand.shape
+    if k > r:
+        raise ValueError(f"need k <= r candidates (got k={k}, r={r})")
+    pad = (-r) % ST.LANE
+    cand = cand.astype(jnp.int32)
+    cand_age = cand_age.astype(jnp.int32)
+    if pad:
+        cand = jnp.pad(cand, ((0, 0), (0, 0), (0, pad)),
+                       constant_values=-2)
+        cand_age = jnp.pad(cand_age, ((0, 0), (0, 0), (0, pad)),
+                           constant_values=ST.NEG)
+    return ST.segmented_age_topk(cand, cand_age,
+                                 valid.astype(jnp.int32), k,
+                                 disjoint=disjoint, interpret=_INTERPRET)
 
 
 def maghist(g: jnp.ndarray):

@@ -18,6 +18,17 @@ def sparse_aggregate_ref(idx, vals, age):
     return dense, new_age
 
 
+def segmented_age_topk_ref(cand, cand_age, valid, k, *, disjoint=True):
+    """cand/cand_age: (C, S, r); valid: (C, S) bool -> (C, S, k) int32.
+
+    Delegates to the pure-jnp membership formulation in
+    ``core.strategies.segmented_age_topk`` — the single source of truth,
+    itself pinned bit-identical to the sequential all-clients scan by
+    tests/test_segmented_selection.py."""
+    from repro.core.strategies import segmented_age_topk
+    return segmented_age_topk(cand, cand_age, valid, k, disjoint=disjoint)
+
+
 def maghist_ref(g):
     d = g.shape[0]
     nb = d // HIST_BLOCK

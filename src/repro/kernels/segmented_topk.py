@@ -1,0 +1,93 @@
+"""Pallas TPU kernel: segmented age-top-k — the rAge-k selection phase.
+
+The PS picks, for every client, the k highest-AGE indices among that
+client's top-r magnitude candidates, with DISJOINT picks within a cluster
+(paper §II): an index requested by an earlier member of the cluster is
+masked (age -> -1) for the later members. Clusters are independent, so
+the grid is one program per cluster (segment); inside a program the
+member recursion is a short ``fori_loop`` over the padded segment
+positions (max cluster size, not N).
+
+Instead of a (d,) taken-mask, the kernel carries the RUNNING BUFFER of
+indices already selected in this segment ((S*k,) int32, -1 = empty) and
+masks by membership — an (r, S*k) broadcast compare, tiny VMEM, no
+data-dependent (d,)-sized state. The masked top-k is k argmax passes
+(first-occurrence argmax == ``lax.top_k``'s stable ordering, so the
+|g|-descending candidate order keeps breaking age ties toward larger
+magnitude, exactly like the sequential scan).
+
+Interpret-mode on CPU (like ``sparse_aggregate``); the jnp oracle lives
+in ``core.strategies.segmented_age_topk`` (re-exported by
+``kernels.ref``).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+LANE = 128                        # candidate-axis padding (int32 lanes)
+NEG = -(2 ** 31) + 1              # never-selected sentinel age
+
+
+def _kernel(cand_ref, age_ref, valid_ref, out_ref, *, k: int,
+            disjoint: bool):
+    cand = cand_ref[0]            # (S, R) int32
+    ages = age_ref[0]             # (S, R) int32, >= 0 on real lanes
+    valid = valid_ref[0]          # (S,)  int32 0/1
+    S, R = cand.shape
+    lanes = jax.lax.broadcasted_iota(jnp.int32, (R,), 0)
+
+    def member(s, carry):
+        sel_buf, out = carry      # (S*k,), (S, k)
+        c = jax.lax.dynamic_slice(cand, (s, 0), (1, R))[0]
+        a = jax.lax.dynamic_slice(ages, (s, 0), (1, R))[0]
+        if disjoint:
+            taken = jnp.any(c[:, None] == sel_buf[None, :], axis=1)
+            a = jnp.where(taken, jnp.int32(-1), a)
+
+        def pick(j, st):
+            a_j, sel = st
+            p = jnp.argmax(a_j).astype(jnp.int32)
+            sel = sel.at[j].set(jnp.sum(jnp.where(lanes == p, c, 0)))
+            return jnp.where(lanes == p, jnp.int32(NEG), a_j), sel
+
+        _, sel = jax.lax.fori_loop(0, k, pick,
+                                   (a, jnp.zeros((k,), jnp.int32)))
+        v = jax.lax.dynamic_slice(valid, (s,), (1,))[0] > 0
+        if disjoint:
+            rec = jnp.where(v, sel, jnp.int32(-1))
+            sel_buf = jax.lax.dynamic_update_slice(sel_buf, rec, (s * k,))
+        out = jax.lax.dynamic_update_slice(out, sel[None, :], (s, 0))
+        return sel_buf, out
+
+    buf0 = jnp.full((S * k,), -1, jnp.int32)
+    _, out = jax.lax.fori_loop(0, S, member,
+                               (buf0, jnp.zeros((S, k), jnp.int32)))
+    out_ref[0] = out
+
+
+@functools.partial(jax.jit, static_argnames=("k", "disjoint", "interpret"))
+def segmented_age_topk(cand: jnp.ndarray, age: jnp.ndarray,
+                       valid: jnp.ndarray, k: int, *,
+                       disjoint: bool = True, interpret: bool = True):
+    """cand/age: (C, S, R) int32 candidate indices / non-negative ages
+    (padded lanes: cand = -2, age = NEG — never selected while k <= real
+    candidates; ops.py pads). valid: (C, S) int32 live-member mask.
+    Returns (C, S, k) int32 selected indices (padded member slots produce
+    don't-care values that never enter the taken buffer)."""
+    C, S, R = cand.shape
+    return pl.pallas_call(
+        functools.partial(_kernel, k=k, disjoint=disjoint),
+        grid=(C,),
+        in_specs=[
+            pl.BlockSpec((1, S, R), lambda c: (c, 0, 0)),
+            pl.BlockSpec((1, S, R), lambda c: (c, 0, 0)),
+            pl.BlockSpec((1, S), lambda c: (c, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, S, k), lambda c: (c, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((C, S, k), jnp.int32),
+        interpret=interpret,
+    )(cand, age, valid)

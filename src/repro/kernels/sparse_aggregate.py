@@ -27,17 +27,18 @@ BLOCK_D = 512
 NK_TILE = 2048
 
 
-def _kernel(idx_ref, vals_ref, age_ref, out_ref, age_out_ref, hit_ref):
+def _kernel(idx_ref, vals_ref, age_ref, out_ref, age_out_ref, hit_ref, *,
+            block_d: int, nk_tile: int):
     j = pl.program_id(0)        # d-block index
     t = pl.program_id(1)        # NK tile index
     nt = pl.num_programs(1)
 
-    idx = idx_ref[...]                            # (NK_TILE,) int32
-    vals = vals_ref[...].astype(jnp.float32)      # (NK_TILE,)
-    lo = j * BLOCK_D
+    idx = idx_ref[...]                            # (nk_tile,) int32
+    vals = vals_ref[...].astype(jnp.float32)      # (nk_tile,)
+    lo = j * block_d
     local = idx - lo
     onehot = (local[:, None] == jax.lax.broadcasted_iota(
-        jnp.int32, (NK_TILE, BLOCK_D), 1)).astype(jnp.float32)
+        jnp.int32, (nk_tile, block_d), 1)).astype(jnp.float32)
 
     @pl.when(t == 0)
     def _init():
@@ -54,31 +55,34 @@ def _kernel(idx_ref, vals_ref, age_ref, out_ref, age_out_ref, hit_ref):
         age_out_ref[...] = jnp.where(hit, 0, age_ref[...] + 1)
 
 
-@functools.partial(jax.jit, static_argnames=("interpret",))
+@functools.partial(jax.jit,
+                   static_argnames=("interpret", "block_d", "nk_tile"))
 def sparse_aggregate(idx: jnp.ndarray, vals: jnp.ndarray, age: jnp.ndarray,
-                     *, interpret: bool = True):
+                     *, interpret: bool = True, block_d: int = BLOCK_D,
+                     nk_tile: int = NK_TILE):
     """idx/vals: (NK,) flattened client payloads (int32 / float); duplicate
     indices accumulate. age: (d,) int32. Returns (dense (d,) f32, new_age).
 
-    d must be a multiple of BLOCK_D and NK a multiple of NK_TILE (ops.py
+    d must be a multiple of block_d and NK a multiple of nk_tile (ops.py
     pads). Out-of-range idx (used as padding: idx = d) contribute nothing.
+    block_d/nk_tile default to the module constants; the bench sweeps them.
     """
     d = age.shape[0]
     nk = idx.shape[0]
-    assert d % BLOCK_D == 0 and nk % NK_TILE == 0
-    grid = (d // BLOCK_D, nk // NK_TILE)
+    assert d % block_d == 0 and nk % nk_tile == 0
+    grid = (d // block_d, nk // nk_tile)
     out, new_age, _ = pl.pallas_call(
-        _kernel,
+        functools.partial(_kernel, block_d=block_d, nk_tile=nk_tile),
         grid=grid,
         in_specs=[
-            pl.BlockSpec((NK_TILE,), lambda j, t: (t,)),
-            pl.BlockSpec((NK_TILE,), lambda j, t: (t,)),
-            pl.BlockSpec((BLOCK_D,), lambda j, t: (j,)),
+            pl.BlockSpec((nk_tile,), lambda j, t: (t,)),
+            pl.BlockSpec((nk_tile,), lambda j, t: (t,)),
+            pl.BlockSpec((block_d,), lambda j, t: (j,)),
         ],
         out_specs=[
-            pl.BlockSpec((BLOCK_D,), lambda j, t: (j,)),
-            pl.BlockSpec((BLOCK_D,), lambda j, t: (j,)),
-            pl.BlockSpec((BLOCK_D,), lambda j, t: (j,)),
+            pl.BlockSpec((block_d,), lambda j, t: (j,)),
+            pl.BlockSpec((block_d,), lambda j, t: (j,)),
+            pl.BlockSpec((block_d,), lambda j, t: (j,)),
         ],
         out_shape=[
             jax.ShapeDtypeStruct((d,), jnp.float32),

@@ -21,7 +21,11 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--dataset", choices=("mnist", "cifar"), default="mnist")
     ap.add_argument("--method", default="rage_k",
-                    choices=("rage_k", "rtop_k", "top_k", "random_k", "dense"))
+                    choices=("rage_k", "rtop_k", "top_k", "random_k",
+                             "dense", "cafe"))
+    ap.add_argument("--cafe-lam", type=float, default=0.1,
+                    help="cost weight of the CAFe age-minus-cost score "
+                         "(--method cafe)")
     ap.add_argument("--rounds", type=int, default=200)
     ap.add_argument("--paper-hparams", action="store_true",
                     help="exact paper r/k/H/M/lr/batch (slow on CPU)")
@@ -45,6 +49,13 @@ def main():
                          "inspect); 'scan' runs whole chunks of rounds "
                          "per dispatch via lax.scan (bit-identical, "
                          "faster)")
+    ap.add_argument("--selection", default="segmented",
+                    choices=("scan", "segmented"),
+                    help="rage_k selection plane: 'segmented' runs the "
+                         "in-cluster disjointness recursion per cluster "
+                         "in parallel (default); 'scan' is the "
+                         "sequential all-clients reference "
+                         "(bit-identical, for A/B debugging)")
     args = ap.parse_args()
 
     if args.dataset == "mnist":
@@ -73,10 +84,11 @@ def main():
             defaults[name] = v
     if args.batch:
         defaults["batch_size"] = args.batch
-    hp = RAgeKConfig(method=args.method, **defaults)
+    hp = RAgeKConfig(method=args.method, cafe_lam=args.cafe_lam, **defaults)
 
     engine = FederatedEngine(kind, shards, test, hp, seed=args.seed,
-                             ef=args.ef, aggregate_impl=args.aggregate)
+                             ef=args.ef, aggregate_impl=args.aggregate,
+                             selection=args.selection)
     drive = engine.run if args.driver == "step" else engine.run_scanned
     res = drive(args.rounds, eval_every=max(args.rounds // 20, 1),
                 heatmap_at=(1, args.rounds), verbose=True)

@@ -77,6 +77,45 @@ def test_sparse_sync_wire_accounting():
     assert int(stats["wire_bytes_per_shard"]) == (2 + 6) * 6
 
 
+def test_cafe_sync_threads_cost_lane():
+    """method='cafe': age leaves carry the stacked (2, ...) [age; cost]
+    state; selection runs, the cost lane accumulates exactly k_b per
+    bucket per step, and lam=0 matches rage_k selection."""
+    mesh = make_host_mesh(1, 1)
+
+    def loss_fn(params, batch):
+        return jnp.mean((batch["x"] @ params["w"] - batch["y"]) ** 2)
+
+    params = {"w": jnp.zeros((2, 2))}
+    ages = init_age_state(params, method="cafe")
+    assert ages["w"].shape == (2, 2, 2)
+    opt = adam(5e-2)
+    step = jax.jit(make_sync_train_step(loss_fn, opt, mesh, method="cafe",
+                                        r=4, k=2, lam=0.3))
+    x = jax.random.normal(jax.random.PRNGKey(0), (64, 2))
+    batch = {"x": x, "y": x @ jnp.array([[1.0, -2.0], [3.0, 0.5]])}
+    opt_state = opt.init(params)
+    for t in range(1, 6):
+        params, opt_state, ages, loss, stats = step(
+            params, opt_state, ages, batch)
+        assert int(ages["w"][1].sum()) == 2 * t         # cost lane
+        assert int(ages["w"][0].max()) <= t             # age lane
+    # lam=0 reproduces rage_k picks: run both one step from zeros
+    ages_c = init_age_state(params, method="cafe")
+    ages_r = init_age_state(params, method="rage_k")
+    step_c = jax.jit(make_sync_train_step(loss_fn, opt, mesh,
+                                          method="cafe", r=4, k=2, lam=0.0))
+    step_r = jax.jit(make_sync_train_step(loss_fn, opt, mesh,
+                                          method="rage_k", r=4, k=2))
+    p0 = {"w": jnp.zeros((2, 2))}
+    pc, _, ac, _, _ = step_c(p0, opt.init(p0), ages_c, batch)
+    pr, _, ar, _, _ = step_r(p0, opt.init(p0), ages_r, batch)
+    np.testing.assert_array_equal(np.asarray(ac["w"][0]),
+                                  np.asarray(ar["w"]))
+    np.testing.assert_allclose(np.asarray(pc["w"]), np.asarray(pr["w"]),
+                               rtol=0, atol=0)
+
+
 def test_dense_sync_matches_plain_grad():
     mesh = make_host_mesh(1, 1)
 

@@ -54,6 +54,67 @@ def test_fused_aggregate_parity_with_fl_server(impl):
     np.testing.assert_array_equal(np.asarray(new_age), ref_age)
 
 
+@pytest.mark.parametrize("shape", [(1, 1, 4), (3, 5, 12), (6, 2, 75),
+                                   (2, 9, 130)])
+@pytest.mark.parametrize("disjoint", [True, False])
+def test_segmented_age_topk_sweep(shape, disjoint):
+    """Pallas (interpret) segmented selection kernel vs the jnp oracle —
+    small ages force heavy ties so the argmax/stable-top_k tie-break
+    contract is exercised; invalid member slots are don't-care."""
+    C, S, r = shape
+    k = min(3, r)
+    key = jax.random.PRNGKey(C * 100 + S * 10 + r)
+    k1, k2, k3 = jax.random.split(key, 3)
+    cand = jax.random.randint(k1, (C, S, r), 0, 64, jnp.int32)
+    age = jax.random.randint(k2, (C, S, r), 0, 4, jnp.int32)
+    valid = jax.random.uniform(k3, (C, S)) < 0.8
+    out_k = ops.segmented_age_topk(cand, age, valid, k, disjoint=disjoint)
+    out_r = ref.segmented_age_topk_ref(cand, age, valid, k,
+                                       disjoint=disjoint)
+    m = np.broadcast_to(np.asarray(valid)[:, :, None], (C, S, k))
+    np.testing.assert_array_equal(np.asarray(out_k)[m], np.asarray(out_r)[m])
+
+
+def test_segmented_age_topk_disjoint_semantics():
+    """Two members of one segment sharing candidates: the second member
+    must skip the first member's picks (age masked to -1)."""
+    cand = jnp.asarray([[[0, 1, 2, 3], [0, 1, 2, 3]]], jnp.int32)
+    age = jnp.asarray([[[9, 8, 7, 6], [9, 8, 7, 6]]], jnp.int32)
+    valid = jnp.ones((1, 2), bool)
+    out = np.asarray(ops.segmented_age_topk(cand, age, valid, 2))
+    np.testing.assert_array_equal(out[0, 0], [0, 1])
+    np.testing.assert_array_equal(out[0, 1], [2, 3])
+    # disjoint off: both members pick the same top ages
+    out = np.asarray(ops.segmented_age_topk(cand, age, valid, 2,
+                                            disjoint=False))
+    np.testing.assert_array_equal(out[0, 1], [0, 1])
+
+
+def test_segmented_age_topk_requires_k_le_r():
+    with pytest.raises(ValueError):
+        ops.segmented_age_topk(jnp.zeros((1, 1, 2), jnp.int32),
+                               jnp.zeros((1, 1, 2), jnp.int32),
+                               jnp.ones((1, 1), bool), 3)
+
+
+@pytest.mark.parametrize("block_d,nk_tile", [(256, 1024), (1024, 512)])
+def test_sparse_aggregate_block_sweep(block_d, nk_tile):
+    """The kernel tiling is a pure performance knob: any block_d/nk_tile
+    matches the oracle."""
+    key = jax.random.PRNGKey(9)
+    k1, k2, k3 = jax.random.split(key, 3)
+    d, nk = 1000, 777
+    idx = jax.random.randint(k1, (nk,), 0, d)
+    vals = jax.random.normal(k2, (nk,))
+    age = jax.random.randint(k3, (d,), 0, 9)
+    dense, na = ops.sparse_aggregate(idx, vals, age, block_d=block_d,
+                                     nk_tile=nk_tile)
+    dr, nar = ref.sparse_aggregate_ref(idx, vals, age)
+    np.testing.assert_allclose(np.asarray(dense), np.asarray(dr),
+                               rtol=1e-5, atol=1e-5)
+    np.testing.assert_array_equal(np.asarray(na), np.asarray(nar))
+
+
 @pytest.mark.parametrize("d", [4096, 8192, 12_288])
 @pytest.mark.parametrize("scale_pow", [-12, 0, 7])
 def test_maghist_sweep(d, scale_pow):

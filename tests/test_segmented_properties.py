@@ -1,0 +1,59 @@
+"""Hypothesis generalization of the segmented-selection invariants
+(tests/test_segmented_selection.py holds the seeded deterministic
+versions so the pin also runs where hypothesis isn't installed):
+
+* segmented == sequential for ARBITRARY (N, cluster sizes, r, k),
+  both disjoint settings, loose and tight static packing bounds —
+  including the singleton and all-in-one-cluster extremes hypothesis
+  shrinks toward.
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+hypothesis = pytest.importorskip(
+    "hypothesis", reason="hypothesis not installed in this environment")
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from repro.fl.engine import (  # noqa: E402
+    DeviceAgeState, rage_select, rage_select_segmented,
+)
+
+settings.register_profile("seg_fast", max_examples=20, deadline=None)
+settings.load_profile("seg_fast")
+
+D = 48  # fixed feature dim keeps the jit cache small across examples
+
+
+@st.composite
+def selection_case(draw):
+    n = draw(st.integers(1, 8))
+    r = draw(st.sampled_from([2, 6, 16]))
+    k = draw(st.integers(1, r))
+    c = draw(st.integers(1, n))
+    seed = draw(st.integers(0, 2**31 - 1))
+    rng = np.random.default_rng(seed)
+    labels = rng.integers(0, c, n)
+    _, labels = np.unique(labels, return_inverse=True)   # dense ids
+    return n, r, k, labels, seed
+
+
+@given(selection_case(), st.booleans())
+def test_segmented_equals_sequential(case, disjoint):
+    n, r, k, labels, seed = case
+    rng = np.random.default_rng(seed)
+    g = jnp.asarray(rng.normal(size=(n, D)).astype(np.float32))
+    ca = rng.integers(0, 20, (n, D)).astype(np.int32)
+    age = DeviceAgeState(jnp.asarray(ca), jnp.zeros((n, D), jnp.int32),
+                         jnp.asarray(labels, dtype=jnp.int32))
+    idx_s, st_s = rage_select(g, age, r=r, k=k, disjoint=disjoint)
+    tight = (int(labels.max()) + 1, int(np.bincount(labels).max()))
+    for num_seg, max_seg in ((None, None), tight):
+        idx_g, st_g = rage_select_segmented(
+            g, age, r=r, k=k, num_segments=num_seg, max_seg=max_seg,
+            disjoint=disjoint)
+        np.testing.assert_array_equal(np.asarray(idx_s), np.asarray(idx_g))
+        np.testing.assert_array_equal(np.asarray(st_s.cluster_age),
+                                      np.asarray(st_g.cluster_age))
+        np.testing.assert_array_equal(np.asarray(st_s.freq),
+                                      np.asarray(st_g.freq))

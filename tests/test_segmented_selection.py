@@ -1,0 +1,235 @@
+"""The segmented per-cluster selection plane is BIT-IDENTICAL to the
+sequential all-clients scan, and invariant where the math says it must be:
+
+1. For arbitrary (N, cluster sizes, r, k) — including singleton and
+   all-in-one-cluster extremes — ``rage_select_segmented`` returns the
+   same requested indices and the same DeviceAgeState as the sequential
+   ``rage_select``, for both disjoint settings and for both the loose
+   (N, N) and tight (live clusters, max cluster size) static packings
+   (seeded sweep here; the hypothesis generalization lives in
+   tests/test_segmented_properties.py).
+2. Segmented selection is invariant under cluster RELABELING and under
+   client permutation ACROSS clusters (within-cluster order is the
+   tie-break contract and is preserved by construction).
+3. The full engine agrees: selection='scan' vs selection='segmented'
+   produce bit-identical runs (params, losses, requested indices, age
+   state) across two recluster boundaries, for both drivers.
+4. The segmented selector consumes and produces only device arrays: it
+   runs under jax.transfer_guard("disallow") once compiled.
+5. The Pallas kernel path (impl='pallas', interpret on CPU) matches the
+   jnp path exactly.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import RAgeKConfig
+from repro.core.strategies import segment_pack
+from repro.data.federated import paper_mnist_split
+from repro.data.synthetic import mnist_like
+from repro.fl import FederatedEngine
+from repro.fl.engine import DeviceAgeState, rage_select, rage_select_segmented
+
+D = 48  # fixed feature dim keeps the jit cache small across cases
+
+
+def _mk_state(rng, n, labels):
+    ca = rng.integers(0, 20, (n, D)).astype(np.int32)
+    return DeviceAgeState(jnp.asarray(ca), jnp.zeros((n, D), jnp.int32),
+                          jnp.asarray(labels, dtype=jnp.int32))
+
+
+def _rand_case(rng):
+    n = int(rng.integers(1, 9))
+    r = int(rng.choice([2, 6, 16]))
+    k = int(rng.integers(1, r + 1))
+    labels = rng.integers(0, int(rng.integers(1, n + 1)), n)
+    _, labels = np.unique(labels, return_inverse=True)    # dense ids
+    return n, r, k, labels
+
+
+@pytest.mark.parametrize("disjoint", [True, False])
+def test_segmented_equals_sequential_sweep(disjoint):
+    """Seeded sweep over random (N, cluster sizes, r, k): bit-identical
+    indices, cluster ages and frequencies, with loose and tight static
+    packing bounds."""
+    rng = np.random.default_rng(0 if disjoint else 1)
+    for _ in range(10):
+        n, r, k, labels = _rand_case(rng)
+        g = jnp.asarray(rng.normal(size=(n, D)).astype(np.float32))
+        age = _mk_state(rng, n, labels)
+        idx_s, st_s = rage_select(g, age, r=r, k=k, disjoint=disjoint)
+        tight = (int(labels.max()) + 1, int(np.bincount(labels).max()))
+        for num_seg, max_seg in ((None, None), tight):
+            idx_g, st_g = rage_select_segmented(
+                g, age, r=r, k=k, num_segments=num_seg, max_seg=max_seg,
+                disjoint=disjoint)
+            np.testing.assert_array_equal(np.asarray(idx_s),
+                                          np.asarray(idx_g))
+            np.testing.assert_array_equal(np.asarray(st_s.cluster_age),
+                                          np.asarray(st_g.cluster_age))
+            np.testing.assert_array_equal(np.asarray(st_s.freq),
+                                          np.asarray(st_g.freq))
+
+
+@pytest.mark.parametrize("labels", [np.arange(6), np.zeros(6, np.int64)])
+def test_extremes_singletons_and_one_cluster(labels):
+    """All-singletons (max_seg=1) and all-in-one-cluster (the segment
+    scan degenerates to the full sequential recursion) both match."""
+    rng = np.random.default_rng(2)
+    n = len(labels)
+    g = jnp.asarray(rng.normal(size=(n, D)).astype(np.float32))
+    age = _mk_state(rng, n, labels)
+    idx_s, st_s = rage_select(g, age, r=10, k=3)
+    idx_g, st_g = rage_select_segmented(
+        g, age, r=10, k=3, num_segments=int(labels.max()) + 1,
+        max_seg=int(np.bincount(labels).max()))
+    np.testing.assert_array_equal(np.asarray(idx_s), np.asarray(idx_g))
+    np.testing.assert_array_equal(np.asarray(st_s.cluster_age),
+                                  np.asarray(st_g.cluster_age))
+
+
+def test_invariance_under_cluster_relabeling():
+    """Permuting cluster IDS (and the age rows with them) changes
+    nothing observable: same per-client requests, permuted age rows."""
+    rng = np.random.default_rng(3)
+    for _ in range(5):
+        n, r, k, labels = _rand_case(rng)
+        c = int(labels.max()) + 1
+        g = jnp.asarray(rng.normal(size=(n, D)).astype(np.float32))
+        age = _mk_state(rng, n, labels)
+        idx_a, st_a = rage_select_segmented(g, age, r=r, k=k)
+
+        sigma = rng.permutation(c)                 # new id of cluster i
+        ca_p = np.zeros((n, D), np.int32)
+        ca_p[sigma] = np.asarray(age.cluster_age)[:c]
+        age_p = DeviceAgeState(jnp.asarray(ca_p),
+                               jnp.zeros((n, D), jnp.int32),
+                               jnp.asarray(sigma[labels], dtype=jnp.int32))
+        idx_b, st_b = rage_select_segmented(g, age_p, r=r, k=k)
+        np.testing.assert_array_equal(np.asarray(idx_a), np.asarray(idx_b))
+        np.testing.assert_array_equal(
+            np.asarray(st_a.cluster_age)[:c],
+            np.asarray(st_b.cluster_age)[sigma])
+
+
+def test_invariance_under_cross_cluster_client_permutation():
+    """Interleaving CLUSTERS differently (client order preserved within
+    each cluster — the tie-break contract) maps results through the
+    permutation."""
+    rng = np.random.default_rng(4)
+    for _ in range(5):
+        n, r, k, labels = _rand_case(rng)
+        g = np.asarray(rng.normal(size=(n, D)).astype(np.float32))
+        age = _mk_state(rng, n, labels)
+        idx_a, st_a = rage_select_segmented(jnp.asarray(g), age, r=r, k=k)
+
+        c = int(labels.max()) + 1
+        prio = rng.permutation(c)
+        perm = np.argsort(prio[labels], kind="stable")
+        age_p = DeviceAgeState(age.cluster_age,
+                               jnp.zeros((n, D), jnp.int32),
+                               jnp.asarray(labels[perm], dtype=jnp.int32))
+        idx_b, st_b = rage_select_segmented(jnp.asarray(g[perm]), age_p,
+                                            r=r, k=k)
+        np.testing.assert_array_equal(np.asarray(idx_a)[perm],
+                                      np.asarray(idx_b))
+        np.testing.assert_array_equal(np.asarray(st_a.cluster_age),
+                                      np.asarray(st_b.cluster_age))
+        np.testing.assert_array_equal(np.asarray(st_a.freq)[perm],
+                                      np.asarray(st_b.freq))
+
+
+def test_segment_pack_layout():
+    members = np.asarray(segment_pack(
+        jnp.asarray([2, 0, 2, 1, 0, 2, 0], jnp.int32), 3, 4))
+    np.testing.assert_array_equal(
+        members, [[1, 4, 6, 7], [3, 7, 7, 7], [0, 2, 5, 7]])
+
+
+def test_pallas_impl_matches_jnp():
+    rng = np.random.default_rng(5)
+    n, r, k = 9, 12, 4
+    labels = np.asarray([0, 0, 0, 1, 1, 2, 2, 2, 2])
+    g = jnp.asarray(rng.normal(size=(n, D)).astype(np.float32))
+    age = _mk_state(rng, n, labels)
+    idx_j, st_j = rage_select_segmented(g, age, r=r, k=k, num_segments=3,
+                                        max_seg=4, impl="jnp")
+    idx_p, st_p = rage_select_segmented(g, age, r=r, k=k, num_segments=3,
+                                        max_seg=4, impl="pallas")
+    np.testing.assert_array_equal(np.asarray(idx_j), np.asarray(idx_p))
+    np.testing.assert_array_equal(np.asarray(st_j.cluster_age),
+                                  np.asarray(st_p.cluster_age))
+
+
+def test_segmented_select_is_transfer_free():
+    """Once compiled, the segmented selector (packing included) runs
+    under jax.transfer_guard('disallow'): the packing is recomputed on
+    device from cluster_of — no host round-trip in the jitted path."""
+    rng = np.random.default_rng(6)
+    n = 8
+    labels = np.asarray([0, 0, 1, 1, 1, 2, 2, 2])
+    g = jnp.asarray(rng.normal(size=(n, D)).astype(np.float32))
+    age = _mk_state(rng, n, labels)
+    idx, age2 = rage_select_segmented(g, age, r=10, k=3, num_segments=3,
+                                      max_seg=3)
+    with jax.transfer_guard("disallow"):
+        idx, age3 = rage_select_segmented(g, age2, r=10, k=3,
+                                          num_segments=3, max_seg=3)
+        jax.block_until_ready((idx, age3))
+    assert isinstance(idx, jax.Array)
+
+
+# ---------------------------------------------------------------------------
+# full-engine A/B: the acceptance pin across two recluster boundaries
+# ---------------------------------------------------------------------------
+
+HP = dict(r=30, k=6, H=2, M=3, lr=2e-3, batch_size=16)
+ROUNDS = 7                               # recluster boundaries at 3 and 6
+
+
+@pytest.fixture(scope="module")
+def mnist_setup():
+    (xtr, ytr), test = mnist_like(n_train=1200, n_test=400, seed=0)
+    return paper_mnist_split(xtr, ytr, seed=0), test
+
+
+def _assert_identical(ea, ra, eb, rb):
+    np.testing.assert_allclose(ra.loss, rb.loss, rtol=0, atol=0)
+    np.testing.assert_allclose(ra.acc, rb.acc, rtol=0, atol=0)
+    for ia, ib in zip(ra.requested, rb.requested):
+        np.testing.assert_array_equal(ia, ib)
+    for pa, pb in zip(jax.tree_util.tree_leaves(ea.g_params),
+                      jax.tree_util.tree_leaves(eb.g_params)):
+        np.testing.assert_array_equal(np.asarray(pa), np.asarray(pb))
+    np.testing.assert_array_equal(np.asarray(ea.age.cluster_age),
+                                  np.asarray(eb.age.cluster_age))
+    np.testing.assert_array_equal(np.asarray(ea.age.freq),
+                                  np.asarray(eb.age.freq))
+    np.testing.assert_array_equal(ea.cluster_of, eb.cluster_of)
+
+
+def test_engine_segmented_equals_scan_selection(mnist_setup):
+    shards, test = mnist_setup
+    hp = RAgeKConfig(method="rage_k", **HP)
+    ea = FederatedEngine("mlp", shards, test, hp, seed=3, selection="scan")
+    ra = ea.run(ROUNDS, eval_every=2)
+    eb = FederatedEngine("mlp", shards, test, hp, seed=3,
+                         selection="segmented")
+    rb = eb.run(ROUNDS, eval_every=2)
+    _assert_identical(ea, ra, eb, rb)
+    assert ea.round_idx > 2 * hp.M
+
+
+def test_engine_segmented_scanned_driver_equals_scan_step(mnist_setup):
+    """Both axes at once: segmented selection under the lax.scan chunk
+    driver vs sequential selection under the step driver."""
+    shards, test = mnist_setup
+    hp = RAgeKConfig(method="rage_k", **HP)
+    ea = FederatedEngine("mlp", shards, test, hp, seed=3, selection="scan")
+    ra = ea.run(ROUNDS, eval_every=2)
+    eb = FederatedEngine("mlp", shards, test, hp, seed=3,
+                         selection="segmented")
+    rb = eb.run_scanned(ROUNDS, eval_every=2)
+    _assert_identical(ea, ra, eb, rb)

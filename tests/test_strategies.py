@@ -1,4 +1,5 @@
-"""Unit tests for the Strategy protocol (core.strategies) and the wire
+"""Unit tests for the Strategy protocol (core.strategies) — per-vector
+and batched forms, the CAFe cost-and-age variant — and the wire
 accounting (core.compression.bytes_per_round)."""
 import jax
 import jax.numpy as jnp
@@ -8,12 +9,12 @@ import pytest
 from repro.core import sparsify as S
 from repro.core.compression import (bytes_per_index, bytes_per_round,
                                     value_bytes_of)
-from repro.core.strategies import (Dense, RAgeK, RandomK, RTopK, Strategy,
-                                   TopK, make_strategy)
+from repro.core.strategies import (CAFeAgeK, Dense, RAgeK, RandomK, RTopK,
+                                   STRATEGIES, Strategy, TopK, make_strategy)
 
 
 def test_factory_round_trips_names():
-    for m in ("rage_k", "rtop_k", "top_k", "random_k", "dense"):
+    for m in STRATEGIES:
         strat = make_strategy(m, r=8, k=4)
         assert strat.name == m
         assert isinstance(strat, Strategy)
@@ -72,6 +73,146 @@ def test_select_is_jittable_and_vmappable():
     ages = jnp.zeros((4, 64), jnp.int32)
     idx, vals, new_age = jax.jit(jax.vmap(strat.select))(g, ages)
     assert idx.shape == (4, 4) and new_age.shape == (4, 64)
+
+
+# ---------------------------------------------------------------------------
+# batched protocol (select_batch)
+# ---------------------------------------------------------------------------
+
+def test_select_batch_matches_vmapped_select():
+    """The batched protocol's default is exactly a vmap of the
+    per-vector rule, for every strategy."""
+    n, d = 5, 64
+    G = jax.random.normal(jax.random.PRNGKey(0), (n, d))
+    key = jax.random.PRNGKey(42)
+    cases = [
+        (TopK(k=8), ()),
+        (Dense(), ()),
+        (RandomK(k=8), None),
+        (RTopK(r=16, k=8), None),
+        (RAgeK(r=16, k=8), None),
+        (CAFeAgeK(r=16, k=8, lam=0.3), None),
+    ]
+    for strat, state in cases:
+        if state is None:
+            state = strat.init_batch_state(d, n, key)
+        idx_b, vals_b, st_b = strat.select_batch(G, state)
+        idx_v, vals_v, _ = jax.vmap(lambda g, s: strat.select(g, s))(
+            G, state)
+        np.testing.assert_array_equal(np.asarray(idx_b), np.asarray(idx_v))
+        np.testing.assert_allclose(np.asarray(vals_b), np.asarray(vals_v))
+
+
+def test_init_batch_state_shapes():
+    n, d = 3, 32
+    assert RAgeK(r=8, k=2).init_batch_state(d, n).shape == (n, d)
+    a, c = CAFeAgeK(r=8, k=2).init_batch_state(d, n)
+    assert a.shape == (n, d) and c.shape == (n, d)
+    keys = RandomK(k=2).init_batch_state(d, n, jax.random.PRNGKey(0))
+    assert keys.shape[0] == n
+    with pytest.raises(ValueError):
+        RandomK(k=2).init_batch_state(d, n)
+
+
+# ---------------------------------------------------------------------------
+# CAFe: cost-and-age aware selection
+# ---------------------------------------------------------------------------
+
+def test_cafe_lam_zero_equals_rage_k():
+    """With zero cost weight the CAFe score IS the age: identical picks
+    and identical age updates to per-client rAge-k."""
+    g = jax.random.normal(jax.random.PRNGKey(1), (64,))
+    age = jax.random.randint(jax.random.PRNGKey(2), (64,), 0, 6, jnp.int32)
+    cost = jax.random.randint(jax.random.PRNGKey(3), (64,), 0, 9, jnp.int32)
+    idx_c, vals_c, (age_c, cost_c) = CAFeAgeK(r=16, k=4, lam=0.0).select(
+        g, (age, cost))
+    idx_r, vals_r, age_r = RAgeK(r=16, k=4).select(g, age)
+    np.testing.assert_array_equal(np.asarray(idx_c), np.asarray(idx_r))
+    np.testing.assert_array_equal(np.asarray(age_c), np.asarray(age_r))
+
+
+def test_cafe_cost_discounts_expensive_indices():
+    """Golden: two candidates tied on age — the one with lower
+    accumulated cost wins once lam > 0."""
+    g = jnp.asarray([4.0, 3.0, 0.1, 0.1])
+    age = jnp.asarray([5, 5, 0, 0], jnp.int32)
+    cost = jnp.asarray([10, 0, 0, 0], jnp.int32)
+    # lam=0: tie on age -> larger |g| (index 0) wins
+    idx, _, _ = CAFeAgeK(r=2, k=1, lam=0.0).select(g, (age, cost))
+    assert int(idx[0]) == 0
+    # lam>0: index 0's cost pushes its score below index 1
+    idx, _, (na, nc) = CAFeAgeK(r=2, k=1, lam=0.5).select(g, (age, cost))
+    assert int(idx[0]) == 1
+    np.testing.assert_array_equal(np.asarray(na), [6, 0, 1, 1])
+    np.testing.assert_array_equal(np.asarray(nc), [10, 1, 0, 0])
+
+
+def test_cafe_invariants_random_sweep():
+    """Property sweep: picks come from the top-r magnitudes, ages reset
+    on picks and increment elsewhere, cost increments exactly on picks."""
+    rng = np.random.default_rng(7)
+    strat = CAFeAgeK(r=12, k=4, lam=0.25)
+    for trial in range(8):
+        d = int(rng.integers(16, 80))
+        g = jnp.asarray(rng.normal(size=(d,)).astype(np.float32))
+        age = jnp.asarray(rng.integers(0, 10, d), dtype=jnp.int32)
+        cost = jnp.asarray(rng.integers(0, 10, d), dtype=jnp.int32)
+        idx, vals, (na, nc) = strat.select(g, (age, cost))
+        cand = set(np.asarray(
+            jax.lax.top_k(jnp.abs(g), 12)[1]).tolist())
+        assert set(np.asarray(idx).tolist()) <= cand
+        np.testing.assert_array_equal(np.asarray(na)[np.asarray(idx)], 0)
+        unpicked = np.setdiff1d(np.arange(d), np.asarray(idx))
+        np.testing.assert_array_equal(
+            np.asarray(na)[unpicked], np.asarray(age)[unpicked] + 1)
+        np.testing.assert_array_equal(
+            np.asarray(nc)[unpicked], np.asarray(cost)[unpicked])
+        assert int((np.asarray(nc) - np.asarray(cost)).sum()) == 4
+
+
+def test_cafe_apply_method_surface():
+    g = jax.random.normal(jax.random.PRNGKey(5), (64,))
+    age = jnp.zeros((64,), jnp.int32)
+    cost = jnp.zeros((64,), jnp.int32)
+    sparse, idx, (na, nc) = S.apply_method("cafe", g, age=(age, cost),
+                                           r=16, k=4, lam=0.2)
+    assert idx.shape == (4,)
+    np.testing.assert_allclose(np.asarray(sparse)[np.asarray(idx)],
+                               np.asarray(g)[np.asarray(idx)])
+
+
+def test_cafe_engine_end_to_end():
+    """--method cafe in the engine: the batched protocol threads the
+    (age, cost) rows through the round carry (cluster_age/freq reused),
+    learns, and with lam=0 reproduces per-client rAge-k... which on
+    singleton clusters IS rage_k with no recluster (M large)."""
+    from repro.configs.base import RAgeKConfig
+    from repro.data.federated import paper_mnist_split
+    from repro.data.synthetic import mnist_like
+    from repro.fl import FederatedEngine
+
+    (xtr, ytr), test = mnist_like(n_train=800, n_test=300, seed=0)
+    shards = paper_mnist_split(xtr, ytr, seed=0)
+    # small r/k ratio so indices get re-picked and cost starts to matter
+    base = dict(r=8, k=5, H=2, M=1000, lr=2e-3, batch_size=16)
+    hp = RAgeKConfig(method="cafe", cafe_lam=0.0, **base)
+    e_cafe = FederatedEngine("mlp", shards, test, hp, seed=2)
+    r_cafe = e_cafe.run(6, eval_every=6)
+    e_rage = FederatedEngine("mlp", shards, test,
+                             RAgeKConfig(method="rage_k", **base), seed=2)
+    r_rage = e_rage.run(6, eval_every=6)
+    # lam=0 + singleton clusters + no recluster => identical requests
+    for ia, ib in zip(r_cafe.requested, r_rage.requested):
+        np.testing.assert_array_equal(ia, ib)
+    np.testing.assert_allclose(r_cafe.loss, r_rage.loss, rtol=0, atol=0)
+    # lam>0 changes the schedule once costs accumulate
+    hp2 = RAgeKConfig(method="cafe", cafe_lam=5.0, **base)
+    e2 = FederatedEngine("mlp", shards, test, hp2, seed=2)
+    r2 = e2.run(6, eval_every=6)
+    assert any(not np.array_equal(a, b)
+               for a, b in zip(r2.requested, r_cafe.requested))
+    # cost (freq) accumulated on device
+    assert int(np.asarray(e2.age.freq).sum()) == 6 * e2.n * hp2.k
 
 
 # ---------------------------------------------------------------------------
