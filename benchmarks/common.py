@@ -33,6 +33,50 @@ def _block(r):
         pass
 
 
+def interleaved_best_us(fns: dict, *, iters: int, rounds: int) -> dict:
+    """Best-of per-call timing (microseconds) with the candidate
+    callables interleaved per round, so machine noise hits every variant
+    alike (ratios stay meaningful on a loaded box). Compiles + warms each
+    callable once before timing. fns: name -> nullary callable returning
+    a jax value (blocked on per window)."""
+    import jax
+    for fn in fns.values():                    # compile + warm
+        jax.block_until_ready(fn())
+    best = {name: float("inf") for name in fns}
+    for _ in range(rounds):
+        for name, fn in fns.items():
+            t0 = time.perf_counter()
+            for _ in range(iters):
+                out = fn()
+            jax.block_until_ready(out)
+            best[name] = min(best[name],
+                             (time.perf_counter() - t0) / iters * 1e6)
+    return best
+
+
+def interleaved_best(fns: dict, *, repeats: int, before=None, after=None):
+    """Best-of wall-clock (seconds), one call per variant per repeat,
+    variants interleaved. ``before(name)`` runs untimed ahead of each
+    call (state reset); ``after(name, wall_s)`` may return a dict of
+    side metrics kept only for the best repeat. Returns (best, extras).
+    Callers warm their callables first — the first repeat still pays any
+    residual compilation."""
+    best = {name: float("inf") for name in fns}
+    extras = {name: {} for name in fns}
+    for _ in range(repeats):
+        for name, fn in fns.items():
+            if before is not None:
+                before(name)
+            t0 = time.perf_counter()
+            fn()
+            wall = time.perf_counter() - t0
+            if wall < best[name]:
+                best[name] = wall
+                if after is not None:
+                    extras[name] = after(name, wall) or {}
+    return best, extras
+
+
 def save_json(name: str, obj):
     path = os.path.join(art_dir("bench"), name + ".json")
     with open(path, "w") as f:

@@ -1,20 +1,22 @@
-"""Engine driver bench on the fig3 MNIST config, two axes:
+"""Engine driver bench on the fig3 MNIST config, three axes:
 
 * DRIVER: step (one dispatch per round) vs scan (chunked lax.scan) —
   records rounds/sec and the host-dispatch fraction (share of wall time
   the driver spends OUTSIDE blocking device calls: python loop, metrics
   pulls, reclustering);
 * SELECTION plane (rage_k): segmented per-cluster parallel (default) vs
-  the sequential all-clients scan — both under the scan driver.
+  the sequential all-clients scan — both under the scan driver;
+* ASYNC RECLUSTER: a short run whose final round triggers the every-M
+  DBSCAN, measuring how much of the host clustering wall each driver
+  HIDES behind chunk-boundary work (the scan driver submits it to a
+  worker thread when the chunk metrics arrive; step computes inline).
 
 Results land in experiments/bench/BENCH_engine.json. Fast mode is the
 5-round CI smoke; --slow grows the round count.
 """
 from __future__ import annotations
 
-import time
-
-from benchmarks.common import save_json
+from benchmarks.common import interleaved_best, save_json
 from repro.configs.base import RAgeKConfig
 from repro.data.federated import paper_mnist_split
 from repro.data.synthetic import mnist_like
@@ -27,6 +29,34 @@ VARIANTS = (("step", "step", "segmented"),
             ("scan_seqsel", "scan", "scan"))
 
 
+def _recluster_overlap(shards, test, rounds: int, repeats: int) -> dict:
+    """Both drivers through a run whose LAST round reclusters (M =
+    rounds): recluster_s is the host DBSCAN+merge wall, recluster_wait_s
+    the part the driver blocked on; scan hides the difference behind the
+    chunk-boundary metrics drain + bookkeeping."""
+    hp = RAgeKConfig(r=75, k=10, H=4, M=rounds, lr=2e-3, batch_size=64,
+                     method="rage_k")
+    out = {}
+    for name, use_scan in (("step", False), ("scan", True)):
+        engine = FederatedEngine("mlp", shards, test, hp, seed=0)
+        run = engine.run_scanned if use_scan else engine.run
+        run(rounds, eval_every=rounds)               # compile + warm
+        comp = wait = 0.0
+        for _ in range(repeats):
+            engine.recluster_s = engine.recluster_wait_s = 0.0
+            run(rounds, eval_every=rounds)
+            comp += engine.recluster_s
+            wait += engine.recluster_wait_s
+        out[name] = {
+            "recluster_s": comp / repeats,
+            "recluster_wait_s": wait / repeats,
+            "recluster_hidden_s": max(0.0, comp - wait) / repeats,
+            "hidden_fraction": (max(0.0, comp - wait) / comp
+                                if comp else 0.0),
+        }
+    return out
+
+
 def main(fast: bool = True):
     # 5-round smoke for CI; more repeats because short walls are noisy
     rounds, repeats = (5, 9) if fast else (20, 5)
@@ -36,8 +66,8 @@ def main(fast: bool = True):
     hp = RAgeKConfig(r=75, k=10, H=4, M=20, lr=2e-3, batch_size=64,
                      method="rage_k")
 
-    # one warmed engine per variant; repeats interleaved so machine noise
-    # hits all variants alike, best-of so the systematic per-round
+    # one warmed engine per variant; repeats interleaved (best-of) so
+    # machine noise hits all variants alike and the systematic per-round
     # dispatch savings aren't drowned by scheduler jitter
     runs = {}
     for name, driver, sel in VARIANTS:
@@ -46,18 +76,13 @@ def main(fast: bool = True):
         run = engine.run if driver == "step" else engine.run_scanned
         run(rounds, eval_every=rounds)                # compile + warm
         runs[name] = (engine, run)
-    best = {name: float("inf") for name, _, _ in VARIANTS}
-    host_frac = {name: 0.0 for name, _, _ in VARIANTS}
-    for _ in range(repeats):
-        for name, _, _ in VARIANTS:
-            engine, run = runs[name]
-            engine.device_s = 0.0
-            t0 = time.perf_counter()
-            run(rounds, eval_every=rounds)
-            wall = time.perf_counter() - t0
-            if wall < best[name]:
-                best[name] = wall
-                host_frac[name] = max(0.0, 1.0 - engine.device_s / wall)
+    best, extras = interleaved_best(
+        {name: (lambda r_=run: r_(rounds, eval_every=rounds))
+         for name, (engine, run) in runs.items()},
+        repeats=repeats,
+        before=lambda name: setattr(runs[name][0], "device_s", 0.0),
+        after=lambda name, wall: {
+            "host_frac": max(0.0, 1.0 - runs[name][0].device_s / wall)})
 
     out = {"config": {"rounds": rounds, "repeats": repeats,
                       "method": hp.method, "r": hp.r, "k": hp.k,
@@ -65,7 +90,7 @@ def main(fast: bool = True):
     rows = []
     for name, driver, sel in VARIANTS:
         m = {"rounds_per_s": rounds / best[name],
-             "host_dispatch_fraction": host_frac[name],
+             "host_dispatch_fraction": extras[name].get("host_frac", 0.0),
              "wall_s": best[name], "driver": driver, "selection": sel}
         out[name] = m
         rows.append((f"engine_{name}", 1e6 / m["rounds_per_s"],
@@ -75,6 +100,15 @@ def main(fast: bool = True):
     out["scan_speedup"] = speedup
     out["selection_speedup"] = (out["scan"]["rounds_per_s"]
                                 / out["scan_seqsel"]["rounds_per_s"])
+
+    # async-recluster overlap (ROADMAP lever): the hidden host time
+    out["recluster_overlap"] = _recluster_overlap(
+        shards, test, rounds, max(repeats // 3, 2))
+    hid = out["recluster_overlap"]["scan"]
+    rows.append(("recluster_hidden_scan", hid["recluster_hidden_s"] * 1e6,
+                 f"hidden_frac={hid['hidden_fraction']:.3f};"
+                 f"dbscan_s={hid['recluster_s']:.4f}"))
+
     save_json("BENCH_engine", out)
     rows.append(("engine_scan_speedup", 0.0, f"x{speedup:.2f}"))
     rows.append(("engine_selection_speedup", 0.0,

@@ -214,3 +214,8 @@ class RAgeKConfig:
     disjoint_in_cluster: bool = True # PS requests disjoint sets within a cluster
     wire_dtype: str = "float32"      # paper: fp32 values; bf16 = beyond-paper
     cafe_lam: float = 0.1            # CAFe cost weight (method == "cafe")
+    # top-r candidate plane of the r-candidate methods: 'threshold' is
+    # the histogram two-pass (one streaming pass over d + an r-sized
+    # exact rank, kernels.ops.threshold_topk_batch), 'sort' the full
+    # lax.top_k — BIT-IDENTICAL outputs (tests/test_threshold_candidates)
+    candidates: str = "threshold"

@@ -59,18 +59,21 @@ def rage_k(g: jnp.ndarray, age: jnp.ndarray, r: int, k: int,
 
 
 def apply_method(method: str, g, *, age=None, key=None, r=0, k=0,
-                 exclude=None, lam: float = 0.1):
+                 exclude=None, lam: float = 0.1,
+                 candidates: str = "sort"):
     """Uniform dispatcher (legacy surface). Returns
     (g_sparse, idx, new_age_or_None).
 
     Thin shim over :mod:`repro.core.strategies` — the Strategy protocol
     is the real dispatch layer now; this keeps the old tuple convention
     for existing callers. For ``method='cafe'`` pass the strategy state
-    tuple ``(age, cost)`` as ``age``; ``lam`` is the CAFe cost weight.
+    tuple ``(age, cost)`` as ``age``; ``lam`` is the CAFe cost weight and
+    ``candidates`` the top-r candidate plane ('sort' | 'threshold',
+    bit-identical).
     """
     from repro.core.strategies import make_strategy
 
-    strat = make_strategy(method, r=r, k=k, lam=lam)
+    strat = make_strategy(method, r=r, k=k, lam=lam, candidates=candidates)
     if method == "rage_k":
         idx, vals, new_age = strat.select(g, age, exclude)
         return jnp.zeros_like(g).at[idx].set(vals), idx, new_age

@@ -40,6 +40,21 @@ import jax
 import jax.numpy as jnp
 
 
+CANDIDATE_IMPLS = ("sort", "threshold")
+
+
+def topr_candidates(g: jnp.ndarray, r: int, impl: str = "sort"):
+    """Single-vector top-r magnitude candidate report (|g|-descending
+    indices). impl='sort' is the full ``lax.top_k``; impl='threshold' is
+    the two-pass histogram plane (``kernels.ops.threshold_topk``) —
+    BIT-IDENTICAL output (containment + stable ranking, pinned by
+    tests/test_threshold_candidates.py), one streaming pass over d."""
+    if impl == "threshold":
+        from repro.kernels import ops
+        return ops.threshold_topk(g, r)[1]
+    return jax.lax.top_k(jnp.abs(g), r)[1]
+
+
 def age_select(cand: jnp.ndarray, cand_age: jnp.ndarray, k: int):
     """Paper Algorithm 2 inner step: pick the k highest-age candidates.
 
@@ -144,6 +159,7 @@ class RTopK(_VmapBatch):
     r: int
     k: int
     name: str = "rtop_k"
+    candidates: str = "sort"
 
     def init_state(self, d: int, key=None):
         return _require_key(key, "RTopK")
@@ -153,7 +169,7 @@ class RTopK(_VmapBatch):
 
     def select(self, g, key):
         key, sub = jax.random.split(key)
-        _, cand = jax.lax.top_k(jnp.abs(g), self.r)
+        cand = topr_candidates(g, self.r, self.candidates)
         pick = jax.random.choice(sub, self.r, (self.k,), replace=False)
         idx = cand[pick]
         return idx, g[idx], key
@@ -168,6 +184,7 @@ class RAgeK:
     r: int
     k: int
     name: str = "rage_k"
+    candidates: str = "sort"
 
     def init_state(self, d: int, key=None):
         return jnp.zeros((d,), jnp.int32)
@@ -176,7 +193,7 @@ class RAgeK:
         return jnp.zeros((n, d), jnp.int32)
 
     def select(self, g, age, exclude=None):
-        _, cand = jax.lax.top_k(jnp.abs(g), self.r)
+        cand = topr_candidates(g, self.r, self.candidates)
         cand_age = age[cand].astype(jnp.int32)
         if exclude is not None:
             cand_age = jnp.where(exclude[cand], jnp.int32(-1), cand_age)
@@ -199,7 +216,7 @@ class RAgeK:
         return segmented_rage_select(
             G, cluster_age, cluster_of, r=self.r, k=self.k,
             num_segments=num_segments, max_seg=max_seg,
-            disjoint=disjoint, impl=impl)
+            disjoint=disjoint, impl=impl, candidates=self.candidates)
 
 
 @dataclass(frozen=True)
@@ -216,6 +233,7 @@ class CAFeAgeK(_VmapBatch):
     k: int
     lam: float = 0.1
     name: str = "cafe"
+    candidates: str = "sort"
 
     def init_state(self, d: int, key=None):
         return (jnp.zeros((d,), jnp.int32), jnp.zeros((d,), jnp.int32))
@@ -225,7 +243,7 @@ class CAFeAgeK(_VmapBatch):
 
     def select(self, g, state):
         age, cost = state
-        _, cand = jax.lax.top_k(jnp.abs(g), self.r)
+        cand = topr_candidates(g, self.r, self.candidates)
         score = (age[cand].astype(jnp.float32)
                  - jnp.float32(self.lam) * cost[cand].astype(jnp.float32))
         _, sel = jax.lax.top_k(score, self.k)       # stable: |g| tie-break
@@ -326,10 +344,16 @@ def segmented_age_topk(cand: jnp.ndarray, cand_age: jnp.ndarray,
                                  cand_age.astype(jnp.int32), valid)
 
 
-def client_candidates(G: jnp.ndarray, r: int) -> jnp.ndarray:
+def client_candidates(G: jnp.ndarray, r: int,
+                      impl: str = "sort") -> jnp.ndarray:
     """The per-client top-r magnitude candidate report (|g|-descending) —
     computed CLIENT-side in the protocol and uploaded; both selection
-    planes consume it."""
+    planes consume it. impl='threshold' routes the batched two-pass
+    histogram plane (``kernels.ops.threshold_topk_batch``): bit-identical
+    indices, one streaming pass over d instead of a full sort."""
+    if impl == "threshold":
+        from repro.kernels import ops
+        return ops.threshold_topk_batch(G, r)
     return jax.vmap(lambda gi: jax.lax.top_k(jnp.abs(gi), r)[1])(G)
 
 
@@ -338,7 +362,8 @@ def segmented_rage_select(G: jnp.ndarray, cluster_age: jnp.ndarray,
                           num_segments: int | None = None,
                           max_seg: int | None = None,
                           disjoint: bool = True, impl: str = "jnp",
-                          cands: jnp.ndarray | None = None):
+                          cands: jnp.ndarray | None = None,
+                          candidates: str = "sort"):
     """Paper Algorithm 1 steps 2-3 + eq. (2) in the segmented per-cluster
     formulation: the disjointness recursion runs only WITHIN each padded
     cluster (scan length = max_seg, not N) and clusters run in parallel
@@ -348,7 +373,9 @@ def segmented_rage_select(G: jnp.ndarray, cluster_age: jnp.ndarray,
     cluster_of: (N,) int32 labels < num_segments (each cluster <= max_seg
     members). impl='pallas' routes the inner masked top-k through
     ``kernels.ops.segmented_age_topk``; ``cands`` takes a precomputed
-    :func:`client_candidates` report (the PS-only entry point). Returns
+    :func:`client_candidates` report (the PS-only entry point), while
+    ``candidates`` picks the plane computing it here ('sort' |
+    'threshold', bit-identical). Returns
     (idx (N, k) int32, new_cluster_age, SegmentedSelection) —
     bit-identical to the sequential all-clients scan
     (fl.engine.rage_select), rows >= num_segments untouched.
@@ -362,7 +389,7 @@ def segmented_rage_select(G: jnp.ndarray, cluster_age: jnp.ndarray,
     valid = members < n
     mclip = jnp.minimum(members, n - 1)
     if cands is None:
-        cands = client_candidates(G, r)
+        cands = client_candidates(G, r, candidates)
     seg_cand = cands[mclip]                                    # (C, S, r)
     ca = cluster_age[:num_segments].astype(jnp.int32)          # (C, d)
     seg_age = jax.vmap(lambda row, cnd: row[cnd])(ca, seg_cand)
@@ -415,13 +442,19 @@ def segmented_rage_select(G: jnp.ndarray, cluster_age: jnp.ndarray,
 
 
 def make_strategy(method: str, *, r: int = 0, k: int = 0,
-                  lam: float = 0.1) -> Strategy:
+                  lam: float = 0.1,
+                  candidates: str = "sort") -> Strategy:
     """Config-string factory ('rage_k' | 'rtop_k' | 'top_k' | 'random_k'
-    | 'dense' | 'cafe'); ``lam`` is the CAFe cost weight."""
+    | 'dense' | 'cafe'); ``lam`` is the CAFe cost weight and
+    ``candidates`` the top-r candidate plane ('sort' | 'threshold') of
+    the r-candidate methods."""
+    if candidates not in CANDIDATE_IMPLS:
+        raise ValueError(f"candidates must be one of {CANDIDATE_IMPLS}, "
+                         f"got {candidates!r}")
     if method == "rage_k":
-        return RAgeK(r=r, k=k)
+        return RAgeK(r=r, k=k, candidates=candidates)
     if method == "rtop_k":
-        return RTopK(r=r, k=k)
+        return RTopK(r=r, k=k, candidates=candidates)
     if method == "top_k":
         return TopK(k=k)
     if method == "random_k":
@@ -429,7 +462,7 @@ def make_strategy(method: str, *, r: int = 0, k: int = 0,
     if method == "dense":
         return Dense()
     if method == "cafe":
-        return CAFeAgeK(r=r, k=k, lam=lam)
+        return CAFeAgeK(r=r, k=k, lam=lam, candidates=candidates)
     raise ValueError(f"unknown method {method!r}")
 
 

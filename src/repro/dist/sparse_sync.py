@@ -66,13 +66,14 @@ def _leaf_sizes(shapes) -> list:
 
 
 def _select_bucket(method: str, flat, age_flat, r_b: int, k_b: int,
-                   lam: float = 0.1):
+                   lam: float = 0.1, candidates: str = "sort"):
     """One bucket's selection via the Strategy API. Returns
     (idx (k_b,), vals (k_b,), new_age_flat). For 'cafe' ``age_flat`` is
     the stacked (2, d_b) [age; cost] state (init_age_state layout)."""
     d_b = flat.shape[0]
     r_b, k_b = min(r_b, d_b), min(k_b, d_b)
-    strat = make_strategy(method, r=r_b, k=k_b, lam=lam)
+    strat = make_strategy(method, r=r_b, k=k_b, lam=lam,
+                          candidates=candidates)
     if method == "rage_k":
         return strat.select(flat, age_flat)
     if method == "cafe":
@@ -98,7 +99,8 @@ def _flat_age(a, method: str):
 
 def make_sync_train_step(loss_fn, opt, mesh, *, method: str = "rage_k",
                          r: int = 0, k: int = 0,
-                         wire_dtype=jnp.bfloat16, lam: float = 0.1):
+                         wire_dtype=jnp.bfloat16, lam: float = 0.1,
+                         candidates: str = "sort"):
     """Returns step(params, opt_state, ages, batch) ->
     (params, opt_state, ages, loss, stats).
 
@@ -128,7 +130,8 @@ def make_sync_train_step(loss_fn, opt, mesh, *, method: str = "rage_k",
             for l, a, (r_b, k_b) in zip(leaves, age_leaves, budgets):
                 flat = l.reshape(-1)
                 idx, vals, new_a = _select_bucket(
-                    method, flat, _flat_age(a, method), r_b, k_b, lam=lam)
+                    method, flat, _flat_age(a, method), r_b, k_b, lam=lam,
+                    candidates=candidates)
                 vals = vals.astype(wire_dtype).astype(flat.dtype)
                 synced.append(
                     jnp.zeros_like(flat).at[idx].set(vals).reshape(l.shape))
@@ -149,6 +152,7 @@ def make_sync_train_step(loss_fn, opt, mesh, *, method: str = "rage_k",
 # ---------------------------------------------------------------------------
 
 def make_manual_sync(mesh, specs, shapes, *, method: str = "rage_k",
+                     candidates: str = "sort",
                      r: int = 0, k: int = 0, wire_dtype=jnp.bfloat16,
                      lam: float = 0.1):
     """Explicit gradient exchange over the mesh's data axes.
@@ -220,7 +224,8 @@ def make_manual_sync(mesh, specs, shapes, *, method: str = "rage_k",
                 continue
             af = _flat_age(a, method)
             idx, vals, _ = _select_bucket(
-                method, flat, af, r_b, k_b, lam=lam)
+                method, flat, af, r_b, k_b, lam=lam,
+                candidates=candidates)
             vals = vals.astype(wire_dtype)
             if data_axes:
                 idx = jax.lax.all_gather(idx, data_axes, tiled=True)

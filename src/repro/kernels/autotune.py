@@ -1,0 +1,150 @@
+"""Persistent kernel-tiling autotune registry.
+
+The Pallas kernels expose their tiling (``sparse_aggregate``'s
+BLOCK_D/NK_TILE, ``maghist_batch``'s block size, ``segmented_age_topk``'s
+candidate-lane pad width) as static arguments; hardcoded module constants
+are only a guess for one backend. This registry persists the best
+configuration per ``(kernel, shape, dtype, backend)`` key to
+``experiments/bench/AUTOTUNE.json`` so that
+
+* ``benchmarks/kernel_bench.py`` SWEEPS candidate configs through
+  :func:`sweep` (timing them with the bench's own best-of loop) and
+  records the winners;
+* ``repro.kernels.ops`` CONSULTS the registry (lazy-loaded on first
+  call) whenever a caller does not pass the tiling explicitly, falling
+  back to the nearest-recorded shape of the same kernel/dtype/backend
+  and finally to the module constants.
+
+Key scheme: ``"<kernel>|<d0>x<d1>...|<dtype>|<backend>"`` with the RAW
+(unpadded) operand shape — padding depends on the chosen tiling, so the
+lookup must precede it. ``backend`` is ``jax.default_backend()`` plus
+``"+interp"`` when ops runs the kernels in interpret mode (interpret
+timings are CPU emulation and must never be confused with real-TPU
+entries). Entries store ``{"shape", "config", "us"}``; nearest-match
+minimizes ``|log(numel / numel_q)|``.
+
+The JSON path defaults to the repo's ``experiments/bench/AUTOTUNE.json``
+and can be overridden via ``REPRO_AUTOTUNE_PATH`` or :func:`set_path`
+(tests point it at a tmp file).
+"""
+from __future__ import annotations
+
+import json
+import math
+import os
+import threading
+
+_DEFAULT_PATH = os.path.abspath(os.path.join(
+    os.path.dirname(__file__), "..", "..", "..",
+    "experiments", "bench", "AUTOTUNE.json"))
+
+_lock = threading.Lock()
+_path_override: str | None = None
+_cache: dict | None = None
+_stats = {"hits": 0, "misses": 0}
+
+
+def path() -> str:
+    return (_path_override or os.environ.get("REPRO_AUTOTUNE_PATH")
+            or _DEFAULT_PATH)
+
+
+def set_path(p: str | None) -> None:
+    """Point the registry at a different JSON file (tests); None restores
+    the default. Drops the in-memory cache."""
+    global _path_override, _cache
+    with _lock:
+        _path_override = p
+        _cache = None
+
+
+def clear_cache() -> None:
+    global _cache
+    with _lock:
+        _cache = None
+
+
+def load(refresh: bool = False) -> dict:
+    """The registry dict (lazy-loaded once per process; a missing or
+    corrupt file is an empty registry, never an error)."""
+    global _cache
+    with _lock:
+        if _cache is None or refresh:
+            try:
+                with open(path()) as f:
+                    _cache = json.load(f)
+            except (OSError, ValueError):
+                _cache = {}
+        return _cache
+
+
+def key_of(kernel: str, shape, dtype: str, backend: str) -> str:
+    return (f"{kernel}|{'x'.join(str(int(s)) for s in shape)}"
+            f"|{dtype}|{backend}")
+
+
+def lookup(kernel: str, shape, dtype: str, backend: str) -> dict | None:
+    """Best known config for the key, exact shape first, else the
+    nearest-numel recorded shape of the same kernel/dtype/backend, else
+    None (caller falls back to module defaults)."""
+    reg = load()
+    hit = reg.get(key_of(kernel, shape, dtype, backend))
+    if hit is not None:
+        _stats["hits"] += 1
+        return dict(hit["config"])
+    numel = max(1, math.prod(int(s) for s in shape))
+    prefix, suffix = f"{kernel}|", f"|{dtype}|{backend}"
+    best, best_dist = None, float("inf")
+    for k, v in reg.items():
+        if not (k.startswith(prefix) and k.endswith(suffix)):
+            continue
+        cand = max(1, math.prod(int(s) for s in v.get("shape", [1])))
+        dist = abs(math.log(cand / numel))
+        if dist < best_dist:
+            best, best_dist = v, dist
+    if best is not None:
+        _stats["hits"] += 1
+        return dict(best["config"])
+    _stats["misses"] += 1
+    return None
+
+
+def record(kernel: str, shape, dtype: str, backend: str,
+           config: dict, us: float) -> str:
+    """Insert/overwrite the entry and persist the registry JSON.
+    Returns the key."""
+    reg = load()
+    key = key_of(kernel, shape, dtype, backend)
+    with _lock:
+        reg[key] = {"shape": [int(s) for s in shape],
+                    "config": dict(config), "us": float(us)}
+        p = path()
+        os.makedirs(os.path.dirname(p), exist_ok=True)
+        with open(p, "w") as f:
+            json.dump(reg, f, indent=1, sort_keys=True)
+    return key
+
+
+def sweep(kernel: str, shape, dtype: str, backend: str,
+          configs: list, timer) -> tuple[dict, list]:
+    """Time every candidate config with ``timer(**config) -> us``, record
+    the winner, and return ``(best_config, results)`` where results is
+    ``[{**config, "us": ...}, ...]`` for the bench JSON."""
+    results = []
+    best_cfg, best_us = None, float("inf")
+    for cfg in configs:
+        us = float(timer(**cfg))
+        results.append({**cfg, "us": us})
+        if us < best_us:
+            best_cfg, best_us = dict(cfg), us
+    if best_cfg is not None:
+        record(kernel, shape, dtype, backend, best_cfg, best_us)
+    return best_cfg, results
+
+
+def stats() -> dict:
+    return dict(_stats)
+
+
+def reset_stats() -> None:
+    _stats["hits"] = _stats["misses"] = 0

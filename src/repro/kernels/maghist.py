@@ -1,11 +1,22 @@
 """Pallas TPU kernel: per-block magnitude histogram (exponent buckets).
 
 First pass of accelerator-native top-k: bucket |g| by binary exponent into
-NBINS counters per block; the host (or a tiny jnp epilogue) picks the
-threshold bin so that ~r entries survive, and only candidates are ranked
-exactly. All-d work (the expensive part) is one streaming pass, VMEM-tiled.
+NBINS counters; a tiny jnp epilogue (:func:`threshold_from_hist`) picks
+the threshold bin so that >= r entries survive, and only candidates are
+ranked exactly. All-d work (the expensive part) is one streaming pass,
+VMEM-tiled. Two kernels share the bin math: the single-vector
+:func:`maghist` (one program per d-block, per-block histograms) and the
+batched :func:`maghist_batch` ((N, d)-grid, one program per
+(row, d-block) tile, per-row histograms accumulated across blocks — the
+production candidate plane in ``ops.threshold_topk_batch``).
 
-Bins: bin = clip(floor(log2|g|) + OFFSET, 0, NBINS-1); zeros land in bin 0.
+Bins come from the EXACT float32 exponent field (bitcast, not
+``floor(log2)``): ``bin = clip(exponent(|g|) + OFFSET, 0, NBINS-1)``.
+Exactness matters — the threshold containment proof needs "mag in bin b
+implies mag >= 2^(b - OFFSET)", which float ``log2`` can violate by one
+ulp at bin edges. Pathological values are routed explicitly: NaN -> bin 0
+(never a candidate), +/-inf -> top bin (always a candidate), zeros and
+denormals -> bin 0 (exponent field 0 clips there).
 """
 from __future__ import annotations
 
@@ -20,15 +31,26 @@ NBINS = 64
 OFFSET = 40          # exponent -40 .. +23 covered
 
 
-def _kernel(g_ref, hist_ref):
-    g = g_ref[...].astype(jnp.float32)
-    mag = jnp.abs(g)
-    e = jnp.floor(jnp.log2(jnp.maximum(mag, 1e-38)))
-    b = jnp.clip(e + OFFSET, 0, NBINS - 1).astype(jnp.int32)
-    b = jnp.where(mag == 0, 0, b)
+def exponent_bins(mag: jnp.ndarray) -> jnp.ndarray:
+    """|g| (f32, non-negative) -> int32 bin ids via the exact exponent
+    field. NaN -> 0, inf -> NBINS-1 (exponent 0xFF clips to the top bin),
+    zeros/denormals -> 0 (exponent field 0 clips to the bottom bin)."""
+    bits = jax.lax.bitcast_convert_type(mag.astype(jnp.float32), jnp.int32)
+    e = jnp.right_shift(bits, 23) & 0xFF                 # biased exponent
+    b = jnp.clip(e - 127 + OFFSET, 0, NBINS - 1).astype(jnp.int32)
+    return jnp.where(mag != mag, 0, b)                   # NaN -> bin 0
+
+
+def _hist_block(g: jnp.ndarray) -> jnp.ndarray:
+    """(block,) raw values -> (NBINS,) int32 one-pass histogram."""
+    b = exponent_bins(jnp.abs(g.astype(jnp.float32)))
     onehot = (b[:, None] == jax.lax.broadcasted_iota(
         jnp.int32, (g.shape[0], NBINS), 1)).astype(jnp.int32)
-    hist_ref[...] = jnp.sum(onehot, axis=0, keepdims=True)
+    return jnp.sum(onehot, axis=0)
+
+
+def _kernel(g_ref, hist_ref):
+    hist_ref[...] = _hist_block(g_ref[...])[None, :]
 
 
 @functools.partial(jax.jit, static_argnames=("interpret",))
@@ -47,15 +69,100 @@ def maghist(g: jnp.ndarray, *, interpret: bool = True) -> jnp.ndarray:
     )(g)
 
 
-def threshold_from_hist(hist: jnp.ndarray, r: int) -> jnp.ndarray:
-    """Smallest magnitude threshold whose exceed-count >= r.
+def _batch_kernel(g_ref, hist_ref):
+    j = pl.program_id(1)
 
-    Returns tau (f32): candidates are {i : |g_i| >= tau}; the count of
-    candidates is in [r, r + bucket_width_population). tau = 2^(bin-OFFSET).
+    @pl.when(j == 0)
+    def _init():
+        hist_ref[...] = jnp.zeros_like(hist_ref)
+
+    hist_ref[...] += _hist_block(g_ref[0])[None, :]
+
+
+@functools.partial(jax.jit, static_argnames=("interpret", "block_d"))
+def maghist_batch(G: jnp.ndarray, *, interpret: bool = True,
+                  block_d: int = BLOCK_D) -> jnp.ndarray:
+    """G: (N, d) with d % block_d == 0 -> (N, NBINS) int32 row histograms.
+
+    Grid (N, d // block_d): one program per (row, d-block) tile; the
+    per-row histogram accumulates across the inner (fastest-moving) block
+    dimension, exactly the revisiting pattern ``sparse_aggregate`` uses.
+    ``block_d`` is the autotune surface (kernels.autotune).
     """
-    total = hist.sum(0)                         # (NBINS,)
-    # count of entries in bins >= b
-    from_top = jnp.cumsum(total[::-1])[::-1]
-    bin_sel = jnp.argmax((from_top >= r).astype(jnp.int32) *
-                         jnp.arange(NBINS, 0, -1))
-    return jnp.exp2((bin_sel - OFFSET).astype(jnp.float32))
+    n, d = G.shape
+    assert d % block_d == 0
+    return pl.pallas_call(
+        _batch_kernel,
+        grid=(n, d // block_d),
+        in_specs=[pl.BlockSpec((1, block_d), lambda i, j: (i, j))],
+        out_specs=pl.BlockSpec((1, NBINS), lambda i, j: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, NBINS), jnp.int32),
+        interpret=interpret,
+    )(G)
+
+
+def hist_rows(G: jnp.ndarray) -> jnp.ndarray:
+    """Pure-jnp row histograms, (N, d) -> (N, NBINS) int32 — the oracle
+    for :func:`maghist_batch` and the CPU (non-interpret) production path
+    of ``ops.threshold_topk_batch``. One scatter-add pass over d."""
+    n = G.shape[0]
+    b = exponent_bins(jnp.abs(G.astype(jnp.float32)))
+    return jnp.zeros((n, NBINS), jnp.int32).at[
+        jnp.arange(n)[:, None], b].add(1)
+
+
+def threshold_from_hist_batch(hist: jnp.ndarray, r: int) -> jnp.ndarray:
+    """Per-row magnitude threshold: smallest tau with exceed-count >= r.
+
+    hist: (N, NBINS) int32 row histograms -> (N,) f32. Candidates are
+    {i : |g_i| >= tau}; their count is in [r, r + threshold-bin
+    population). tau = 2^(bin - OFFSET), EXCEPT bin 0 where tau = 0: the
+    bottom bin also holds zeros and denormals (all < 2^-OFFSET), so its
+    lower bin edge would wrongly exclude them — tau = 0 keeps every
+    non-NaN entry a candidate, preserving exact containment.
+    """
+    from_top = jnp.cumsum(hist[..., ::-1], axis=-1)[..., ::-1]
+    # from_top is non-increasing in the bin index, so {b : from_top >= r}
+    # is a prefix (non-empty: from_top[0] counts everything); the LARGEST
+    # qualifying bin is its length - 1
+    bin_sel = jnp.sum((from_top >= r).astype(jnp.int32), axis=-1) - 1
+    return jnp.where(bin_sel == 0, jnp.float32(0),
+                     jnp.exp2((bin_sel - OFFSET).astype(jnp.float32)))
+
+
+def threshold_search(mag: jnp.ndarray, r: int) -> jnp.ndarray:
+    """Scatter-free tau: per-row binary search of the bin edges over
+    exceed-counts, ceil(log2(NBINS)) = 6 vectorized passes over d.
+
+    mag: (N, d) non-negative f32 -> (N,) f32 tau, IDENTICAL to
+    ``threshold_from_hist_batch(hist_rows(G), r)`` (pinned by tests):
+    ``count(mag >= 2^(b - OFFSET)) == count(bin >= b)`` for b >= 1
+    exactly (bin edges are exact powers of two; NaN sits in bin 0 and
+    fails every ``>=``), and the b = 0 edge is never probed — the search
+    keeps the invariant count(lo) >= r with lo = 0 trivially true, so
+    all-small rows converge to lo = 0 and the tau = 0 rule applies.
+    The CPU production path of ``ops.threshold_topk_batch`` uses this
+    instead of materializing histograms (XLA CPU scatter is serial);
+    the Pallas plane gets the histogram for free from ``maghist_batch``.
+    """
+    n = mag.shape[0]
+
+    def body(_, lohi):
+        lo, hi = lohi
+        mid = (lo + hi) // 2
+        edge = jnp.exp2((mid - OFFSET).astype(jnp.float32))
+        cnt = jnp.sum((mag >= edge[:, None]).astype(jnp.int32), axis=1)
+        ok = cnt >= r
+        return jnp.where(ok, mid, lo), jnp.where(ok, hi, mid)
+
+    lo, _ = jax.lax.fori_loop(
+        0, 6, body, (jnp.zeros((n,), jnp.int32),
+                     jnp.full((n,), NBINS, jnp.int32)))
+    return jnp.where(lo == 0, jnp.float32(0),
+                     jnp.exp2((lo - OFFSET).astype(jnp.float32)))
+
+
+def threshold_from_hist(hist: jnp.ndarray, r: int) -> jnp.ndarray:
+    """Single-vector epilogue over per-block histograms: (nb, NBINS) ->
+    scalar tau (f32). See :func:`threshold_from_hist_batch`."""
+    return threshold_from_hist_batch(hist.sum(0)[None, :], r)[0]

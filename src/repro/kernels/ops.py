@@ -1,6 +1,10 @@
 """Jit'd public wrappers around the Pallas kernels: padding to block
-multiples, interpret-mode switch (CPU validation vs TPU target), and the
-hybrid threshold-top-k built from the maghist kernel.
+multiples, interpret-mode switch (CPU validation vs TPU target), the
+hybrid threshold-top-k built from the maghist kernel, and the autotune
+registry consultation (kernels.autotune) — every tiling argument left
+unspecified by the caller resolves through the persistent
+``experiments/bench/AUTOTUNE.json`` sweep results before falling back to
+the module constants.
 """
 from __future__ import annotations
 
@@ -9,6 +13,7 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import autotune
 from repro.kernels import maghist as MH
 from repro.kernels import segmented_topk as ST
 from repro.kernels import sparse_aggregate as SA
@@ -24,6 +29,25 @@ def set_interpret(flag: bool):
     _INTERPRET = bool(flag)
 
 
+def backend_tag() -> str:
+    """Autotune backend key: the platform, plus '+interp' while the
+    kernels run in interpret mode (emulation timings must never be
+    confused with real-TPU entries)."""
+    return jax.default_backend() + ("+interp" if _INTERPRET else "")
+
+
+def _tuned(kernel: str, shape, dtype, defaults: dict) -> dict:
+    """Resolve a kernel's tiling: registry entry for (kernel, raw shape,
+    dtype, backend) if one exists, module-constant defaults otherwise.
+    Unknown keys in a stale registry entry are ignored."""
+    cfg = autotune.lookup(kernel, shape, str(jnp.dtype(dtype)),
+                          backend_tag())
+    out = dict(defaults)
+    if cfg:
+        out.update({k: v for k, v in cfg.items() if k in defaults})
+    return out
+
+
 def _pad_to(x, m, fill=0):
     pad = (-x.shape[0]) % m
     if pad:
@@ -32,12 +56,19 @@ def _pad_to(x, m, fill=0):
 
 
 def sparse_aggregate(idx: jnp.ndarray, vals: jnp.ndarray, age: jnp.ndarray,
-                     *, block_d: int = SA.BLOCK_D,
-                     nk_tile: int = SA.NK_TILE):
+                     *, block_d: int | None = None,
+                     nk_tile: int | None = None):
     """Public entry: arbitrary NK and d; pads idx with d (dropped) and the
     age vector with zeros (sliced back off). block_d/nk_tile expose the
-    kernel tiling for autotune sweeps (benchmarks/kernel_bench.py)."""
+    kernel tiling for sweeps; left as None they resolve through the
+    autotune registry (key: raw (NK, d) shape) before the module
+    constants."""
     d = age.shape[0]
+    if block_d is None or nk_tile is None:
+        cfg = _tuned("sparse_aggregate", (idx.shape[0], d), vals.dtype,
+                     {"block_d": SA.BLOCK_D, "nk_tile": SA.NK_TILE})
+        block_d = block_d or cfg["block_d"]
+        nk_tile = nk_tile or cfg["nk_tile"]
     dp = d + ((-d) % block_d)
     idx_p = _pad_to(idx.astype(jnp.int32), nk_tile, fill=dp)
     vals_p = _pad_to(vals.astype(jnp.float32), nk_tile, fill=0)
@@ -50,17 +81,19 @@ def sparse_aggregate(idx: jnp.ndarray, vals: jnp.ndarray, age: jnp.ndarray,
 
 def segmented_age_topk(cand: jnp.ndarray, cand_age: jnp.ndarray,
                        valid: jnp.ndarray, k: int, *,
-                       disjoint: bool = True):
+                       disjoint: bool = True, lane: int | None = None):
     """Public entry for the segmented selection kernel: cand/cand_age
     (C, S, r) candidate indices / non-negative ages, valid (C, S) member
-    mask -> (C, S, k) int32 picks. Pads the candidate axis to the int32
-    lane width with never-selected sentinels (cand = -2 so it can't match
-    the taken buffer, age = NEG); requires k <= r so padding can never be
-    picked."""
+    mask -> (C, S, k) int32 picks. Pads the candidate axis to ``lane``
+    (autotuned; default the int32 lane width) with never-selected
+    sentinels (cand = -2 so it can't match the taken buffer, age = NEG);
+    requires k <= r so padding can never be picked."""
     C, S, r = cand.shape
     if k > r:
         raise ValueError(f"need k <= r candidates (got k={k}, r={r})")
-    pad = (-r) % ST.LANE
+    lane = lane or _tuned("segmented_age_topk", (C, S, r), jnp.int32,
+                          {"lane": ST.LANE})["lane"]
+    pad = (-r) % lane
     cand = cand.astype(jnp.int32)
     cand_age = cand_age.astype(jnp.int32)
     if pad:
@@ -78,22 +111,74 @@ def maghist(g: jnp.ndarray):
     return MH.maghist(gp, interpret=_INTERPRET)
 
 
+def maghist_batch(G: jnp.ndarray, *, block_d: int | None = None):
+    """Batched magnitude histograms via the (N, d)-grid Pallas kernel:
+    (N, d) -> (N, NBINS) int32. Pads d with zeros (bottom bin — they can
+    only inflate the bin-0 count, which the tau = 0 epilogue rule makes
+    harmless). block_d resolves through the autotune registry."""
+    n, d = G.shape
+    block_d = block_d or _tuned("maghist_batch", (n, d), G.dtype,
+                                {"block_d": MH.BLOCK_D})["block_d"]
+    pad = (-d) % block_d
+    if pad:
+        G = jnp.pad(G, ((0, 0), (0, pad)))
+    return MH.maghist_batch(G, interpret=_INTERPRET, block_d=block_d)
+
+
+def _masked_topr(mag: jnp.ndarray, tau: jnp.ndarray, r: int):
+    """Shared epilogue: mask non-candidates to -1, exact stable top-r of
+    the survivors. Returns (vals, idx) with idx BIT-IDENTICAL to
+    ``lax.top_k(|G|, r)`` row-wise for NaN-free input (see
+    ops.threshold_topk for the argument)."""
+    masked = jnp.where(mag >= tau[:, None], mag, -1.0)
+    return jax.lax.top_k(masked, r)
+
+
+def threshold_topk_batch(G: jnp.ndarray, r: int, *,
+                         hist_impl: str | None = None) -> jnp.ndarray:
+    """Batched two-pass top-r candidate report — the production candidate
+    plane (``core.strategies.client_candidates`` impl='threshold').
+
+    G: (N, d) -> (N, r) int32 indices, BIT-IDENTICAL to
+    ``vmap(lambda g: lax.top_k(|g|, r)[1])(G)`` for NaN-free G: the exact
+    |g| top-r set is always contained in the candidate set
+    {|g| >= tau} (tau from the exact-exponent histogram; tau = 0 when the
+    threshold bin is the bottom bin, so zeros/denormals stay candidates),
+    surviving values keep their magnitudes while non-candidates drop to
+    -1 < tau <= every candidate, and ``lax.top_k`` is stable — same
+    values in the same index order give the same report. With NaNs the
+    result is ``top_k(where(isnan, -1, |g|), r)``: NaN is never a
+    candidate (pinned by tests). The d-sized prologue is ONE streaming
+    pass; hist_impl picks it ('pallas' = the (N, d)-grid
+    ``maghist_batch`` kernel + the vectorized histogram epilogue,
+    'jnp' = the scatter-free binary-search tau, identical bit-for-bit;
+    None routes pallas on a real backend and jnp under interpret mode,
+    where emulating the kernel would be Python-speed).
+    """
+    if hist_impl is None:
+        hist_impl = "jnp" if _INTERPRET else "pallas"
+    mag = jnp.abs(G.astype(jnp.float32))
+    tau = (MH.threshold_from_hist_batch(maghist_batch(G), r)
+           if hist_impl == "pallas" else MH.threshold_search(mag, r))
+    return _masked_topr(mag, tau, r)[1]
+
+
 def threshold_topk(g: jnp.ndarray, r: int):
     """Two-pass accelerator top-r: histogram -> threshold -> exact rank of
-    the surviving candidates. Returns (vals, idx) like lax.top_k(|g|, r).
+    the surviving candidates. Returns (vals, idx) like lax.top_k(|g|, r)
+    (vals are the masked magnitudes: non-candidates read -1).
 
     Guarantee (tested): the exact |g| top-r set is always contained in the
     candidate set {|g| >= tau}, so the final exact top_k over candidates
-    equals the true top-r (ties broken by index like lax.top_k).
+    equals the true top-r (ties broken by index like lax.top_k) — for any
+    finite/inf input; NaN entries are never candidates, i.e. the result
+    is exactly ``lax.top_k(where(isnan, -1, |g|), r)``.
     """
-    hist = maghist(g)
-    tau = MH.threshold_from_hist(hist, r)
-    mag = jnp.abs(g.astype(jnp.float32))
-    # zero non-candidates, then exact top-r (the r-sized sort is the cheap
-    # part; the d-sized work happened in the streaming histogram pass)
-    masked = jnp.where(mag >= tau, mag, -1.0)
-    vals, idx = jax.lax.top_k(masked, r)
-    return vals, idx
+    mag = jnp.abs(g.astype(jnp.float32))[None, :]
+    tau = (MH.threshold_from_hist(maghist(g), r)[None] if not _INTERPRET
+           else MH.threshold_search(mag, r))
+    vals, idx = _masked_topr(mag, tau, r)
+    return vals[0], idx[0]
 
 
 def decode_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,

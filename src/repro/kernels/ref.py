@@ -5,7 +5,8 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.maghist import NBINS, OFFSET, BLOCK_D as HIST_BLOCK
+from repro.kernels.maghist import (NBINS, BLOCK_D as HIST_BLOCK,
+                                   exponent_bins, hist_rows)
 
 
 def sparse_aggregate_ref(idx, vals, age):
@@ -32,12 +33,16 @@ def segmented_age_topk_ref(cand, cand_age, valid, k, *, disjoint=True):
 def maghist_ref(g):
     d = g.shape[0]
     nb = d // HIST_BLOCK
-    mag = jnp.abs(g.astype(jnp.float32))
-    e = jnp.floor(jnp.log2(jnp.maximum(mag, 1e-38)))
-    b = jnp.clip(e + OFFSET, 0, NBINS - 1).astype(jnp.int32)
-    b = jnp.where(mag == 0, 0, b)
+    b = exponent_bins(jnp.abs(g.astype(jnp.float32)))
     oh = jax.nn.one_hot(b, NBINS, dtype=jnp.int32)
     return oh.reshape(nb, HIST_BLOCK, NBINS).sum(axis=1)
+
+
+def maghist_batch_ref(G):
+    """(N, d) -> (N, NBINS) row histograms — delegates to the pure-jnp
+    scatter formulation in ``kernels.maghist.hist_rows`` (also the CPU
+    production path), the single source of truth for the bin math."""
+    return hist_rows(G)
 
 
 def decode_attention_ref(q, k, v, cache_len):

@@ -49,6 +49,14 @@ def main():
                          "inspect); 'scan' runs whole chunks of rounds "
                          "per dispatch via lax.scan (bit-identical, "
                          "faster)")
+    ap.add_argument("--candidates", default="threshold",
+                    choices=("threshold", "sort"),
+                    help="top-r candidate plane: 'threshold' computes "
+                         "the per-client report via the histogram "
+                         "two-pass (one streaming pass over d + an "
+                         "r-sized exact rank; default), 'sort' via the "
+                         "full lax.top_k — bit-identical outputs, kept "
+                         "for A/B debugging")
     ap.add_argument("--selection", default="segmented",
                     choices=("scan", "segmented"),
                     help="rage_k selection plane: 'segmented' runs the "
@@ -84,7 +92,8 @@ def main():
             defaults[name] = v
     if args.batch:
         defaults["batch_size"] = args.batch
-    hp = RAgeKConfig(method=args.method, cafe_lam=args.cafe_lam, **defaults)
+    hp = RAgeKConfig(method=args.method, cafe_lam=args.cafe_lam,
+                     candidates=args.candidates, **defaults)
 
     engine = FederatedEngine(kind, shards, test, hp, seed=args.seed,
                              ef=args.ef, aggregate_impl=args.aggregate,

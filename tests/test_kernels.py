@@ -126,6 +126,49 @@ def test_maghist_sweep(d, scale_pow):
     assert int(h.sum()) == d
 
 
+@pytest.mark.parametrize("n,d", [(1, 4096), (3, 9000), (8, 4096),
+                                 (5, 12_288)])
+@pytest.mark.parametrize("block_d", [None, 2048])
+def test_maghist_batch_sweep(n, d, block_d, tmp_path):
+    """(N, d)-grid batched histogram kernel vs the jnp row-scatter
+    oracle, across padding and tiling; rows stay partitions of d. The
+    registry is pointed at an empty tmp file so the block_d=None case
+    resolves the MODULE default (a populated real registry would pad
+    differently than the hardcoded oracle below)."""
+    from repro.kernels import autotune
+    autotune.set_path(str(tmp_path / "AUTOTUNE.json"))
+    try:
+        key = jax.random.PRNGKey(n * d)
+        G = jax.random.normal(key, (n, d)) * (2.0 ** jax.random.randint(
+            jax.random.split(key)[0], (n, d), -12, 8))
+        h = (ops.maghist_batch(G) if block_d is None
+             else ops.maghist_batch(G, block_d=block_d))
+    finally:
+        autotune.set_path(None)
+    bd = block_d or 4096
+    Gp = jnp.pad(G, ((0, 0), (0, (-d) % bd)))
+    np.testing.assert_array_equal(np.asarray(h),
+                                  np.asarray(ref.maghist_batch_ref(Gp)))
+    np.testing.assert_array_equal(np.asarray(h).sum(1),
+                                  np.full(n, Gp.shape[1]))
+
+
+@pytest.mark.parametrize("n,d,r", [(4, 4096, 16), (2, 10_000, 75),
+                                   (7, 3000, 128)])
+def test_threshold_topk_batch_matches_client_report(n, d, r):
+    """The batched threshold plane is bit-identical (same indices, same
+    order) to the vmapped full-sort candidate report, on both hist
+    impls."""
+    from repro.core.strategies import client_candidates
+    key = jax.random.PRNGKey(r)
+    G = jax.random.normal(key, (n, d)) * jnp.exp2(
+        jax.random.randint(key, (n, d), -10, 10).astype(jnp.float32))
+    want = np.asarray(client_candidates(G, r, "sort"))
+    for impl in ("jnp", "pallas"):
+        got = np.asarray(ops.threshold_topk_batch(G, r, hist_impl=impl))
+        np.testing.assert_array_equal(got, want)
+
+
 @pytest.mark.parametrize("d,r", [(4096, 16), (10_000, 75), (50_000, 512)])
 def test_threshold_topk_matches_exact(d, r):
     key = jax.random.PRNGKey(r)

@@ -1,0 +1,236 @@
+"""The histogram-threshold candidate plane is BIT-IDENTICAL to the
+full-sort plane, and total on pathological input:
+
+1. ``ops.threshold_topk_batch(G, r)`` returns exactly
+   ``vmap(lax.top_k(|g|, r))`` indices — same set, same |g|-descending /
+   index tie order — for arbitrary (N, d, r) including duplicate
+   magnitudes, all-zero rows and the r == d edge (seeded sweep here; the
+   hypothesis generalization below runs where hypothesis is installed).
+2. All three tau implementations agree bit-for-bit: the vectorized
+   histogram epilogue over the jnp row histograms, over the Pallas
+   ``maghist_batch`` kernel output, and the scatter-free binary search.
+3. Pathological gradients have DEFINED semantics (the containment
+   guarantee survives): NaN -> bin 0 and never a candidate, inf -> top
+   bin and always a candidate, zeros/denormals -> bin 0 with the tau = 0
+   bottom-bin rule — for ANY input,
+   ``threshold_topk(g, r)[1] == lax.top_k(where(isnan, -1, |g|), r)[1]``.
+4. The full engine agrees: candidates='sort' vs 'threshold' produce
+   bit-identical runs (params, losses, requested indices, age state,
+   cluster labels) across a recluster boundary, under both drivers.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.strategies import client_candidates
+from repro.kernels import maghist as MH
+from repro.kernels import ops
+
+
+def _assert_parity(G, r):
+    a = np.asarray(client_candidates(G, r, "sort"))
+    b = np.asarray(client_candidates(G, r, "threshold"))
+    np.testing.assert_array_equal(a, b)
+
+
+def test_batch_parity_seeded_sweep():
+    rng = np.random.default_rng(0)
+    for _ in range(12):
+        n = int(rng.integers(1, 9))
+        d = int(rng.integers(1, 400))
+        r = int(rng.integers(1, d + 1))
+        kind = rng.integers(0, 4)
+        if kind == 0:                       # generic continuous
+            G = rng.normal(size=(n, d))
+        elif kind == 1:                     # heavy duplicates
+            G = rng.integers(-3, 4, (n, d)).astype(np.float64)
+        elif kind == 2:                     # wide exponent range
+            G = rng.normal(size=(n, d)) * np.exp2(
+                rng.integers(-45, 25, (n, d)).astype(np.float64))
+        else:                               # sparse rows (mostly zero)
+            G = np.where(rng.uniform(size=(n, d)) < 0.9, 0.0,
+                         rng.normal(size=(n, d)))
+        _assert_parity(jnp.asarray(G.astype(np.float32)), r)
+
+
+@pytest.mark.parametrize("n,d,r", [(3, 50, 50), (1, 1, 1), (4, 7, 7)])
+def test_batch_parity_r_equals_d(n, d, r):
+    rng = np.random.default_rng(n * d)
+    _assert_parity(jnp.asarray(rng.normal(size=(n, d)).astype(np.float32)),
+                   r)
+
+
+def test_batch_parity_all_zero_rows():
+    G = jnp.zeros((4, 123), jnp.float32)
+    _assert_parity(G, 10)
+    # mixed: one zero row among generic rows
+    rng = np.random.default_rng(5)
+    G = rng.normal(size=(3, 200)).astype(np.float32)
+    G[1] = 0.0
+    _assert_parity(jnp.asarray(G), 64)
+
+
+def test_tau_impls_bit_identical():
+    """Binary search == histogram epilogue (jnp rows) == histogram
+    epilogue (Pallas batch kernel), including padding."""
+    rng = np.random.default_rng(3)
+    for d, r in ((257, 10), (5000, 75), (64, 64)):
+        G = jnp.asarray((rng.normal(size=(4, d)) * np.exp2(
+            rng.integers(-45, 25, (4, d)))).astype(np.float32))
+        mag = jnp.abs(G)
+        t_search = np.asarray(MH.threshold_search(mag, r))
+        t_rows = np.asarray(
+            MH.threshold_from_hist_batch(MH.hist_rows(G), r))
+        t_pallas = np.asarray(
+            MH.threshold_from_hist_batch(ops.maghist_batch(G), r))
+        np.testing.assert_array_equal(t_search, t_rows)
+        np.testing.assert_array_equal(t_search, t_pallas)
+
+
+def test_maghist_routes_nan_and_inf():
+    """Satellite pin: NaN -> bin 0, +/-inf -> top bin, zeros/denormals ->
+    bin 0; the histogram stays a partition (sums to d)."""
+    g = jnp.asarray([np.nan, np.inf, -np.inf, 0.0, -0.0, 1e-45, 1.5,
+                     -2.0], jnp.float32)
+    b = np.asarray(MH.exponent_bins(jnp.abs(g)))
+    assert b[0] == 0                                   # NaN
+    assert b[1] == b[2] == MH.NBINS - 1                # +/- inf
+    assert b[3] == b[4] == b[5] == 0                   # zeros, denormal
+    assert b[6] == MH.OFFSET and b[7] == MH.OFFSET + 1
+    h = np.asarray(MH.hist_rows(g[None, :]))[0]
+    assert h.sum() == g.shape[0]
+    assert h[0] == 4 and h[MH.NBINS - 1] == 2
+
+
+def test_threshold_topk_total_on_pathological_input():
+    """For ANY input — NaN, inf, zeros, denormals — the result equals
+    ``lax.top_k(where(isnan, -1, |g|), r)``: NaN is never a candidate,
+    the finite/inf top-r always is (containment survives)."""
+    rng = np.random.default_rng(9)
+    g = rng.normal(size=(300,)).astype(np.float32)
+    g[::7] = np.nan
+    g[3] = np.inf
+    g[50] = -np.inf
+    g[100:140] = 0.0
+    g[200:220] = 1e-42                                 # denormals
+    gj = jnp.asarray(g)
+    for r in (5, 64, 300):
+        _, idx = ops.threshold_topk(gj, r)
+        _, want = jax.lax.top_k(
+            jnp.where(jnp.isnan(gj), -1.0, jnp.abs(gj)), r)
+        np.testing.assert_array_equal(np.asarray(idx), np.asarray(want))
+    # batched form, mixed pathological rows
+    G = np.stack([g, np.zeros_like(g), np.full_like(g, np.nan),
+                  rng.normal(size=(300,)).astype(np.float32)])
+    Gj = jnp.asarray(G)
+    got = np.asarray(ops.threshold_topk_batch(Gj, 20))
+    want = np.asarray(jax.lax.top_k(
+        jnp.where(jnp.isnan(Gj), -1.0, jnp.abs(Gj)), 20)[1])
+    np.testing.assert_array_equal(got, want)
+
+
+def test_strategy_level_parity():
+    """RAgeK / CAFe / RTopK with candidates='threshold' pick identical
+    indices to candidates='sort' (RTopK: identical candidate list feeds
+    the same random draw)."""
+    from repro.core.strategies import make_strategy
+    rng = np.random.default_rng(11)
+    g = jnp.asarray(rng.normal(size=(500,)).astype(np.float32))
+    for method in ("rage_k", "cafe"):
+        sa = make_strategy(method, r=40, k=7, candidates="sort")
+        sb = make_strategy(method, r=40, k=7, candidates="threshold")
+        st_a = sa.init_state(500)
+        st_b = sb.init_state(500)
+        for _ in range(3):
+            ia, va, st_a = sa.select(g, st_a)
+            ib, vb, st_b = sb.select(g, st_b)
+            np.testing.assert_array_equal(np.asarray(ia), np.asarray(ib))
+    key = jax.random.PRNGKey(0)
+    sa = make_strategy("rtop_k", r=40, k=7, candidates="sort")
+    sb = make_strategy("rtop_k", r=40, k=7, candidates="threshold")
+    ia, _, _ = sa.select(g, key)
+    ib, _, _ = sb.select(g, key)
+    np.testing.assert_array_equal(np.asarray(ia), np.asarray(ib))
+
+
+# ---------------------------------------------------------------------------
+# hypothesis generalization (skipped where hypothesis isn't installed)
+# ---------------------------------------------------------------------------
+
+def test_batch_parity_hypothesis():
+    hypothesis = pytest.importorskip(
+        "hypothesis", reason="hypothesis not installed in this environment")
+    from hypothesis import given, settings, strategies as st
+
+    @settings(max_examples=40, deadline=None)
+    @given(st.integers(1, 6), st.integers(1, 200), st.data())
+    def prop(n, d, data):
+        r = data.draw(st.integers(1, d))
+        seed = data.draw(st.integers(0, 2**31 - 1))
+        rng = np.random.default_rng(seed)
+        kind = data.draw(st.sampled_from(
+            ["gauss", "dups", "wide", "zero_rows"]))
+        if kind == "gauss":
+            G = rng.normal(size=(n, d))
+        elif kind == "dups":
+            G = rng.integers(-2, 3, (n, d)).astype(np.float64)
+        elif kind == "wide":
+            G = rng.normal(size=(n, d)) * np.exp2(
+                rng.integers(-45, 25, (n, d)).astype(np.float64))
+        else:
+            G = rng.normal(size=(n, d))
+            G[rng.uniform(size=n) < 0.5] = 0.0
+        _assert_parity(jnp.asarray(G.astype(np.float32)), r)
+
+    prop()
+
+
+# ---------------------------------------------------------------------------
+# full-engine A/B: sort vs threshold across a recluster boundary
+# ---------------------------------------------------------------------------
+
+HP = dict(r=30, k=6, H=2, M=3, lr=2e-3, batch_size=16)
+ROUNDS = 7                               # recluster boundaries at 3 and 6
+
+
+@pytest.fixture(scope="module")
+def mnist_setup():
+    from repro.data.federated import paper_mnist_split
+    from repro.data.synthetic import mnist_like
+    (xtr, ytr), test = mnist_like(n_train=1200, n_test=400, seed=0)
+    return paper_mnist_split(xtr, ytr, seed=0), test
+
+
+def test_engine_threshold_equals_sort_candidates(mnist_setup):
+    """Golden A/B: the candidate plane is invisible to the protocol —
+    identical losses, accuracy, requested indices, params, age state and
+    cluster labels across two recluster boundaries; the threshold engine
+    runs the scanned driver so the async-recluster overlap path is under
+    the same pin."""
+    from repro.configs.base import RAgeKConfig
+    from repro.fl import FederatedEngine
+    shards, test = mnist_setup
+    ea = FederatedEngine("mlp", shards, test,
+                         RAgeKConfig(method="rage_k", candidates="sort",
+                                     **HP), seed=3)
+    ra = ea.run(ROUNDS, eval_every=2)
+    eb = FederatedEngine("mlp", shards, test,
+                         RAgeKConfig(method="rage_k",
+                                     candidates="threshold", **HP), seed=3)
+    rb = eb.run_scanned(ROUNDS, eval_every=2)
+    np.testing.assert_allclose(ra.loss, rb.loss, rtol=0, atol=0)
+    np.testing.assert_allclose(ra.acc, rb.acc, rtol=0, atol=0)
+    for ia, ib in zip(ra.requested, rb.requested):
+        np.testing.assert_array_equal(ia, ib)
+    for pa, pb in zip(jax.tree_util.tree_leaves(ea.g_params),
+                      jax.tree_util.tree_leaves(eb.g_params)):
+        np.testing.assert_array_equal(np.asarray(pa), np.asarray(pb))
+    np.testing.assert_array_equal(np.asarray(ea.age.cluster_age),
+                                  np.asarray(eb.age.cluster_age))
+    np.testing.assert_array_equal(np.asarray(ea.age.freq),
+                                  np.asarray(eb.age.freq))
+    np.testing.assert_array_equal(ea.cluster_of, eb.cluster_of)
+    assert ea.round_idx > 2 * HP["M"]
+    # the scanned engine actually exercised the async recluster overlap
+    assert eb.recluster_s > 0.0
