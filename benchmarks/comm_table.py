@@ -1,6 +1,9 @@
 """Communication-volume table (the paper's bandwidth claim, made explicit):
 uplink bytes per client per global round for every method, both paper
-settings, plus the distributed bucketed variant's wire format.
+settings, plus the distributed bucketed variant's wire format and the
+participation plane's partial-round totals (DESIGN.md §9) — a round in
+which only m of N clients take part uploads m/N of the full-round bytes,
+candidate report included only for the active clients.
 """
 from __future__ import annotations
 
@@ -10,8 +13,9 @@ from repro.core.compression import bytes_per_index, bytes_per_round
 
 def main(fast: bool = True):
     settings = {
-        "mnist (d=39,760, r=75, k=10)": dict(d=39_760, r=75, k=10),
-        "cifar (d=2,515,338, r=2500, k=100)": dict(d=2_515_338, r=2500, k=100),
+        "mnist (d=39,760, r=75, k=10)": dict(d=39_760, r=75, k=10, n=10),
+        "cifar (d=2,515,338, r=2500, k=100)": dict(d=2_515_338, r=2500,
+                                                   k=100, n=6),
     }
     rows = []
     table = {}
@@ -22,6 +26,13 @@ def main(fast: bool = True):
         sparse_rep = sparse + s["r"] * ib           # rAge-k adds the r-report
         sparse_bf16 = (bytes_per_round(s["k"], s["d"], wire_dtype="bfloat16")
                        + s["r"] * ib)               # beyond-paper bf16 wire
+        # partial rounds (participation plane): only the m active
+        # clients upload values AND the r-candidate report
+        n, m = s["n"], max(s["n"] // 4, 1)
+        full_round = (bytes_per_round(s["k"], s["d"], m_active=n)
+                      + n * s["r"] * ib)
+        partial_round = (bytes_per_round(s["k"], s["d"], m_active=m)
+                         + m * s["r"] * ib)
         table[name] = {
             "index_bytes": ib,
             "dense_fp32": dense,
@@ -29,10 +40,15 @@ def main(fast: bool = True):
             "rage_k(+r-report)": sparse_rep,
             "rage_k_bf16_wire": sparse_bf16,
             "reduction_vs_dense": dense / sparse_rep,
+            "round_total_full": {"n_active": n, "bytes": full_round},
+            "round_total_partial": {"n_active": m, "bytes": partial_round,
+                                    "fraction_of_full":
+                                        partial_round / full_round},
         }
         rows.append((f"comm:{name}", 0.0,
                      f"dense={dense}B sparse={sparse_rep}B "
-                     f"x{dense / sparse_rep:.0f} less"))
+                     f"x{dense / sparse_rep:.0f} less; "
+                     f"round m={m}/{n}: {partial_round}B"))
     save_json("comm_table", table)
     return rows
 

@@ -9,12 +9,19 @@
 * ASYNC RECLUSTER: a short run whose final round triggers the every-M
   DBSCAN, measuring how much of the host clustering wall each driver
   HIDES behind chunk-boundary work (the scan driver submits it to a
-  worker thread when the chunk metrics arrive; step computes inline).
+  worker thread when the chunk metrics arrive; step computes inline);
+* PARTICIPATION plane (DESIGN.md §9): seeded full / UniformM /
+  AoIBalanced / Deadline runs at m = N/4, recording the new AoI metrics
+  (client-level mean/peak AoI, coordinate-level cluster_age mean/peak)
+  — at EQUAL uplink bytes the AoI-balancing scheduler should show the
+  lower peak client AoI than uniform sampling.
 
 Results land in experiments/bench/BENCH_engine.json. Fast mode is the
 5-round CI smoke; --slow grows the round count.
 """
 from __future__ import annotations
+
+import numpy as np
 
 from benchmarks.common import interleaved_best, save_json
 from repro.configs.base import RAgeKConfig
@@ -54,6 +61,46 @@ def _recluster_overlap(shards, test, rounds: int, repeats: int) -> dict:
             "hidden_fraction": (max(0.0, comp - wait) / comp
                                 if comp else 0.0),
         }
+    return out
+
+
+def _participation(shards, test, rounds: int) -> dict:
+    """Seeded schedule A/B on the fig3 config (DESIGN.md §9): full vs
+    UniformM vs AoIBalanced at m = N/4 (EQUAL uplink bytes — same m,
+    same rounds) plus the Deadline straggler profile. Records the
+    participation metrics the engine now tracks: client-level AoI
+    (mean over rounds / peak over the run) and the coordinate-level
+    cluster_age field (final mean / peak). AoI balancing should beat
+    uniform sampling on peak client AoI at identical uplink spend."""
+    n = len(shards)
+    m = max(n // 4, 1)
+    base = dict(r=75, k=10, H=4, M=20, lr=2e-3, batch_size=64,
+                method="rage_k")
+    variants = (("full", dict(schedule="full"), n),
+                ("uniform", dict(schedule="uniform", participation_m=m), m),
+                ("aoi", dict(schedule="aoi", participation_m=m), m),
+                ("deadline", dict(schedule="deadline", deadline_s=1.0), n))
+    out = {"m": m, "n_clients": n, "rounds": rounds}
+    for name, kw, m_bound in variants:
+        hp = RAgeKConfig(**base, **kw)
+        engine = FederatedEngine("mlp", shards, test, hp, seed=0)
+        res = engine.run_scanned(rounds, eval_every=rounds)
+        out[name] = {
+            "schedule": hp.schedule,
+            "participation_bound": m_bound,
+            "uplink_bytes": res.uplink_bytes[-1],
+            "mean_n_active": float(np.mean(res.n_active)),
+            "aoi_mean": float(np.mean(res.aoi_mean)),
+            "aoi_peak": int(max(res.aoi_peak)),
+            "age_mean_final": float(res.age_mean[-1]),
+            "age_peak_final": int(res.age_peak[-1]),
+            "final_acc": res.acc[-1],
+        }
+        engine.close()
+    out["equal_uplink"] = (out["aoi"]["uplink_bytes"]
+                           == out["uniform"]["uplink_bytes"])
+    out["aoi_beats_uniform_peak_aoi"] = (out["aoi"]["aoi_peak"]
+                                         < out["uniform"]["aoi_peak"])
     return out
 
 
@@ -108,6 +155,16 @@ def main(fast: bool = True):
     rows.append(("recluster_hidden_scan", hid["recluster_hidden_s"] * 1e6,
                  f"hidden_frac={hid['hidden_fraction']:.3f};"
                  f"dbscan_s={hid['recluster_s']:.4f}"))
+
+    # participation plane (DESIGN.md §9): the AoI/uplink trade-off
+    out["participation"] = part = _participation(
+        shards, test, 16 if fast else 40)
+    rows.append(("participation_peak_aoi", 0.0,
+                 f"aoi={part['aoi']['aoi_peak']} "
+                 f"uniform={part['uniform']['aoi_peak']} "
+                 f"(m={part['m']}, equal_uplink={part['equal_uplink']}, "
+                 f"aoi_beats_uniform="
+                 f"{part['aoi_beats_uniform_peak_aoi']})"))
 
     save_json("BENCH_engine", out)
     rows.append(("engine_scan_speedup", 0.0, f"x{speedup:.2f}"))

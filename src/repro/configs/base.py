@@ -219,3 +219,12 @@ class RAgeKConfig:
     # exact rank, kernels.ops.threshold_topk_batch), 'sort' the full
     # lax.top_k — BIT-IDENTICAL outputs (tests/test_threshold_candidates)
     candidates: str = "threshold"
+    # participation plane (fl.schedule, DESIGN.md §9): which clients take
+    # part in a round. 'full' = everyone (paper; bit-identical to the
+    # pre-plane engine), 'uniform' = participation_m of N at random,
+    # 'aoi' = the participation_m highest-AoI clients (Javani & Wang),
+    # 'deadline' = timely-FL: clients slower than deadline_s simulated
+    # seconds drop out and arrive next round staleness-discounted
+    schedule: str = "full"
+    participation_m: int = 0         # 0 -> max(N // 4, 1) (uniform/aoi)
+    deadline_s: float = 0.0          # 0 -> 1.0 simulated s (deadline)

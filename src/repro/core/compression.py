@@ -64,18 +64,31 @@ def value_bytes_of(wire_dtype: str) -> int:
 
 def bytes_per_round(k: int, d: int, value_bytes: int | None = None,
                     index_bytes: int | None = None, dense: bool = False,
-                    wire_dtype: str | None = None) -> int:
+                    wire_dtype: str | None = None,
+                    m_active: int | None = None) -> int:
     """Uplink bytes for one client in one global round.
 
     Values are sized by ``wire_dtype`` (e.g. RAgeKConfig.wire_dtype;
     fp32 values unless overridden), indices by ceil(log2(d)/8) — a
     d-coordinate model needs only that many bytes per index, not a
     hard-coded 4. Explicit value_bytes / index_bytes win over both.
+
+    ``m_active`` is the participation plane's per-round participant
+    count (DESIGN.md §9): when given, the ROUND total for the m active
+    clients is returned — absent clients upload neither values nor the
+    top-r candidate report, so a partial round costs m/N of a full one.
+    None keeps the per-client accounting (back-compat).
     """
     if value_bytes is None:
         value_bytes = value_bytes_of(wire_dtype) if wire_dtype else 4
     if dense:
-        return d * value_bytes
-    if index_bytes is None:
-        index_bytes = bytes_per_index(d)
-    return k * (value_bytes + index_bytes)
+        per_client = d * value_bytes
+    else:
+        if index_bytes is None:
+            index_bytes = bytes_per_index(d)
+        per_client = k * (value_bytes + index_bytes)
+    if m_active is None:
+        return per_client
+    if m_active < 0:
+        raise ValueError(f"m_active must be >= 0, got {m_active}")
+    return m_active * per_client

@@ -210,13 +210,16 @@ class RAgeK:
     def select_segmented(self, G, cluster_age, cluster_of, *,
                          num_segments: int | None = None,
                          max_seg: int | None = None,
-                         disjoint: bool = True, impl: str = "jnp"):
+                         disjoint: bool = True, impl: str = "jnp",
+                         active=None):
         """Cluster-coordinated batched selection (engine PS path); see
-        :func:`segmented_rage_select`."""
+        :func:`segmented_rage_select`. ``active`` is the participation
+        plane's (N,) mask (DESIGN.md §9)."""
         return segmented_rage_select(
             G, cluster_age, cluster_of, r=self.r, k=self.k,
             num_segments=num_segments, max_seg=max_seg,
-            disjoint=disjoint, impl=impl, candidates=self.candidates)
+            disjoint=disjoint, impl=impl, candidates=self.candidates,
+            active=active)
 
 
 @dataclass(frozen=True)
@@ -270,16 +273,27 @@ class SegmentedSelection(NamedTuple):
     idx: jnp.ndarray
 
 
-def segment_pack(cluster_of: jnp.ndarray, num_segments: int, max_seg: int):
+def segment_pack(cluster_of: jnp.ndarray, num_segments: int, max_seg: int,
+                 active: jnp.ndarray | None = None):
     """Device-side cluster->segment packing: (N,) cluster ids -> (C, S)
     members matrix, client order preserved within each cluster (the
     tie-break/disjointness contract). Labels must be < num_segments and
     no cluster may exceed max_seg members (the engine recomputes both
     bounds from the host-side DBSCAN labels at every recluster; dense
     canonical labels always fit num_segments = N, max_seg = N).
+
+    ``active`` (participation plane, DESIGN.md §9) packs only the masked
+    clients: inactive ones are routed to the dropped sentinel segment, so
+    the member scan length is bounded by the max ACTIVE cluster size
+    (<= the scheduler's static m bound) and max_seg may be tightened
+    accordingly. active=None and an all-True mask pack identically.
     """
     n = cluster_of.shape[0]
     cl = cluster_of.astype(jnp.int32)
+    if active is not None:
+        # inactive clients sort last under the OOB label num_segments,
+        # and their scatter into the members matrix is dropped below
+        cl = jnp.where(active, cl, jnp.int32(num_segments))
     _, order = jax.lax.sort((cl, jnp.arange(n, dtype=jnp.int32)),
                             num_keys=1, is_stable=True)
     sorted_cl = cl[order]
@@ -363,7 +377,8 @@ def segmented_rage_select(G: jnp.ndarray, cluster_age: jnp.ndarray,
                           max_seg: int | None = None,
                           disjoint: bool = True, impl: str = "jnp",
                           cands: jnp.ndarray | None = None,
-                          candidates: str = "sort"):
+                          candidates: str = "sort",
+                          active: jnp.ndarray | None = None):
     """Paper Algorithm 1 steps 2-3 + eq. (2) in the segmented per-cluster
     formulation: the disjointness recursion runs only WITHIN each padded
     cluster (scan length = max_seg, not N) and clusters run in parallel
@@ -379,13 +394,24 @@ def segmented_rage_select(G: jnp.ndarray, cluster_age: jnp.ndarray,
     (idx (N, k) int32, new_cluster_age, SegmentedSelection) —
     bit-identical to the sequential all-clients scan
     (fl.engine.rage_select), rows >= num_segments untouched.
+
+    ``active`` is the participation plane's (N,) mask (DESIGN.md §9):
+    only active members are packed (max_seg may be tightened to the
+    scheduler's static m bound), select, and reset ages; INACTIVE
+    members still apply their eq.-2 "+1" — cluster ages keep growing
+    while a client is unheard from. The reference ordering for a
+    partial round is "inactive +1s first, then the active member scan":
+    only active members reset coordinates, so the inactive increments
+    commute and the disjointness/tie-break contract stays the
+    within-cluster ACTIVE client order. Inactive clients' idx rows
+    return the sentinel d ("no request"). active=None == all-True.
     """
     n, d = G.shape
     if num_segments is None:
         num_segments = n
     if max_seg is None:
         max_seg = n
-    members = segment_pack(cluster_of, num_segments, max_seg)
+    members = segment_pack(cluster_of, num_segments, max_seg, active=active)
     valid = members < n
     mclip = jnp.minimum(members, n - 1)
     if cands is None:
@@ -401,23 +427,34 @@ def segmented_rage_select(G: jnp.ndarray, cluster_age: jnp.ndarray,
         seg_idx = segmented_age_topk(seg_cand, seg_age, valid, k,
                                      disjoint=disjoint)
     # back to client layout: every live client sits in exactly one slot;
-    # the padded slots' sentinel row n is dropped
+    # the padded slots' sentinel row n is dropped. Inactive clients have
+    # no slot — their rows take the sentinel d ("no request").
     idx = jnp.zeros((n, k), jnp.int32).at[members.reshape(-1)].set(
         seg_idx.reshape(-1, k), mode="drop")
+    if active is not None:
+        idx = jnp.where(active[:, None], idx, jnp.int32(d))
 
     # eq. (2) per segment in CLOSED FORM instead of a member scan: the
     # sequential semantics (+1 per member, requested reset to 0, later
     # members' resets win) collapse to
-    #   requested j:   sz_c - 1 - last_pos(j)   (members after the last
-    #                                            requester each add 1)
-    #   unrequested j: row + sz_c
-    # because valid members occupy the positions 0..sz_c-1 contiguously.
+    #   requested j:   sz_c - 1 - last_pos(j)   (ACTIVE members after
+    #                                            the last requester)
+    #   unrequested j: row + tot_c              (every member's +1,
+    #                                            active or not)
+    # because active members occupy the pack positions 0..sz_c-1
+    # contiguously and inactive members never reset, so their +1s
+    # commute to the front (tot_c == sz_c under full participation).
     # last_pos is a scatter-max of member positions; padded slots
     # scatter to a dropped sentinel. The flattened (C*d,) lane is the
     # faster scatter but its indices only fit int32 while
     # num_segments * d < 2^31 — beyond that, fall back to the 2D form
     # (per-row indices < d, no overflow), which is bit-identical.
     sz = valid.sum(axis=1).astype(jnp.int32)
+    if active is None:
+        tot = sz
+    else:
+        tot = jnp.zeros((num_segments,), jnp.int32).at[
+            cluster_of.astype(jnp.int32)].add(1, mode="drop")
     pos = jnp.broadcast_to(
         jnp.arange(max_seg, dtype=jnp.int32)[None, :, None], seg_idx.shape)
     if num_segments * d < 2 ** 31:
@@ -435,7 +472,7 @@ def segmented_rage_select(G: jnp.ndarray, cluster_age: jnp.ndarray,
             jnp.arange(num_segments)[:, None, None], idx_m].max(
                 pos, mode="drop")
     new_rows = jnp.where(last >= 0, sz[:, None] - 1 - last,
-                         ca + sz[:, None])
+                         ca + tot[:, None])
     new_cluster_age = cluster_age.at[:num_segments].set(new_rows)
     seg_idx = jnp.where(valid[:, :, None], seg_idx, jnp.int32(d))
     return idx, new_cluster_age, SegmentedSelection(members, seg_idx)

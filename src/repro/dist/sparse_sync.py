@@ -170,6 +170,20 @@ def make_manual_sync(mesh, specs, shapes, *, method: str = "rage_k",
     requested indices — the merged-vector semantics of the paper's
     cluster age (§II) applied to data shards ('cafe' additionally counts
     the union into the cost lane).
+
+    Participation plane (DESIGN.md §9): ``sync(grads, ages,
+    active=mask)`` takes an (n_data,) bool mask over the flattened data
+    shards — inactive shards contribute NO payload to the gather
+    (sentinel indices, dropped), the union divides by the ACTIVE shard
+    count, and ages advance with the active union only (absent shards'
+    unrequested coordinates keep aging, eq. (2) with no reset).
+    ``active=None`` is the full synchronous exchange, bit-identical to
+    the pre-plane collective. stats: ``wire_bytes_per_shard`` is what an
+    UPLOADING shard sends (inactive shards send nothing);
+    ``wire_bytes_total = wire_bytes_per_shard * active_shards`` is the
+    round's true uplink — the number partial-participation accounting
+    must total, since the per-shard figure alone would overbill absent
+    shards.
     """
     data_axes = tuple(a for a in ("pod", "data") if a in mesh.shape)
     n_data = 1
@@ -207,45 +221,86 @@ def make_manual_sync(mesh, specs, shapes, *, method: str = "rage_k",
         specs, is_leaf=lambda x: isinstance(x, P))
     treedef = jax.tree_util.tree_structure(shapes)
 
-    def _exchange(*flat_args):
-        n = len(flat_args) // 2
-        g_leaves, age_leaves = flat_args[:n], flat_args[n:]
-        synced, new_ages = [], []
-        wire = 0
-        for g, a, (r_b, k_b) in zip(g_leaves, age_leaves, budgets):
-            flat = g.reshape(-1).astype(jnp.float32)
-            if method == "dense":
-                w = flat.astype(wire_dtype).astype(jnp.float32)
-                if data_axes:
-                    w = jax.lax.pmean(w, data_axes)
-                synced.append(w.reshape(g.shape).astype(g.dtype))
-                new_ages.append(a)
-                wire += flat.shape[0] * vb
-                continue
-            af = _flat_age(a, method)
-            idx, vals, _ = _select_bucket(
-                method, flat, af, r_b, k_b, lam=lam,
-                candidates=candidates)
-            vals = vals.astype(wire_dtype)
-            if data_axes:
-                idx = jax.lax.all_gather(idx, data_axes, tiled=True)
-                vals = jax.lax.all_gather(vals, data_axes, tiled=True)
-            dense = jnp.zeros_like(flat).at[idx].add(
-                vals.astype(jnp.float32) / n_data)
-            hit = jnp.zeros(flat.shape, bool).at[idx].set(True)
-            if method == "cafe":
-                # union semantics on the age lane; the union also counts
-                # into the cost lane (one upload of every union index)
-                new_a = jnp.stack([
-                    jnp.where(hit, 0, af[0] + 1),
-                    af[1] + hit.astype(jnp.int32)]).astype(jnp.int32)
+    def _make_exchange(masked: bool):
+        def _exchange(*flat_args):
+            if masked:
+                # (n_data,) replicated participation mask; this shard's
+                # flattened data index picks its own activity bit
+                active, flat_args = flat_args[0], flat_args[1:]
+                fidx = jnp.int32(0)
+                for ax in data_axes:
+                    fidx = fidx * mesh.shape[ax] + jax.lax.axis_index(ax)
+                my = active[fidx]
+                n_uploaders = active.sum().astype(jnp.int32)
+                n_act = jnp.maximum(n_uploaders, 1).astype(jnp.float32)
             else:
-                new_a = jnp.where(hit, 0, af + 1).astype(jnp.int32)
-            synced.append(dense.reshape(g.shape).astype(g.dtype))
-            new_ages.append(new_a.reshape(a.shape))
-            wire += min(k_b, int(flat.shape[0])) * (_INDEX_BYTES + vb)
-        stats = {"wire_bytes_per_shard": jnp.int32(wire)}
-        return tuple(synced) + tuple(new_ages) + (stats,)
+                my, n_act = None, n_data
+                n_uploaders = jnp.int32(n_data)
+            n = len(flat_args) // 2
+            g_leaves, age_leaves = flat_args[:n], flat_args[n:]
+            synced, new_ages = [], []
+            wire = 0
+            for g, a, (r_b, k_b) in zip(g_leaves, age_leaves, budgets):
+                flat = g.reshape(-1).astype(jnp.float32)
+                if method == "dense":
+                    w = flat.astype(wire_dtype).astype(jnp.float32)
+                    if my is not None:
+                        w = jnp.where(my, w, 0.0)
+                        if data_axes:
+                            w = jax.lax.psum(w, data_axes)
+                        w = w / n_act
+                    elif data_axes:
+                        w = jax.lax.pmean(w, data_axes)
+                    synced.append(w.reshape(g.shape).astype(g.dtype))
+                    new_ages.append(a)
+                    wire += flat.shape[0] * vb
+                    continue
+                af = _flat_age(a, method)
+                idx, vals, _ = _select_bucket(
+                    method, flat, af, r_b, k_b, lam=lam,
+                    candidates=candidates)
+                vals = vals.astype(wire_dtype)
+                if my is not None:
+                    # inactive shard: sentinel indices (dropped from the
+                    # union scatter AND the age hits), zero payload
+                    idx = jnp.where(my, idx, jnp.int32(flat.shape[0]))
+                    vals = jnp.where(my, vals,
+                                     jnp.zeros((), vals.dtype))
+                if data_axes:
+                    idx = jax.lax.all_gather(idx, data_axes, tiled=True)
+                    vals = jax.lax.all_gather(vals, data_axes, tiled=True)
+                dense = jnp.zeros_like(flat).at[idx].add(
+                    vals.astype(jnp.float32) / n_act, mode="drop")
+                hit = jnp.zeros(flat.shape, bool).at[idx].set(
+                    True, mode="drop")
+                if method == "cafe":
+                    # union semantics on the age lane; the union also
+                    # counts into the cost lane (one upload of every
+                    # union index)
+                    new_a = jnp.stack([
+                        jnp.where(hit, 0, af[0] + 1),
+                        af[1] + hit.astype(jnp.int32)]).astype(jnp.int32)
+                else:
+                    new_a = jnp.where(hit, 0, af + 1).astype(jnp.int32)
+                synced.append(dense.reshape(g.shape).astype(g.dtype))
+                new_ages.append(new_a.reshape(a.shape))
+                wire += min(k_b, int(flat.shape[0])) * (_INDEX_BYTES + vb)
+            # per-shard counts bytes an UPLOADING shard sends; the round
+            # total multiplies by the shards that actually uploaded
+            # (replicated, so the P() out_spec stays truthful under a
+            # participation mask where per-shard bytes would differ).
+            # wire is static, so the int32-overflow check is too: dense
+            # LM-scale payloads x many shards exceed 2^31 — go float32
+            # there instead of wrapping negative
+            if wire * n_data < 2 ** 31:
+                total = jnp.int32(wire) * n_uploaders
+            else:
+                total = jnp.float32(wire) * n_uploaders.astype(jnp.float32)
+            stats = {"wire_bytes_per_shard": jnp.int32(wire),
+                     "active_shards": n_uploaders,
+                     "wire_bytes_total": total}
+            return tuple(synced) + tuple(new_ages) + (stats,)
+        return _exchange
 
     if method == "cafe":
         # stacked (2, ...) [age; cost] leaves: the leading axis is
@@ -255,18 +310,35 @@ def make_manual_sync(mesh, specs, shapes, *, method: str = "rage_k",
         age_spec_leaves = list(spec_leaves)
     in_specs = tuple(spec_leaves) + tuple(age_spec_leaves)
     out_specs = (tuple(spec_leaves) + tuple(age_spec_leaves)
-                 + ({"wire_bytes_per_shard": P()},))
-    mapped = shard_map(_exchange, mesh=mesh, in_specs=in_specs,
-                       out_specs=out_specs, check_rep=False)
+                 + ({"wire_bytes_per_shard": P(), "active_shards": P(),
+                     "wire_bytes_total": P()},))
+    mapped = shard_map(_make_exchange(False), mesh=mesh,
+                       in_specs=in_specs, out_specs=out_specs,
+                       check_rep=False)
+    # participation-masked variant: the (n_data,) active mask rides
+    # replicated ahead of the leaves
+    mapped_act = shard_map(_make_exchange(True), mesh=mesh,
+                           in_specs=(P(None),) + in_specs,
+                           out_specs=out_specs, check_rep=False)
 
-    def sync(grads, ages):
+    def sync(grads, ages, active=None):
         g_leaves = jax.tree_util.tree_leaves(grads)
         age_leaves = jax.tree_util.tree_leaves(ages)
-        out = mapped(*g_leaves, *age_leaves)
+        if active is None:
+            out = mapped(*g_leaves, *age_leaves)
+        else:
+            active = jnp.asarray(active, bool)
+            if active.shape != (n_data,):
+                raise ValueError(
+                    f"active mask must have shape ({n_data},) — one bit "
+                    f"per flattened data shard — got {active.shape}")
+            out = mapped_act(active, *g_leaves, *age_leaves)
         n = len(g_leaves)
         synced = jax.tree_util.tree_unflatten(treedef, out[:n])
         new_ages = jax.tree_util.tree_unflatten(treedef, out[n:2 * n])
         return synced, new_ages, out[-1]
+
+    sync.n_data = n_data
 
     # ages are sharded exactly like grads (cafe: leading lane replicated)
     sync.age_specs = (jax.tree_util.tree_unflatten(

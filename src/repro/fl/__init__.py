@@ -2,6 +2,10 @@ from repro.fl.engine import (  # noqa: F401
     DeviceAgeState, FederatedEngine, FLResult, rage_select,
     rage_select_segmented,
 )
+from repro.fl.schedule import (  # noqa: F401
+    SCHEDULES, AoIBalanced, Deadline, Full, RoundPlan, SchedState,
+    Scheduler, UniformM, make_scheduler,
+)
 from repro.fl.simulation import run_fl  # noqa: F401
 from repro.fl.server import (  # noqa: F401
     GlobalServer, aggregate_sparse, aggregate_sparse_fused,

@@ -47,6 +47,16 @@ The rAge-k selection plane has two implementations (DESIGN.md §7):
 Both are bit-identical (tests/test_segmented_selection.py); the static
 packing bounds (live cluster count, max cluster size) come from the
 host-side DBSCAN labels at every recluster — no extra transfer.
+
+WHO takes part in a round is the participation plane's decision
+(``fl.schedule``, DESIGN.md §9): every round the engine asks its
+``Scheduler`` for a ``RoundPlan`` ((N,) active mask, per-client
+staleness, aggregation weights) and applies it uniformly across
+strategies — non-participants' local state holds, they contribute
+nothing, and their ages keep growing (eq. (2), no reset). The
+scheduler's state (PRNG key, device round counter, client AoI) threads
+through the scan carry; ``schedule='full'`` (default) is bit-identical
+to the pre-plane engine.
 """
 from __future__ import annotations
 
@@ -68,6 +78,7 @@ from repro.core.strategies import (CANDIDATE_IMPLS, client_candidates,
                                    make_strategy, segmented_rage_select)
 from repro.data.pipeline import DeviceShardStore
 from repro.fl import client as C
+from repro.fl.schedule import RoundPlan, SchedState, make_scheduler
 from repro.fl.server import aggregate_sparse, aggregate_sparse_fused
 from repro.models import paper_nets as P
 from repro.optim.optimizers import adam, sgd, apply_updates
@@ -102,6 +113,14 @@ class FLResult:
     cluster_labels: list = field(default_factory=list)
     heatmaps: dict = field(default_factory=dict)     # round -> (N,N)
     requested: list = field(default_factory=list)    # per round: (N,k)|None
+    # participation-plane metrics, one entry per ROUND (DESIGN.md §9):
+    # client-level AoI (rounds since the PS last heard from each client)
+    # and the coordinate-level cluster_age field (max/mean over live rows)
+    n_active: list = field(default_factory=list)     # participants
+    aoi_mean: list = field(default_factory=list)
+    aoi_peak: list = field(default_factory=list)
+    age_mean: list = field(default_factory=list)     # over cluster_age
+    age_peak: list = field(default_factory=list)     # max over cluster_age
     wall_s: float = 0.0
 
     def summary(self) -> dict:
@@ -110,6 +129,11 @@ class FLResult:
             "final_loss": self.loss[-1] if self.loss else float("nan"),
             "total_uplink_mb": (self.uplink_bytes[-1] / 2**20
                                 if self.uplink_bytes else 0.0),
+            "peak_aoi": max(self.aoi_peak) if self.aoi_peak else 0.0,
+            "mean_aoi": (float(np.mean(self.aoi_mean))
+                         if self.aoi_mean else 0.0),
+            "peak_coord_age": (max(self.age_peak)
+                               if self.age_peak else 0.0),
             "wall_s": self.wall_s,
         }
 
@@ -142,6 +166,16 @@ def _build_model(kind: str, key):
     raise ValueError(kind)
 
 
+def _where_clients(mask: jnp.ndarray, new, old):
+    """Per-client select over a stacked-client pytree: leaves are
+    (N, ...) arrays; take ``new`` where mask, keep ``old`` elsewhere.
+    An all-True mask returns ``new`` bitwise (the Full-plan no-op)."""
+    return jax.tree_util.tree_map(
+        lambda a, b: jnp.where(
+            mask.reshape(mask.shape + (1,) * (a.ndim - 1)), a, b),
+        new, old)
+
+
 # ---------------------------------------------------------------------------
 # device-side rAge-k selection (the PS control loop, on accelerator)
 # ---------------------------------------------------------------------------
@@ -149,7 +183,7 @@ def _build_model(kind: str, key):
 @partial(jax.jit, static_argnames=("r", "k", "disjoint", "candidates"))
 def rage_select(g: jnp.ndarray, age: DeviceAgeState, *, r: int, k: int,
                 disjoint: bool = True, cands=None,
-                candidates: str = "sort"):
+                candidates: str = "sort", active=None):
     """Algorithm 1 steps 2-3 + eq. (2), entirely on device.
 
     g: (N, d) client gradients. Clients are processed in order; within a
@@ -162,35 +196,55 @@ def rage_select(g: jnp.ndarray, age: DeviceAgeState, *, r: int, k: int,
     ``candidates`` picks the plane computing it here ('sort' |
     'threshold', bit-identical).
 
+    ``active`` is the participation plane's (N,) mask (DESIGN.md §9):
+    inactive clients request nothing (their idx rows return the
+    sentinel d), update neither freq nor the disjointness set, and
+    their eq.-2 "+1" applies with NO reset — ages keep growing while a
+    client is unheard from. Inactive +1s are order-independent (nothing
+    resets them), so they are applied up front and the member scan
+    touches only active clients' requests — the same semantics the
+    segmented plane's closed form implements. active=None == all-True
+    (bit-identical to the unmasked path).
+
     Returns (idx (N, k) int32, new DeviceAgeState).
     """
     n, d = g.shape
     if cands is None:
         cands = client_candidates(g, r, candidates)
+    if active is None:
+        active = jnp.ones((n,), bool)
 
     def sel_body(taken, inp):
-        cand, cl = inp
+        cand, cl, act = inp
         ages = age.cluster_age[cl, cand]
         if disjoint:
             ages = jnp.where(taken[cl, cand], jnp.int32(-1), ages)
         _, sel = jax.lax.top_k(ages, k)             # stable: |g| tie-break
         idx = cand[sel]
+        idx = jnp.where(act, idx, jnp.int32(d))     # inactive: no request
         if disjoint:
-            taken = taken.at[cl, idx].set(True)
+            taken = taken.at[cl, idx].set(True, mode="drop")
         return taken, idx
 
     taken0 = jnp.zeros((n, d), bool)
-    _, idx = jax.lax.scan(sel_body, taken0, (cands, age.cluster_of))
+    _, idx = jax.lax.scan(sel_body, taken0,
+                          (cands, age.cluster_of, active))
+
+    # inactive members' +1s first (they commute — no reset), then the
+    # active members' sequential +1-and-reset in client order
+    inact = jnp.zeros((n,), jnp.int32).at[age.cluster_of].add(
+        (~active).astype(jnp.int32))
 
     def age_body(ca, inp):
-        idx_i, cl = inp
-        row = ca[cl] + 1
-        row = row.at[idx_i].set(0)
-        return ca.at[cl].set(row), None
+        idx_i, cl, act = inp
+        row = ca[cl]
+        new_row = (row + 1).at[idx_i].set(0, mode="drop")
+        return ca.at[cl].set(jnp.where(act, new_row, row)), None
 
-    cluster_age, _ = jax.lax.scan(age_body, age.cluster_age,
-                                  (idx, age.cluster_of))
-    freq = age.freq.at[jnp.arange(n)[:, None], idx].add(1)
+    cluster_age, _ = jax.lax.scan(
+        age_body, age.cluster_age + inact[:, None],
+        (idx, age.cluster_of, active))
+    freq = age.freq.at[jnp.arange(n)[:, None], idx].add(1, mode="drop")
     return idx.astype(jnp.int32), DeviceAgeState(cluster_age, freq,
                                                  age.cluster_of)
 
@@ -203,7 +257,7 @@ def rage_select_segmented(g: jnp.ndarray, age: DeviceAgeState, *, r: int,
                           max_seg: int | None = None,
                           disjoint: bool = True, impl: str = "jnp",
                           cands=None, return_seg: bool = False,
-                          candidates: str = "sort"):
+                          candidates: str = "sort", active=None):
     """Segmented per-cluster formulation of :func:`rage_select` — same
     contract (idx (N, k) int32, new DeviceAgeState), BIT-IDENTICAL output
     (pinned by tests/test_segmented_selection.py), but the disjointness
@@ -216,14 +270,18 @@ def rage_select_segmented(g: jnp.ndarray, age: DeviceAgeState, *, r: int,
     ->host transfer, the labels were already on host). impl='pallas'
     routes the masked top-k through ``kernels.ops.segmented_age_topk``.
     ``return_seg=True`` appends the ``SegmentedSelection`` (the engine's
-    fused-aggregation hand-off).
+    fused-aggregation hand-off). ``active`` is the participation
+    plane's (N,) mask — only active clients are packed/select/reset;
+    inactive ones age with no reset and return sentinel-d idx rows
+    (DESIGN.md §9; max_seg may then be tightened to the scheduler's
+    static m bound).
     """
     n = g.shape[0]
     idx, new_ca, seg = segmented_rage_select(
         g, age.cluster_age, age.cluster_of, r=r, k=k,
         num_segments=num_segments, max_seg=max_seg, disjoint=disjoint,
-        impl=impl, cands=cands, candidates=candidates)
-    freq = age.freq.at[jnp.arange(n)[:, None], idx].add(1)
+        impl=impl, cands=cands, candidates=candidates, active=active)
+    freq = age.freq.at[jnp.arange(n)[:, None], idx].add(1, mode="drop")
     idx = idx.astype(jnp.int32)
     new_age = DeviceAgeState(new_ca, freq, age.cluster_of)
     if return_seg:
@@ -337,6 +395,12 @@ class FederatedEngine:
                               else "jnp")
         self._agg_impl = aggregate_impl
         self._sel_impl = "pallas" if aggregate_impl == "pallas" else "jnp"
+        # participation plane (fl.schedule, DESIGN.md §9): the scheduler
+        # decides WHO takes part each round; its state (PRNG key, device
+        # round counter, client AoI) threads through the scan carry
+        self._scheduler = make_scheduler(
+            hp.schedule, self.n, participation_m=hp.participation_m,
+            deadline_s=hp.deadline_s, seed=seed + 41)
         # segmented packing bounds: live cluster count / largest cluster.
         # STATIC (recompile keys) — recomputed from the host-side DBSCAN
         # labels at every recluster; singletons at t=0.
@@ -357,6 +421,7 @@ class FederatedEngine:
         self.age = DeviceAgeState.create(self.d, n)
         self.ef_mem = (jnp.zeros((n, self.d), jnp.float32) if ef else None)
         self._key = jax.random.PRNGKey(seed + 99)
+        self.sched = SchedState.create(n, seed + 23)
         self.round_idx = 0
 
         # --- device-resident data plane + per-client eval sets -------------
@@ -418,23 +483,40 @@ class FederatedEngine:
 
         ``data`` is the uploaded shard store; ``carry`` threads all
         mutable engine state (params, opt, ages, ef memory, PRNG keys,
-        sampler). num_segments/max_seg are the STATIC segmented-packing
-        bounds (rage_k + selection='segmented' only). The SAME traced
-        body backs both drivers, which is what makes run_scanned
-        bit-identical to repeated step()."""
+        sampler, scheduler state). num_segments/max_seg are the STATIC
+        segmented-packing bounds (rage_k + selection='segmented' only).
+        The SAME traced body backs both drivers, which is what makes
+        run_scanned bit-identical to repeated step().
+
+        The round opens by asking the scheduler for its RoundPlan
+        (DESIGN.md §9). Non-participants: local-phase state (optimizer,
+        BatchNorm, sampler) and ef memory HELD, no contribution to the
+        aggregate, ages advance with no reset, sentinel-d idx rows.
+        Stale arrivals (Deadline) contribute with discounted weight.
+        Under the Full plan every mask is all-True and every ``where``
+        below is a bitwise no-op — the pre-plane engine exactly.
+        """
         (g_params, g_opt_state, params_s, opt_s, state_s, age, ef_mem,
-         key, samp) = carry
+         key, samp, sched) = carry
         hp = self.hp
-        bx, by, samp = self._store.draw(data, samp, hp.H)
-        params_s, opt_s, state_s2, g, losses = self._local_phase(
+        plan: RoundPlan = self._scheduler.plan(sched, age)
+        act = plan.active
+        stale = plan.staleness > 0
+        bx, by, samp2 = self._store.draw(data, samp, hp.H)
+        params_s, opt_s2, state_s2, g, losses = self._local_phase(
             params_s, opt_s, state_s if state_s else {}, (bx, by))
+        # non-participants sit the round out: their local state holds
+        # and their data stream is not consumed
+        opt_s = _where_clients(act, opt_s2, opt_s)
+        samp = _where_clients(act, samp2, samp)
         if state_s:
-            state_s = state_s2
+            state_s = _where_clients(act, state_s2, state_s)
         if ef_mem is not None:
             g = g + ef_mem
 
         key, sub = jax.random.split(key)
         method = hp.method
+        n, d = self.n, self.d
         seg = None
         if method == "rage_k":
             if self._selection == "segmented":
@@ -442,18 +524,22 @@ class FederatedEngine:
                     g, age, r=hp.r, k=hp.k, num_segments=num_segments,
                     max_seg=max_seg, disjoint=hp.disjoint_in_cluster,
                     impl=self._sel_impl, return_seg=True,
-                    candidates=hp.candidates)
+                    candidates=hp.candidates, active=act)
             else:
                 idx, age = rage_select(g, age, r=hp.r, k=hp.k,
                                        disjoint=hp.disjoint_in_cluster,
-                                       candidates=hp.candidates)
+                                       candidates=hp.candidates,
+                                       active=act)
         elif method == "cafe":
             # per-client cost-and-age selection via the batched protocol;
             # cluster_age doubles as the per-client age rows (clusters
             # stay singleton — no recluster on this method) and freq is
-            # exactly the cumulative upload cost CAFe discounts by
+            # exactly the cumulative upload cost CAFe discounts by.
+            # Inactive clients: eq. (2) with no reset, no cost, no request
             idx, _, (ca, fr) = self._strategy.select_batch(
                 g, (age.cluster_age, age.freq))
+            ca = jnp.where(act[:, None], ca, age.cluster_age + 1)
+            fr = jnp.where(act[:, None], fr, age.freq)
             age = DeviceAgeState(ca, fr, age.cluster_of)
             idx = idx.astype(jnp.int32)
         elif method == "dense":
@@ -464,16 +550,33 @@ class FederatedEngine:
         else:                                     # top_k — deterministic
             idx, _, _ = self._strategy.select_batch(g, ())
 
+        if idx is not None:
+            # inactive clients request nothing — sentinel-d rows, in ONE
+            # place so no strategy branch can forget the mask (a no-op
+            # on the rage paths, which already masked internally)
+            idx = jnp.where(act[:, None], idx, jnp.int32(d))
+
         if idx is None:
             gw = g.astype(self._wire_dtype).astype(g.dtype)
+            gw = jnp.where(stale[:, None],
+                           gw * plan.weight[:, None].astype(g.dtype), gw)
+            gw = jnp.where(act[:, None], gw, jnp.zeros((), g.dtype))
             g_sum = gw.sum(0)
             sent = gw
         else:
-            vals = jnp.take_along_axis(g, idx, axis=1)
+            vals = jnp.take_along_axis(
+                g, jnp.minimum(idx, jnp.int32(d - 1)), axis=1)
             vals = vals.astype(self._wire_dtype).astype(g.dtype)
+            # stale arrivals land staleness-discounted; the fresh path
+            # stays bitwise untouched (weight applied only where stale)
+            vals = jnp.where(stale[:, None],
+                             vals * plan.weight[:, None].astype(g.dtype),
+                             vals)
+            vals = jnp.where(act[:, None], vals, jnp.zeros((), g.dtype))
             if seg is not None and self._agg_impl == "pallas":
                 # fused path: the SEGMENTED layout feeds the kernel
-                # directly — padded member slots carry the sentinel
+                # directly — padded member slots (and, under a partial
+                # plan, unpacked inactive clients) carry the sentinel
                 # index d, which the scatter kernel drops
                 mclip = jnp.minimum(seg.members, self.n - 1)
                 seg_vals = jnp.where(seg.members[..., None] < self.n,
@@ -485,20 +588,36 @@ class FederatedEngine:
             else:
                 g_sum = self._aggregate(idx, vals)
             sent = jax.vmap(
-                lambda i, v: jnp.zeros((self.d,), g.dtype).at[i].set(v)
+                lambda i, v: jnp.zeros((self.d,), g.dtype).at[i].set(
+                    v, mode="drop")
             )(idx, vals)
         if ef_mem is not None:
-            ef_mem = g - sent
+            ef_mem = jnp.where(act[:, None], g - sent, ef_mem)
 
         updates, g_opt_state = self._g_opt.update(
             self._unflatten(g_sum), g_opt_state, g_params)
         g_params = apply_updates(g_params, updates)
         params_s = C.broadcast_global(g_params, self.n)
 
-        metrics = {"losses": losses,
-                   "idx": idx if idx is not None else jnp.zeros((), jnp.int32)}
+        # AoI bookkeeping + participation metrics (scalars; the per-chunk
+        # pull stays O(N*k)). Client AoI: rounds since last heard from.
+        # Coordinate AoI: the cluster_age field over LIVE cluster rows.
+        aoi = jnp.where(act, jnp.int32(0), sched.aoi + 1)
+        sched = SchedState(key=sched.key, rnd=sched.rnd + 1, aoi=aoi)
+        live = jnp.zeros((n,), bool).at[age.cluster_of].set(True)
+        ca_live = jnp.where(live[:, None], age.cluster_age, 0)
+        metrics = {
+            "losses": losses,
+            "idx": idx if idx is not None else jnp.zeros((), jnp.int32),
+            "n_active": act.sum().astype(jnp.int32),
+            "aoi_mean": aoi.astype(jnp.float32).mean(),
+            "aoi_peak": aoi.max(),
+            "age_mean": (ca_live.astype(jnp.float32).sum()
+                         / (live.sum().astype(jnp.float32) * d)),
+            "age_peak": ca_live.max(),
+        }
         return (g_params, g_opt_state, params_s, opt_s, state_s, age,
-                ef_mem, key, samp), metrics
+                ef_mem, key, samp, sched), metrics
 
     def _eval_impl(self, params_s, state_s):
         accs = []
@@ -518,20 +637,28 @@ class FederatedEngine:
     def _seg_bounds(self):
         """Static packing bounds for the jitted round — (None, None) for
         every path that doesn't consume them, so e.g. selection='scan'
-        never recompiles when a recluster changes the cluster shape."""
+        never recompiles when a recluster changes the cluster shape.
+        The member-scan bound is additionally clipped to the scheduler's
+        static participation ceiling (at most m clients are active, so
+        no cluster packs more than m active members) — recomputed from
+        the PLAN's static bound, never from a device pull, so the
+        jit/chunk caches stay warm across rounds."""
         self._recluster_join()
         if self.hp.method == "rage_k" and self._selection == "segmented":
-            return self._num_seg, self._max_seg
+            return self._num_seg, min(self._max_seg,
+                                      self._scheduler.m_bound)
         return None, None
 
     def _pack(self):
         self._recluster_join()
         return (self.g_params, self.g_opt_state, self.params_s, self.opt_s,
-                self.state_s, self.age, self.ef_mem, self._key, self.samp)
+                self.state_s, self.age, self.ef_mem, self._key, self.samp,
+                self.sched)
 
     def _unpack(self, carry):
         (self.g_params, self.g_opt_state, self.params_s, self.opt_s,
-         self.state_s, self.age, self.ef_mem, self._key, self.samp) = carry
+         self.state_s, self.age, self.ef_mem, self._key, self.samp,
+         self.sched) = carry
 
     def _chunk(self, length: int):
         """Jitted `length`-round chunk: one lax.scan over `_round_impl`,
@@ -553,16 +680,44 @@ class FederatedEngine:
         ns, ms = self._seg_bounds()
         return partial(fn, num_segments=ns, max_seg=ms)
 
-    def _bookkeep(self):
-        """Per-round host accounting shared by both drivers."""
+    def _bookkeep(self, n_active: int | None = None):
+        """Per-round host accounting shared by both drivers. Uplink is
+        charged per PARTICIPANT (n_active; the candidate report rides
+        inside _per_client_bytes, so absent clients are not billed for
+        it either); None bills the full population (pre-plane ledger)."""
         self.round_idx += 1
-        self.cum_bytes += self._per_client_bytes * self.n
+        self.cum_bytes += self._per_client_bytes * (
+            self.n if n_active is None else int(n_active))
         if self.hp.method == "rage_k" and self.round_idx % self.hp.M == 0:
             self._recluster()
 
+    @staticmethod
+    def _round_row(metrics, j=None) -> dict:
+        """Host floats of one round's participation metrics ((T,)-stacked
+        under the scan driver; scalar under step)."""
+        pick = (lambda v: v[j]) if j is not None else (lambda v: v)
+        return {"n_active": int(pick(metrics["n_active"])),
+                "aoi_mean": float(pick(metrics["aoi_mean"])),
+                "aoi_peak": int(pick(metrics["aoi_peak"])),
+                "age_mean": float(pick(metrics["age_mean"])),
+                "age_peak": int(pick(metrics["age_peak"]))}
+
+    def _track(self, res: FLResult, row: dict, requested) -> None:
+        """Append one round's participation metrics + requested indices
+        (the per-ROUND columns of FLResult, DESIGN.md §9)."""
+        res.requested.append(requested)
+        res.n_active.append(row["n_active"])
+        res.aoi_mean.append(row["aoi_mean"])
+        res.aoi_peak.append(row["aoi_peak"])
+        res.age_mean.append(row["age_mean"])
+        res.age_peak.append(row["age_peak"])
+
     def step(self) -> dict:
         """Advance one global round. Returns {"losses": (N,), "idx":
-        (N, k)|None} — the only per-round device->host traffic."""
+        (N, k)|None, "n_active", "aoi_mean", "aoi_peak", "age_mean",
+        "age_peak"} — the only per-round device->host traffic (O(N*k)
+        plus five scalars). Inactive clients' idx rows hold the
+        sentinel d ("no request")."""
         t0 = time.perf_counter()
         ns, ms = self._seg_bounds()
         carry, metrics = self._round(self._data, self._pack(),
@@ -570,10 +725,12 @@ class FederatedEngine:
         jax.block_until_ready(metrics)
         self.device_s += time.perf_counter() - t0
         self._unpack(carry)
-        self._bookkeep()
-        idx = (np.asarray(metrics["idx"])
-               if self.hp.method != "dense" else None)
-        return {"losses": np.asarray(metrics["losses"]), "idx": idx}
+        out = self._round_row(metrics)
+        self._bookkeep(out["n_active"])
+        out["losses"] = np.asarray(metrics["losses"])
+        out["idx"] = (np.asarray(metrics["idx"])
+                      if self.hp.method != "dense" else None)
+        return out
 
     def _recluster_submit(self):
         """Kick the every-M host DBSCAN onto a worker thread at a chunk
@@ -664,6 +821,16 @@ class FederatedEngine:
         self._recluster_join()
         return np.asarray(self.age.cluster_of).astype(np.int64)
 
+    @property
+    def client_aoi(self) -> np.ndarray:
+        """(N,) rounds since the PS last heard from each client — the
+        participation plane's client-level AoI (DESIGN.md §9)."""
+        return np.asarray(self.sched.aoi).astype(np.int64)
+
+    @property
+    def scheduler(self):
+        return self._scheduler
+
     def eval_acc(self) -> float:
         t0 = time.perf_counter()
         accs = self._eval(self.params_s, self.state_s)
@@ -686,10 +853,12 @@ class FederatedEngine:
             res.uplink_bytes.append(self.cum_bytes)
             res.cluster_labels.append(self.cluster_of)
             if verbose:
+                aoi = (f" aoi={res.aoi_mean[-1]:.1f}/{res.aoi_peak[-1]}"
+                       if res.aoi_peak else "")
                 print(f"[{self.hp.method}] round {t:4d} "
                       f"loss={losses.mean():.4f} "
                       f"acc={acc:.4f} "
-                      f"upl={self.cum_bytes/2**20:.2f}MB")
+                      f"upl={self.cum_bytes/2**20:.2f}MB{aoi}")
         if t in heatmap_at:
             res.heatmaps[t] = connectivity_matrix(np.asarray(self.age.freq))
 
@@ -700,7 +869,7 @@ class FederatedEngine:
         end = self.round_idx + rounds
         while self.round_idx < end:
             metrics = self.step()
-            res.requested.append(metrics["idx"])
+            self._track(res, metrics, metrics["idx"])
             self._record(res, metrics["losses"], end=end,
                          eval_every=eval_every, heatmap_at=heatmap_at,
                          verbose=verbose)
@@ -745,13 +914,15 @@ class FederatedEngine:
             if (self.hp.method == "rage_k"
                     and (self.round_idx + T) % self.hp.M == 0):
                 self._recluster_submit()
-            # the ONE per-chunk host pull: (T, N) losses, (T, N, k) indices
-            losses = np.asarray(metrics["losses"])
-            idx = (np.asarray(metrics["idx"])
-                   if self.hp.method != "dense" else None)
+            # the ONE per-chunk host pull: (T, N) losses, (T, N, k)
+            # indices, (T,)-stacked participation scalars
+            metrics = {k: np.asarray(v) for k, v in metrics.items()}
+            losses = metrics["losses"]
+            idx = metrics["idx"] if self.hp.method != "dense" else None
             for j in range(T):
-                self._bookkeep()
-                res.requested.append(idx[j] if idx is not None else None)
+                row = self._round_row(metrics, j)
+                self._bookkeep(row["n_active"])
+                self._track(res, row, idx[j] if idx is not None else None)
             self._record(res, losses[-1], end=end, eval_every=eval_every,
                          heatmap_at=heatmap_at, verbose=verbose)
         res.wall_s = time.time() - t0

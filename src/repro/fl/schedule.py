@@ -1,0 +1,270 @@
+"""Participation plane — WHO takes part in a global round (DESIGN.md §9).
+
+The engine's round body is scheduler-agnostic: every round it asks its
+``Scheduler`` for a :class:`RoundPlan` (an ``(N,)`` active mask plus
+per-client staleness and aggregation weights, all device arrays) and
+applies the plan uniformly — non-participants skip the local phase
+(their optimizer/BatchNorm/sampler state and error-feedback memory are
+held, their data stream is not consumed), contribute nothing to the
+aggregate, and their cluster ages keep growing (eq. (2) with no reset).
+A new availability/straggler/async scenario is a new Scheduler, not an
+engine fork.
+
+The protocol is the jit-able form of ``plan(round, age_state, key)``:
+the round counter, the scheduler PRNG key and the client-level AoI
+vector thread through the scan carry as a :class:`SchedState`, so a
+``lax.scan`` chunk plans every round on device with no host input::
+
+    plan = scheduler.plan(sched_state, age_state)   # -> RoundPlan
+
+Schedulers must be DETERMINISTIC given ``(state.key, state.rnd)`` —
+:class:`Deadline` exploits this to recompute round ``t-1``'s stragglers
+in O(1) (fold_in of the carried key) instead of buffering them.
+
+Four implementations:
+
+* :class:`Full`        — everyone, every round. Bit-identical to the
+  pre-plane engine (the golden tests pin it against the host PS).
+* :class:`UniformM`    — m of N uniformly at random per round (the
+  classic partial-participation baseline).
+* :class:`AoIBalanced` — the m clients the PS has not heard from for
+  longest (peak-age-minimizing scheduling, Javani & Wang; ties resolve
+  to the lowest client id via stable top_k). Deterministic.
+* :class:`Deadline`    — timely-FL: per-client simulated compute+uplink
+  time against a round deadline; clients that miss it drop out and
+  their update arrives NEXT round with staleness-discounted weight.
+
+Client-level AoI (``SchedState.aoi``: rounds since the PS last heard
+from each client) is maintained by the ENGINE for every scheduler —
+it is the metric participation experiments plot (``FLResult.aoi_peak``)
+and the score :class:`AoIBalanced` schedules by.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, NamedTuple, Protocol, runtime_checkable
+
+import jax
+import jax.numpy as jnp
+
+
+SCHEDULES = ("full", "uniform", "aoi", "deadline")
+
+
+class RoundPlan(NamedTuple):
+    """One round's participation decision (device arrays + static bound).
+
+    active:    (N,) bool  — clients taking part in THIS round's upload.
+    staleness: (N,) int32 — rounds late each active update is (0 = fresh;
+               Deadline marks last round's stragglers 1). Non-active
+               entries are 0.
+    weight:    (N,) float32 — aggregation weight; 1.0 for fresh clients,
+               the staleness discount for late arrivals. Applied only
+               where ``staleness > 0`` so the fresh path stays bitwise
+               untouched.
+    m:         static Python int — upper bound on ``active.sum()``. The
+               engine derives the segmented packing bound (max active
+               members per cluster) and the uplink byte ceiling from it
+               WITHOUT a device pull, which is what keeps the jit/chunk
+               caches warm across rounds.
+    """
+
+    active: jnp.ndarray
+    staleness: jnp.ndarray
+    weight: jnp.ndarray
+    m: int
+
+
+class SchedState(NamedTuple):
+    """Scheduler state threaded through the jitted round / scan carry.
+
+    key: (2,) uint32 — the scheduler PRNG key. CONSTANT across rounds;
+         per-round randomness is ``fold_in(key, rnd)`` so round t-1's
+         draw is recomputable at round t (Deadline's staleness needs it).
+    rnd: () int32    — device round counter (the scan driver cannot read
+         the host ``round_idx`` mid-chunk).
+    aoi: (N,) int32  — rounds since each client last participated;
+         engine-updated from the plan (0 where active, +1 elsewhere).
+    """
+
+    key: jnp.ndarray
+    rnd: jnp.ndarray
+    aoi: jnp.ndarray
+
+    @classmethod
+    def create(cls, n: int, seed: int) -> "SchedState":
+        return cls(key=jax.random.PRNGKey(seed),
+                   rnd=jnp.int32(0),
+                   aoi=jnp.zeros((n,), jnp.int32))
+
+
+def _mask_of(n: int, sel: jnp.ndarray) -> jnp.ndarray:
+    return jnp.zeros((n,), bool).at[sel].set(True)
+
+
+@runtime_checkable
+class Scheduler(Protocol):
+    """plan(state, age_state) -> RoundPlan; pure and jit-able.
+
+    ``age_state`` is the engine's ``DeviceAgeState`` (or None from
+    engine-less callers) — coordinate-age-aware schedulers may read it;
+    the built-ins schedule on client-level AoI / simulated time only.
+    ``m_bound`` is the static per-round participation ceiling the engine
+    plans memory/bytes around (N when the scheduler cannot bound it).
+    """
+
+    name: str
+    n: int
+
+    @property
+    def m_bound(self) -> int: ...
+
+    def plan(self, state: SchedState, age_state: Any = None) -> RoundPlan: ...
+
+
+@dataclass(frozen=True)
+class Full:
+    """Synchronous full participation — the pre-plane engine, exactly."""
+
+    n: int
+    name: str = "full"
+
+    @property
+    def m_bound(self) -> int:
+        return self.n
+
+    def plan(self, state: SchedState, age_state: Any = None) -> RoundPlan:
+        return RoundPlan(active=jnp.ones((self.n,), bool),
+                         staleness=jnp.zeros((self.n,), jnp.int32),
+                         weight=jnp.ones((self.n,), jnp.float32),
+                         m=self.n)
+
+
+@dataclass(frozen=True)
+class UniformM:
+    """m of N clients uniformly at random, resampled every round."""
+
+    n: int
+    m: int
+    name: str = "uniform"
+
+    def __post_init__(self):
+        if not 1 <= self.m <= self.n:
+            raise ValueError(
+                f"UniformM needs 1 <= m <= N, got m={self.m}, N={self.n}")
+
+    @property
+    def m_bound(self) -> int:
+        return self.m
+
+    def plan(self, state: SchedState, age_state: Any = None) -> RoundPlan:
+        sub = jax.random.fold_in(state.key, state.rnd)
+        perm = jax.random.permutation(sub, self.n)
+        return RoundPlan(active=_mask_of(self.n, perm[:self.m]),
+                         staleness=jnp.zeros((self.n,), jnp.int32),
+                         weight=jnp.ones((self.n,), jnp.float32),
+                         m=self.m)
+
+
+@dataclass(frozen=True)
+class AoIBalanced:
+    """Schedule the m clients with the highest AoI (longest since last
+    heard from) — Javani & Wang's peak-age-balancing policy. ``top_k``
+    over the carried AoI vector is stable, so ties resolve toward the
+    lowest client id and the policy degenerates to round-robin under
+    symmetric starts: peak AoI is bounded by ~ceil(N/m) instead of the
+    O(log N / log(N/(N-m))) tail of uniform sampling."""
+
+    n: int
+    m: int
+    name: str = "aoi"
+
+    def __post_init__(self):
+        if not 1 <= self.m <= self.n:
+            raise ValueError(
+                f"AoIBalanced needs 1 <= m <= N, got m={self.m}, N={self.n}")
+
+    @property
+    def m_bound(self) -> int:
+        return self.m
+
+    def plan(self, state: SchedState, age_state: Any = None) -> RoundPlan:
+        _, sel = jax.lax.top_k(state.aoi, self.m)
+        return RoundPlan(active=_mask_of(self.n, sel),
+                         staleness=jnp.zeros((self.n,), jnp.int32),
+                         weight=jnp.ones((self.n,), jnp.float32),
+                         m=self.m)
+
+
+@dataclass(frozen=True)
+class Deadline:
+    """Timely-FL deadline rounds (Buyukates & Ulukus).
+
+    Each client's round time is simulated as a fixed per-client
+    compute+uplink base (lognormal heterogeneity, drawn once from
+    ``seed``) times per-round lognormal noise (``fold_in(key, rnd)``).
+    Clients finishing within ``deadline_s`` upload fresh (weight 1).
+    Clients that miss it drop out of the current aggregate; their update
+    lands NEXT round with staleness 1 and weight ``discount`` — round
+    t recomputes round t-1's stragglers from the carried key instead of
+    buffering gradients. A client that is late at t-1 AND on time at t
+    contributes once, fresh (the fresh update supersedes the stale one).
+    """
+
+    n: int
+    deadline_s: float
+    hetero: float = 0.5        # lognormal sigma of per-client base times
+    jitter: float = 0.25       # lognormal sigma of per-round noise
+    discount: float = 0.5      # weight of a one-round-stale arrival
+    seed: int = 0
+    name: str = "deadline"
+    base_s: jnp.ndarray = field(init=False, repr=False, compare=False)
+
+    def __post_init__(self):
+        if self.deadline_s <= 0:
+            raise ValueError(f"Deadline needs deadline_s > 0, got "
+                             f"{self.deadline_s}")
+        key = jax.random.PRNGKey(self.seed)
+        base = jnp.exp(self.hetero * jax.random.normal(key, (self.n,)))
+        object.__setattr__(self, "base_s", base)
+
+    @property
+    def m_bound(self) -> int:
+        return self.n            # every client may participate in a round
+
+    def _late(self, key, rnd) -> jnp.ndarray:
+        noise = jnp.exp(self.jitter * jax.random.normal(
+            jax.random.fold_in(key, rnd), (self.n,)))
+        return self.base_s * noise > self.deadline_s
+
+    def plan(self, state: SchedState, age_state: Any = None) -> RoundPlan:
+        fresh = ~self._late(state.key, state.rnd)
+        late_prev = jnp.where(state.rnd > 0,
+                              self._late(state.key, state.rnd - 1), False)
+        stale = late_prev & ~fresh
+        return RoundPlan(
+            active=fresh | stale,
+            staleness=stale.astype(jnp.int32),
+            weight=jnp.where(stale, jnp.float32(self.discount),
+                             jnp.float32(1.0)),
+            m=self.n)
+
+
+def make_scheduler(schedule: str, n: int, *, participation_m: int = 0,
+                   deadline_s: float = 0.0, seed: int = 0) -> Scheduler:
+    """Config-string factory ('full' | 'uniform' | 'aoi' | 'deadline').
+
+    ``participation_m`` (uniform/aoi; 0 -> max(N // 4, 1)) and
+    ``deadline_s`` (deadline; 0 -> 1.0, roughly the median simulated
+    client round time) mirror ``RAgeKConfig.participation_m`` /
+    ``.deadline_s``."""
+    if schedule not in SCHEDULES:
+        raise ValueError(
+            f"schedule must be one of {SCHEDULES}, got {schedule!r}")
+    if schedule == "full":
+        return Full(n)
+    if schedule == "uniform":
+        return UniformM(n, participation_m or max(n // 4, 1))
+    if schedule == "aoi":
+        return AoIBalanced(n, participation_m or max(n // 4, 1))
+    return Deadline(n, deadline_s or 1.0, seed=seed)

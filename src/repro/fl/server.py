@@ -17,34 +17,51 @@ def aggregate_sparse(idx: jnp.ndarray, vals: jnp.ndarray, d: int):
     """idx/vals: (N, k) per-client sparse contributions -> dense sum (d,).
 
     The PS aggregation is a straight SUM (paper: g~t = sum_i g~_i^t).
+    Out-of-range indices (the participation plane's sentinel d rows for
+    non-participants, DESIGN.md §9) are dropped.
     """
     return jnp.zeros((d,), jnp.float32).at[idx.reshape(-1)].add(
-        vals.reshape(-1).astype(jnp.float32))
+        vals.reshape(-1).astype(jnp.float32), mode="drop")
 
 
 def aggregate_sparse_fused(idx: jnp.ndarray, vals: jnp.ndarray,
-                           age: jnp.ndarray, *, impl: str = "auto"):
+                           age: jnp.ndarray, *, impl: str = "auto",
+                           mask: jnp.ndarray | None = None):
     """Fused scatter-add + hit-based eq. (2) age update.
 
     idx/vals: (N, k), flat (NK,), or the engine's SEGMENTED selection
     layout (C, max_sz, k) — any shape flattens; out-of-range indices
-    (idx >= d, the segmented layout's padded member slots) are DROPPED,
+    (idx >= d, the segmented layout's padded member slots and the
+    participation plane's inactive-client sentinel rows) are DROPPED,
     so selection output feeds aggregation without re-gathering into a
     per-client layout first. age: (d,) int32. Returns (dense (d,) f32,
     new_age) with new_age = 0 where any client requested the index,
     age+1 elsewhere.
+
+    ``mask`` is the participation plane's per-ROW active mask
+    (DESIGN.md §9), broadcast over idx's leading axis: masked-out rows
+    contribute neither to the dense sum nor to the age hits — the
+    sentinel-free way to exclude non-participants whose idx entries are
+    in range. mask=None and an all-True mask aggregate identically.
 
     impl: 'pallas' routes through the one-hot-matmul TPU kernel
     (``kernels.sparse_aggregate``, interpret-mode on CPU), 'jnp' is the
     XLA scatter fallback, 'auto' picks pallas only on a real TPU backend
     (interpret mode is Python-speed — wrong default for CPU tests).
     """
+    d = age.shape[0]
+    if mask is not None:
+        # route masked rows to the dropped sentinel d; values zeroed so
+        # any OOB-clipping consumer also sees a null contribution
+        shape = (idx.shape[0],) + (1,) * (idx.ndim - 1)
+        m = mask.reshape(shape)
+        idx = jnp.where(m, idx, jnp.int32(d))
+        vals = jnp.where(m, vals, jnp.zeros((), vals.dtype))
     use_pallas = impl == "pallas" or (
         impl == "auto" and jax.default_backend() == "tpu")
     if use_pallas:
         from repro.kernels import ops
         return ops.sparse_aggregate(idx.reshape(-1), vals.reshape(-1), age)
-    d = age.shape[0]
     fi = idx.reshape(-1)
     dense = jnp.zeros((d,), jnp.float32).at[fi].add(
         vals.reshape(-1).astype(jnp.float32), mode="drop")

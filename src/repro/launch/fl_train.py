@@ -64,6 +64,21 @@ def main():
                          "in parallel (default); 'scan' is the "
                          "sequential all-clients reference "
                          "(bit-identical, for A/B debugging)")
+    ap.add_argument("--schedule", default="full",
+                    choices=("full", "uniform", "aoi", "deadline"),
+                    help="participation plane (DESIGN.md §9): 'full' = "
+                         "every client every round (paper), 'uniform' = "
+                         "m of N at random, 'aoi' = the m "
+                         "longest-unheard clients (peak-age balancing), "
+                         "'deadline' = timely-FL straggler dropout with "
+                         "staleness-discounted next-round arrivals")
+    ap.add_argument("--participation-m", type=int, default=0,
+                    help="participants per round for --schedule "
+                         "uniform/aoi (0 -> max(N // 4, 1))")
+    ap.add_argument("--deadline-s", type=float, default=0.0,
+                    help="round deadline in simulated seconds for "
+                         "--schedule deadline (0 -> 1.0, ~the median "
+                         "simulated client round time)")
     args = ap.parse_args()
 
     if args.dataset == "mnist":
@@ -93,7 +108,9 @@ def main():
     if args.batch:
         defaults["batch_size"] = args.batch
     hp = RAgeKConfig(method=args.method, cafe_lam=args.cafe_lam,
-                     candidates=args.candidates, **defaults)
+                     candidates=args.candidates, schedule=args.schedule,
+                     participation_m=args.participation_m,
+                     deadline_s=args.deadline_s, **defaults)
 
     engine = FederatedEngine(kind, shards, test, hp, seed=args.seed,
                              ef=args.ef, aggregate_impl=args.aggregate,
@@ -107,7 +124,13 @@ def main():
         with open(args.out, "w") as f:
             json.dump({"rounds": res.rounds, "acc": res.acc,
                        "loss": res.loss, "uplink": res.uplink_bytes,
-                       "clusters": res.cluster_labels[-1].tolist()},
+                       "clusters": res.cluster_labels[-1].tolist(),
+                       "schedule": args.schedule,
+                       "n_active": res.n_active,
+                       "aoi_mean": res.aoi_mean,
+                       "aoi_peak": res.aoi_peak,
+                       "age_mean": res.age_mean,
+                       "age_peak": res.age_peak},
                       f, indent=1)
 
 

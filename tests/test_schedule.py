@@ -1,0 +1,438 @@
+"""Participation-plane tests (fl.schedule + engine integration,
+DESIGN.md §9).
+
+1. RoundPlan invariants (seeded + hypothesis where installed): mask
+   cardinality == m for UniformM/AoIBalanced, determinism under a fixed
+   (key, round), Deadline's staleness/weight discipline.
+2. Full plan == pre-plane engine: an engine with the default 'full'
+   schedule and one with 'uniform' at m = N (which activates every
+   client) are BIT-IDENTICAL for all five strategies across a recluster
+   boundary, under both the step and scan drivers. (The pre-refactor
+   reference itself is pinned by tests/test_engine_golden.py: the
+   host-PS golden and run_fl equality both run the default Full plan.)
+3. Partial rounds: step() == run_scanned(), segmented == sequential
+   selection plane, and the masked eq.-2 semantics — absent clients'
+   cluster ages keep growing with NO reset, their idx rows hold the
+   sentinel d, their local/optimizer/sampler state is untouched.
+4. The masked collective: dist.sparse_sync.make_manual_sync gathers
+   only active shards (inactive shard => zero update + pure aging).
+5. AoI accounting: FLResult per-round n_active/aoi columns agree with
+   a host-side replay of the participation masks.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import RAgeKConfig
+from repro.data.federated import paper_mnist_split
+from repro.data.synthetic import mnist_like
+from repro.fl import FederatedEngine
+from repro.fl.engine import DeviceAgeState, rage_select, rage_select_segmented
+from repro.fl.schedule import (AoIBalanced, Deadline, Full, SchedState,
+                               UniformM, make_scheduler)
+from repro.fl.server import aggregate_sparse_fused
+
+METHODS = ("rage_k", "rtop_k", "top_k", "random_k", "dense")
+
+HP = dict(r=30, k=6, H=2, M=3, lr=2e-3, batch_size=16)
+ROUNDS = 4  # crosses the round-3 recluster boundary
+
+
+@pytest.fixture(scope="module")
+def mnist_setup():
+    (xtr, ytr), test = mnist_like(n_train=1200, n_test=400, seed=0)
+    return paper_mnist_split(xtr, ytr, seed=0), test
+
+
+# ---------------------------------------------------------------------------
+# RoundPlan invariants
+# ---------------------------------------------------------------------------
+
+def _state(n, seed=0, rnd=0, aoi=None):
+    st = SchedState.create(n, seed)
+    return SchedState(key=st.key, rnd=jnp.int32(rnd),
+                      aoi=st.aoi if aoi is None else jnp.asarray(
+                          aoi, jnp.int32))
+
+
+def test_full_plan_activates_everyone():
+    plan = Full(7).plan(_state(7))
+    assert int(plan.active.sum()) == 7 and plan.m == 7
+    assert int(plan.staleness.max()) == 0
+    np.testing.assert_array_equal(np.asarray(plan.weight), 1.0)
+
+
+@pytest.mark.parametrize("seed,rnd,n,m", [(0, 0, 10, 3), (1, 5, 16, 8),
+                                          (7, 2, 9, 1), (3, 11, 12, 12)])
+def test_uniform_cardinality_and_determinism(seed, rnd, n, m):
+    sched = UniformM(n, m)
+    a = sched.plan(_state(n, seed, rnd))
+    b = sched.plan(_state(n, seed, rnd))
+    assert int(a.active.sum()) == m == a.m
+    np.testing.assert_array_equal(np.asarray(a.active),
+                                  np.asarray(b.active))
+    # a different key decorrelates (statistically; fixed seeds checked)
+    c = sched.plan(_state(n, seed + 100, rnd))
+    assert int(c.active.sum()) == m
+
+
+def test_aoi_balanced_schedules_highest_aoi():
+    aoi = [3, 0, 9, 1, 9, 2]
+    plan = AoIBalanced(6, 2).plan(_state(6, aoi=aoi))
+    # the two AoI-9 clients; stable top_k resolves ties to lowest id
+    np.testing.assert_array_equal(np.asarray(plan.active),
+                                  [False, False, True, False, True, False])
+    assert int(plan.active.sum()) == 2
+
+
+def test_aoi_balanced_round_robin_bound():
+    """Under AoI balancing every client is served at least every
+    ceil(N/m) rounds — the peak-age guarantee uniform sampling lacks."""
+    n, m, rounds = 11, 3, 30
+    sched = AoIBalanced(n, m)
+    st = _state(n)
+    peak = 0
+    for _ in range(rounds):
+        plan = sched.plan(st)
+        assert int(plan.active.sum()) == m
+        aoi = jnp.where(plan.active, 0, st.aoi + 1)
+        st = SchedState(key=st.key, rnd=st.rnd + 1, aoi=aoi)
+        peak = max(peak, int(aoi.max()))
+    assert peak <= -(-n // m)  # ceil(N/m)
+
+
+def test_deadline_staleness_discipline():
+    sched = Deadline(12, deadline_s=1.0, seed=5)
+    st0 = _state(12, seed=2, rnd=0)
+    a0 = sched.plan(st0)
+    # round 0 has no previous stragglers: every participant is fresh
+    assert int(a0.staleness.max()) == 0
+    np.testing.assert_array_equal(np.asarray(a0.weight), 1.0)
+    late0 = ~np.asarray(a0.active)
+    st1 = _state(12, seed=2, rnd=1)
+    a1 = sched.plan(st1)
+    act1, stale1 = np.asarray(a1.active), np.asarray(a1.staleness)
+    w1 = np.asarray(a1.weight)
+    # last round's stragglers all arrive this round (fresh or stale)
+    assert act1[late0].all()
+    # staleness only on non-fresh arrivals; weight discounted exactly there
+    assert (stale1[~late0 & act1] == 0).all()
+    np.testing.assert_array_equal(w1[stale1 == 0], 1.0)
+    if (stale1 == 1).any():
+        np.testing.assert_allclose(w1[stale1 == 1], sched.discount)
+    # deterministic replay
+    b1 = sched.plan(st1)
+    np.testing.assert_array_equal(act1, np.asarray(b1.active))
+
+
+def test_make_scheduler_validation():
+    with pytest.raises(ValueError, match="schedule"):
+        make_scheduler("sometimes", 10)
+    with pytest.raises(ValueError, match="1 <= m <= N"):
+        UniformM(4, 5)
+    with pytest.raises(ValueError, match="deadline_s"):
+        Deadline(4, deadline_s=0.0)
+    # config default m: max(N // 4, 1)
+    assert make_scheduler("uniform", 10).m_bound == 2
+    assert make_scheduler("aoi", 3).m_bound == 1
+    # the engine validates at construction, before any data upload
+    with pytest.raises(ValueError, match="schedule"):
+        FederatedEngine("mlp", [], (np.zeros((0, 784)), np.zeros(0)),
+                        RAgeKConfig(schedule="sometimes"))
+
+
+# ---------------------------------------------------------------------------
+# Full plan == pre-plane engine (bit-identical golden A/B)
+# ---------------------------------------------------------------------------
+
+def _assert_same_run(ea, ra, eb, rb, method):
+    np.testing.assert_allclose(ra.loss, rb.loss, rtol=0, atol=0)
+    np.testing.assert_allclose(ra.acc, rb.acc, rtol=0, atol=0)
+    assert ra.uplink_bytes == rb.uplink_bytes
+    assert ra.n_active == rb.n_active
+    assert ra.aoi_peak == rb.aoi_peak
+    assert ra.aoi_mean == rb.aoi_mean
+    assert ra.age_peak == rb.age_peak
+    for ia, ib in zip(ra.requested, rb.requested):
+        if method == "dense":
+            assert ia is None and ib is None
+        else:
+            np.testing.assert_array_equal(ia, ib)
+    for pa, pb in zip(jax.tree_util.tree_leaves(ea.g_params),
+                      jax.tree_util.tree_leaves(eb.g_params)):
+        np.testing.assert_array_equal(np.asarray(pa), np.asarray(pb))
+    np.testing.assert_array_equal(np.asarray(ea.age.cluster_age),
+                                  np.asarray(eb.age.cluster_age))
+    np.testing.assert_array_equal(np.asarray(ea.age.freq),
+                                  np.asarray(eb.age.freq))
+    np.testing.assert_array_equal(ea.cluster_of, eb.cluster_of)
+
+
+@pytest.mark.parametrize("method", METHODS)
+@pytest.mark.parametrize("driver", ("step", "scan"))
+def test_full_equals_all_active_uniform(mnist_setup, method, driver):
+    """schedule='full' (the pre-plane path, itself pinned bit-identical
+    to the host PS / run_fl by tests/test_engine_golden.py) must equal
+    'uniform' at m = N: the masked machinery at all-active is a bitwise
+    no-op, across a recluster boundary, under both drivers."""
+    shards, test = mnist_setup
+    hp_a = RAgeKConfig(method=method, **HP)
+    hp_b = RAgeKConfig(method=method, schedule="uniform",
+                       participation_m=len(shards), **HP)
+    ea = FederatedEngine("mlp", shards, test, hp_a, seed=3)
+    eb = FederatedEngine("mlp", shards, test, hp_b, seed=3)
+    run_a = ea.run if driver == "step" else ea.run_scanned
+    run_b = eb.run if driver == "step" else eb.run_scanned
+    ra = run_a(ROUNDS, eval_every=2)
+    rb = run_b(ROUNDS, eval_every=2)
+    assert ra.n_active == [len(shards)] * ROUNDS
+    assert max(ra.aoi_peak) == 0          # everyone heard from, always
+    _assert_same_run(ea, ra, eb, rb, method)
+
+
+# ---------------------------------------------------------------------------
+# partial rounds: driver + selection-plane parity, masked eq. (2)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("method", ("rage_k", "cafe", "top_k"))
+def test_partial_step_equals_scan(mnist_setup, method):
+    shards, test = mnist_setup
+    hp = RAgeKConfig(method=method, schedule="uniform", participation_m=4,
+                     **HP)
+    ea = FederatedEngine("mlp", shards, test, hp, seed=3)
+    ra = ea.run(ROUNDS, eval_every=2)
+    eb = FederatedEngine("mlp", shards, test, hp, seed=3)
+    rb = eb.run_scanned(ROUNDS, eval_every=2)
+    assert ra.n_active == [4] * ROUNDS
+    _assert_same_run(ea, ra, eb, rb, method)
+    np.testing.assert_array_equal(ea.client_aoi, eb.client_aoi)
+
+
+def test_partial_segmented_equals_sequential_engine(mnist_setup):
+    shards, test = mnist_setup
+    hp = RAgeKConfig(method="rage_k", schedule="aoi", participation_m=3,
+                     **HP)
+    ea = FederatedEngine("mlp", shards, test, hp, seed=3,
+                         selection="segmented")
+    ra = ea.run(ROUNDS, eval_every=2)
+    eb = FederatedEngine("mlp", shards, test, hp, seed=3,
+                         selection="scan")
+    rb = eb.run(ROUNDS, eval_every=2)
+    _assert_same_run(ea, ra, eb, rb, "rage_k")
+
+
+def test_partial_pallas_equals_jnp():
+    """aggregate_impl='pallas' (fused segmented hand-off + Pallas
+    masked top-k, interpret mode on CPU) agrees bit-exactly with the
+    jnp path under a partial schedule — the active-only pack feeds the
+    kernel sentinel-padded slots it already drops."""
+    (xtr, ytr), test = mnist_like(n_train=600, n_test=200, seed=0)
+    shards = paper_mnist_split(xtr, ytr, seed=0)
+    hp = RAgeKConfig(r=20, k=4, H=1, M=3, lr=2e-3, batch_size=8,
+                     method="rage_k", schedule="uniform",
+                     participation_m=4)
+    ea = FederatedEngine("mlp", shards, test, hp, seed=2,
+                         aggregate_impl="pallas")
+    ra = ea.run(ROUNDS, eval_every=ROUNDS)
+    eb = FederatedEngine("mlp", shards, test, hp, seed=2,
+                         aggregate_impl="jnp")
+    rb = eb.run(ROUNDS, eval_every=ROUNDS)
+    _assert_same_run(ea, ra, eb, rb, "rage_k")
+
+
+def test_masked_rage_select_age_semantics():
+    """Absent clients: eq. (2) +1 with NO reset; idx rows = sentinel d;
+    freq untouched. Active clients follow the unmasked reference over
+    the same ages (all in one cluster, so the active scan order and
+    the commuted inactive +1s are both exercised)."""
+    n, d, r, k = 4, 16, 6, 2
+    rng = np.random.default_rng(0)
+    g = jnp.asarray(rng.normal(size=(n, d)).astype(np.float32))
+    ca = rng.integers(0, 9, (n, d)).astype(np.int32)
+    cluster_of = jnp.zeros((n,), jnp.int32)       # one shared cluster
+    age = DeviceAgeState(jnp.asarray(ca), jnp.zeros((n, d), jnp.int32),
+                         cluster_of)
+    active = jnp.asarray([True, False, True, False])
+    idx, new = rage_select(g, age, r=r, k=k, active=active)
+    idx = np.asarray(idx)
+    # inactive rows: sentinel d, no freq
+    np.testing.assert_array_equal(idx[1], d)
+    np.testing.assert_array_equal(idx[3], d)
+    assert np.asarray(new.freq)[[1, 3]].sum() == 0
+    # the cluster row advanced by ALL 4 members' +1s; only the active
+    # members' requests reset.  Manual replay: +2 (inactive commute),
+    # then clients 0 and 2 in order: +1 each, reset their picks.
+    row = ca[0].astype(np.int64) + 2
+    for i in (0, 2):
+        row = row + 1
+        row[idx[i]] = 0
+    np.testing.assert_array_equal(np.asarray(new.cluster_age)[0], row)
+    # segmented plane agrees bit-exactly, loose and tight bounds
+    for bounds in ((None, None), (1, 2)):
+        idx_g, new_g = rage_select_segmented(
+            g, age, r=r, k=k, num_segments=bounds[0], max_seg=bounds[1],
+            active=active)
+        np.testing.assert_array_equal(np.asarray(idx_g), idx)
+        np.testing.assert_array_equal(np.asarray(new_g.cluster_age),
+                                      np.asarray(new.cluster_age))
+        np.testing.assert_array_equal(np.asarray(new_g.freq),
+                                      np.asarray(new.freq))
+
+
+def test_fully_inactive_cluster_keeps_aging():
+    n, d = 3, 8
+    age = DeviceAgeState(jnp.zeros((n, d), jnp.int32),
+                         jnp.zeros((n, d), jnp.int32),
+                         jnp.asarray([0, 0, 1], jnp.int32))
+    g = jnp.asarray(np.random.default_rng(1).normal(size=(n, d)),
+                    dtype=jnp.float32)
+    active = jnp.asarray([False, False, True])
+    _, new = rage_select(g, age, r=4, k=1, active=active)
+    # cluster 0 (both members absent): every coordinate aged by 2
+    np.testing.assert_array_equal(np.asarray(new.cluster_age)[0], 2)
+
+
+def test_aggregate_sparse_fused_mask():
+    idx = jnp.asarray([[0, 1], [2, 3], [0, 5]], jnp.int32)
+    vals = jnp.ones((3, 2), jnp.float32)
+    age = jnp.zeros((6,), jnp.int32)
+    mask = jnp.asarray([True, False, True])
+    dense, new_age = aggregate_sparse_fused(idx, vals, age, impl="jnp",
+                                            mask=mask)
+    np.testing.assert_array_equal(np.asarray(dense), [2, 1, 0, 0, 0, 1])
+    # masked row 1's indices neither hit the sum nor reset the age
+    np.testing.assert_array_equal(np.asarray(new_age), [0, 0, 1, 1, 1, 0])
+
+
+# ---------------------------------------------------------------------------
+# engine bookkeeping: uplink per participant, AoI columns
+# ---------------------------------------------------------------------------
+
+def test_partial_uplink_and_aoi_columns(mnist_setup):
+    shards, test = mnist_setup
+    n, m = len(shards), 4
+    hp = RAgeKConfig(method="rage_k", schedule="uniform",
+                     participation_m=m, **HP)
+    engine = FederatedEngine("mlp", shards, test, hp, seed=7)
+    res = engine.run_scanned(ROUNDS, eval_every=ROUNDS)
+    # partial rounds charge m/N of the full-participation uplink
+    full = FederatedEngine("mlp", shards, test,
+                           RAgeKConfig(method="rage_k", **HP), seed=7)
+    rf = full.run_scanned(ROUNDS, eval_every=ROUNDS)
+    assert res.uplink_bytes[-1] * n == rf.uplink_bytes[-1] * m
+    # replay AoI from the sentinel idx rows: row == d <=> absent
+    aoi = np.zeros(n, np.int64)
+    for t, idx in enumerate(res.requested):
+        absent = (np.asarray(idx) == engine.d).all(axis=1)
+        assert (~absent).sum() == m == res.n_active[t]
+        aoi = np.where(absent, aoi + 1, 0)
+        assert res.aoi_peak[t] == aoi.max()
+        np.testing.assert_allclose(res.aoi_mean[t], aoi.mean(),
+                                   rtol=1e-6)
+    np.testing.assert_array_equal(engine.client_aoi, aoi)
+    s = res.summary()
+    assert s["peak_aoi"] == max(res.aoi_peak)
+
+
+# ---------------------------------------------------------------------------
+# masked collective (dist.sparse_sync)
+# ---------------------------------------------------------------------------
+
+def test_manual_sync_active_mask_single_shard():
+    from jax.sharding import PartitionSpec as P
+    from repro.dist.sparse_sync import (init_age_state_sharded,
+                                        make_manual_sync)
+    from repro.launch.mesh import make_host_mesh
+
+    mesh = make_host_mesh(1, 1)
+    grads = {"a": jnp.arange(-8.0, 8.0).reshape(4, 4),
+             "b": jnp.ones((6,)) * 0.5}
+    specs = jax.tree_util.tree_map(lambda _: P(), grads)
+    shapes = jax.tree_util.tree_map(
+        lambda g: jax.ShapeDtypeStruct(g.shape, g.dtype), grads)
+    ages = init_age_state_sharded(shapes)
+    sync = make_manual_sync(mesh, specs, shapes, method="rage_k", r=8,
+                            k=4, wire_dtype=jnp.float32)
+
+    # all shards active == the unmasked exchange, bit for bit
+    ref, ref_ages, ref_stats = sync(grads, ages)
+    on, on_ages, on_stats = sync(grads, ages, active=jnp.asarray([True]))
+    assert int(ref_stats["active_shards"]) == 1
+    assert (int(ref_stats["wire_bytes_total"])
+            == int(ref_stats["wire_bytes_per_shard"]))
+    assert (int(on_stats["wire_bytes_total"])
+            == int(ref_stats["wire_bytes_total"]))
+    for a, b in zip(jax.tree_util.tree_leaves(ref),
+                    jax.tree_util.tree_leaves(on)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    for a, b in zip(jax.tree_util.tree_leaves(ref_ages),
+                    jax.tree_util.tree_leaves(on_ages)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    # the only shard inactive: zero update, pure aging (no reset),
+    # and the round uploads ZERO bytes in total
+    off, off_ages, off_stats = sync(grads, ages,
+                                    active=jnp.asarray([False]))
+    assert int(off_stats["active_shards"]) == 0
+    assert int(off_stats["wire_bytes_total"]) == 0
+    for leaf in jax.tree_util.tree_leaves(off):
+        np.testing.assert_array_equal(np.asarray(leaf), 0.0)
+    for leaf in jax.tree_util.tree_leaves(off_ages):
+        np.testing.assert_array_equal(np.asarray(leaf), 1)
+    with pytest.raises(ValueError, match="active mask"):
+        sync(grads, ages, active=jnp.asarray([True, False]))
+
+
+# ---------------------------------------------------------------------------
+# hypothesis generalization (optional dependency, like the other suites)
+# ---------------------------------------------------------------------------
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+    settings.register_profile("sched_fast", max_examples=25, deadline=None)
+    settings.load_profile("sched_fast")
+except ImportError:                                    # pragma: no cover
+    HAVE_HYPOTHESIS = False
+
+
+if HAVE_HYPOTHESIS:
+
+    @st.composite
+    def plan_case(draw):
+        n = draw(st.integers(1, 24))
+        m = draw(st.integers(1, n))
+        seed = draw(st.integers(0, 2**31 - 1))
+        rnd = draw(st.integers(0, 100))
+        return n, m, seed, rnd
+
+    @given(plan_case(), st.sampled_from(["uniform", "aoi"]))
+    def test_plan_cardinality_and_determinism(case, schedule):
+        n, m, seed, rnd = case
+        sched = make_scheduler(schedule, n, participation_m=m)
+        aoi = np.random.default_rng(seed).integers(0, 50, n)
+        sa = sched.plan(_state(n, seed, rnd, aoi))
+        sb = sched.plan(_state(n, seed, rnd, aoi))
+        assert int(sa.active.sum()) == m
+        np.testing.assert_array_equal(np.asarray(sa.active),
+                                      np.asarray(sb.active))
+        assert int(sa.staleness.max()) == 0
+        np.testing.assert_array_equal(np.asarray(sa.weight), 1.0)
+
+    @given(plan_case())
+    def test_deadline_plan_invariants(case):
+        n, _, seed, rnd = case
+        sched = Deadline(n, deadline_s=1.0, seed=seed % 97)
+        plan = sched.plan(_state(n, seed, rnd))
+        act = np.asarray(plan.active)
+        stale = np.asarray(plan.staleness)
+        w = np.asarray(plan.weight)
+        assert ((stale == 0) | act).all()      # staleness only on active
+        np.testing.assert_array_equal(w[stale == 0], 1.0)
+        if (stale > 0).any():
+            np.testing.assert_allclose(w[stale > 0], sched.discount)
+        late_prev = (np.asarray(sched._late(_state(n, seed, rnd).key,
+                                            rnd - 1))
+                     if rnd > 0 else np.zeros(n, bool))
+        assert act[late_prev].all()            # stragglers always land
