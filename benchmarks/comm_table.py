@@ -1,14 +1,19 @@
 """Communication-volume table (the paper's bandwidth claim, made explicit):
 uplink bytes per client per global round for every method, both paper
-settings, plus the distributed bucketed variant's wire format and the
+settings, plus the distributed bucketed variant's wire format, the
 participation plane's partial-round totals (DESIGN.md §9) — a round in
 which only m of N clients take part uploads m/N of the full-round bytes,
-candidate report included only for the active clients.
+candidate report included only for the active clients — and the
+PS->client DOWNLINK control traffic the uplink tables ignore: the sync
+rAge-k PS sends each client its k requested indices per round, the
+async service's dispatch-time solicitation sends the r stalest instead
+(DESIGN.md §10).
 """
 from __future__ import annotations
 
 from benchmarks.common import save_json
-from repro.core.compression import bytes_per_index, bytes_per_round
+from repro.core.compression import (bytes_per_index, bytes_per_round,
+                                    downlink_bytes_per_round)
 
 
 def main(fast: bool = True):
@@ -33,6 +38,11 @@ def main(fast: bool = True):
                       + n * s["r"] * ib)
         partial_round = (bytes_per_round(s["k"], s["d"], m_active=m)
                          + m * s["r"] * ib)
+        # downlink solicitation: k requested indices per client per sync
+        # round; r solicited indices per dispatch under the async
+        # service's dispatch-time protocol
+        dl_sync = downlink_bytes_per_round(s["k"], s["d"])
+        dl_async = downlink_bytes_per_round(s["r"], s["d"])
         table[name] = {
             "index_bytes": ib,
             "dense_fp32": dense,
@@ -44,11 +54,20 @@ def main(fast: bool = True):
             "round_total_partial": {"n_active": m, "bytes": partial_round,
                                     "fraction_of_full":
                                         partial_round / full_round},
+            "downlink_solicit_sync": dl_sync,
+            "downlink_solicit_async_dispatch": dl_async,
+            "round_downlink_full": {
+                "sync_k_request": downlink_bytes_per_round(
+                    s["k"], s["d"], m_active=n),
+                "async_r_solicit": downlink_bytes_per_round(
+                    s["r"], s["d"], m_active=n)},
+            "round_total_incl_downlink": full_round + n * dl_sync,
         }
         rows.append((f"comm:{name}", 0.0,
                      f"dense={dense}B sparse={sparse_rep}B "
                      f"x{dense / sparse_rep:.0f} less; "
-                     f"round m={m}/{n}: {partial_round}B"))
+                     f"round m={m}/{n}: {partial_round}B; "
+                     f"downlink k-req={dl_sync}B r-solicit={dl_async}B"))
     save_json("comm_table", table)
     return rows
 

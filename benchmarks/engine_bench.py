@@ -14,20 +14,29 @@
   AoIBalanced / Deadline runs at m = N/4, recording the new AoI metrics
   (client-level mean/peak AoI, coordinate-level cluster_age mean/peak)
   — at EQUAL uplink bytes the AoI-balancing scheduler should show the
-  lower peak client AoI than uniform sampling.
+  lower peak client AoI than uniform sampling;
+* ASYNC SERVICE plane (DESIGN.md §10): the event-driven buffered PS
+  under a straggler-heavy latency draw vs the lockstep engine on the
+  SAME LatencyModel, at EQUAL uplink bytes (equal landings): the sync
+  round's virtual wall is the slowest client's dispatch, the async
+  PS's aggregation cadence is set by MEAN latency — aggregations per
+  virtual second should beat sync rounds per virtual second, with the
+  staleness histogram showing what that throughput costs.
 
 Results land in experiments/bench/BENCH_engine.json. Fast mode is the
 5-round CI smoke; --slow grows the round count.
 """
 from __future__ import annotations
 
+import jax
 import numpy as np
 
 from benchmarks.common import interleaved_best, save_json
 from repro.configs.base import RAgeKConfig
+from repro.core.compression import bytes_per_index, bytes_per_round
 from repro.data.federated import paper_mnist_split
 from repro.data.synthetic import mnist_like
-from repro.fl import FederatedEngine
+from repro.fl import AsyncService, FederatedEngine, LatencyModel
 
 
 # (name, driver, selection plane)
@@ -104,6 +113,66 @@ def _participation(shards, test, rounds: int) -> dict:
     return out
 
 
+def _async_service(shards, test, sync_rounds: int) -> dict:
+    """The async PS service plane vs the lockstep engine in VIRTUAL time
+    (DESIGN.md §10), on the fig3 config under a straggler-heavy latency
+    draw (hetero=1.0: client base speeds span ~e^2x). Both sides price
+    time with the SAME LatencyModel: a sync round costs the slowest
+    client's dispatch (``sync_round_s``); the async PS aggregates every
+    K landings and its clock advances with arrivals. The comparison is
+    at EQUAL UPLINK: K divides N*sync_rounds, so the async run lands
+    exactly the same number of (identically priced) client updates the
+    sync run would."""
+    n = len(shards)
+    K, V, eta = 5, 4, 0.5                 # K=5 divides N*rounds exactly
+    hp = RAgeKConfig(r=75, k=10, H=4, M=20, lr=2e-3, batch_size=64,
+                     method="rage_k", buffer_k=K, staleness_eta=eta,
+                     version_window=V)
+    latency = LatencyModel(n, hetero=1.0, jitter=0.25, seed=0)
+    aggs = sync_rounds * n // K
+    svc = AsyncService("mlp", shards, test, hp, seed=0, latency=latency)
+    res = svc.run_async(aggs, eval_every=aggs)
+    s = res.summary()
+
+    # the lockstep engine on the SAME latency draw: round t waits for
+    # the slowest client's t-th dispatch
+    sync_walls = np.asarray(latency.sync_round_s(jax.random.PRNGKey(0),
+                                                 sync_rounds))
+    sync_virtual_s = float(sync_walls.sum())
+    sync_rps = sync_rounds / sync_virtual_s if sync_virtual_s else 0.0
+    # equal-uplink check against the engine's per-client-round ledger
+    # (k entries + the r-candidate report, identical per landing)
+    per_client = (bytes_per_round(hp.k, svc.d, wire_dtype=hp.wire_dtype)
+                  + hp.r * bytes_per_index(svc.d))
+    sync_uplink = per_client * n * sync_rounds
+    return {
+        "buffer_k": K, "version_window": V, "staleness_eta": eta,
+        "latency": {"hetero": 1.0, "jitter": 0.25,
+                    "base_s": [float(b) for b in np.asarray(
+                        latency.base_s)]},
+        "aggregations": s["aggregations"],
+        "events": s["events"],
+        "virtual_s": s["virtual_s"],
+        "aggs_per_virtual_s": s["aggs_per_virtual_s"],
+        "sync_rounds": sync_rounds,
+        "sync_virtual_s": sync_virtual_s,
+        "sync_rounds_per_virtual_s": sync_rps,
+        "virtual_speedup": (s["aggs_per_virtual_s"] / sync_rps
+                            if sync_rps else 0.0),
+        "async_beats_sync": s["aggs_per_virtual_s"] > sync_rps,
+        "staleness_hist": {str(k_): v for k_, v in
+                           res.staleness_hist().items()},
+        "staleness_mean": s["staleness_mean"],
+        "uplink_bytes": res.uplink_bytes[-1],
+        "sync_uplink_bytes": sync_uplink,
+        "uplink_matched": res.uplink_bytes[-1] == sync_uplink,
+        "downlink_bytes": res.downlink_bytes[-1],
+        "wall_aggs_per_s": (s["aggregations"] / s["wall_s"]
+                            if s["wall_s"] else 0.0),
+        "final_acc": s["final_acc"],
+    }
+
+
 def main(fast: bool = True):
     # 5-round smoke for CI; more repeats because short walls are noisy
     rounds, repeats = (5, 9) if fast else (20, 5)
@@ -165,6 +234,19 @@ def main(fast: bool = True):
                  f"(m={part['m']}, equal_uplink={part['equal_uplink']}, "
                  f"aoi_beats_uniform="
                  f"{part['aoi_beats_uniform_peak_aoi']})"))
+
+    # async service plane (DESIGN.md §10): virtual-time throughput at
+    # equal uplink under the straggler-heavy draw
+    out["async_service"] = asv = _async_service(
+        shards, test, 10 if fast else 40)
+    rows.append(("async_aggs_per_virtual_s",
+                 1e6 / max(asv["aggs_per_virtual_s"], 1e-9),
+                 f"async={asv['aggs_per_virtual_s']:.3f}/s "
+                 f"sync={asv['sync_rounds_per_virtual_s']:.3f}/s "
+                 f"x{asv['virtual_speedup']:.2f} "
+                 f"(K={asv['buffer_k']}, "
+                 f"stale_mean={asv['staleness_mean']:.2f}, "
+                 f"uplink_matched={asv['uplink_matched']})"))
 
     save_json("BENCH_engine", out)
     rows.append(("engine_scan_speedup", 0.0, f"x{speedup:.2f}"))

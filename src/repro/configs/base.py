@@ -228,3 +228,13 @@ class RAgeKConfig:
     schedule: str = "full"
     participation_m: int = 0         # 0 -> max(N // 4, 1) (uniform/aoi)
     deadline_s: float = 0.0          # 0 -> 1.0 simulated s (deadline)
+    # async service plane (fl.service, DESIGN.md §10): the PS as an
+    # event-driven server. buffer_k = FedBuff aggregation size K (flush
+    # the buffer every K landings; 0 -> N, which with equal latencies
+    # and version_window=1 is bit-identical to the synchronous engine),
+    # staleness_eta = exponent of the age-decayed staleness discount
+    # 1/(1+s)^eta on late arrivals, version_window = V snapshots the PS
+    # retains (staleness is clipped at V-1; memory bound V*d)
+    buffer_k: int = 0                # 0 -> N (sync-equivalent window)
+    staleness_eta: float = 0.5
+    version_window: int = 1

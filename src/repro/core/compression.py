@@ -92,3 +92,31 @@ def bytes_per_round(k: int, d: int, value_bytes: int | None = None,
     if m_active < 0:
         raise ValueError(f"m_active must be >= 0, got {m_active}")
     return m_active * per_client
+
+
+def downlink_bytes_per_round(n_req: int, d: int,
+                             index_bytes: int | None = None,
+                             m_active: int | None = None) -> int:
+    """PS->client solicitation bytes for one client in one round.
+
+    The rAge-k PS SENDS each client the coordinate list it wants —
+    ``n_req`` indices of a d-coordinate model (k requested indices in
+    the synchronous protocol; the async service's dispatch-time
+    solicitation sends the r stalest instead). The parameter payload
+    itself (the model broadcast) is common to every FL method and is
+    deliberately NOT counted here — this prices only the per-method
+    control traffic the uplink tables previously ignored.
+
+    ``m_active`` mirrors :func:`bytes_per_round`: the round total for m
+    solicited clients; None keeps per-client accounting.
+    """
+    if n_req < 0:
+        raise ValueError(f"n_req must be >= 0, got {n_req}")
+    if index_bytes is None:
+        index_bytes = bytes_per_index(d)
+    per_client = n_req * index_bytes
+    if m_active is None:
+        return per_client
+    if m_active < 0:
+        raise ValueError(f"m_active must be >= 0, got {m_active}")
+    return m_active * per_client

@@ -110,32 +110,53 @@ class DeviceShardStore:
         return SamplerState(order=order,
                             pos=jnp.zeros((self.n,), jnp.int32), key=key)
 
+    def _draw_client(self, xi, yi, length, order, pos, key, H: int):
+        """H batches of ONE client from its shard + sampler row — the
+        shared inner of the batched :meth:`draw` (its vmap) and the
+        per-arrival :meth:`draw_one` (a single application, bitwise the
+        corresponding vmapped row)."""
+        bs, cap = self.bs, self.capacity
+
+        def step(carry, _):
+            order, pos, key = carry
+            wrap = pos + bs > length
+            key, sub = jax.random.split(key)
+            order = jnp.where(wrap, self._perm(sub, length, cap), order)
+            pos = jnp.where(wrap, 0, pos)
+            sel = jax.lax.dynamic_slice(order, (pos,), (bs,))
+            return ((order, pos + bs, key),
+                    (jnp.take(xi, sel, axis=0), jnp.take(yi, sel, axis=0)))
+
+        (order, pos, key), (bx, by) = jax.lax.scan(
+            step, (order, pos, key), None, length=H)
+        return bx, by, order, pos, key
+
     def draw(self, data, state: SamplerState, H: int):
         """Draw the next H batches per client, entirely on device.
 
         Returns ``(bx (N, H, B, ...), by (N, H, B), new_state)``.
         """
         x, y, lengths = data
-        bs, cap = self.bs, self.capacity
-
-        def one_client(xi, yi, length, order, pos, key):
-            def step(carry, _):
-                order, pos, key = carry
-                wrap = pos + bs > length
-                key, sub = jax.random.split(key)
-                order = jnp.where(wrap, self._perm(sub, length, cap), order)
-                pos = jnp.where(wrap, 0, pos)
-                sel = jax.lax.dynamic_slice(order, (pos,), (bs,))
-                return ((order, pos + bs, key),
-                        (jnp.take(xi, sel, axis=0), jnp.take(yi, sel, axis=0)))
-
-            (order, pos, key), (bx, by) = jax.lax.scan(
-                step, (order, pos, key), None, length=H)
-            return bx, by, order, pos, key
-
-        bx, by, order, pos, key = jax.vmap(one_client)(
+        bx, by, order, pos, key = jax.vmap(
+            lambda *a: self._draw_client(*a, H))(
             x, y, lengths, state.order, state.pos, state.key)
         return bx, by, SamplerState(order=order, pos=pos, key=key)
+
+    def draw_one(self, data, state: SamplerState, H: int, i):
+        """Draw the next H batches of client ``i`` only (``i`` may be a
+        traced int32 — the async service's event loop calls this with
+        the landing client). Returns ``(bx (H, B, ...), by (H, B),
+        new_state)`` with ONLY row ``i`` of the sampler advanced: the
+        other clients' streams are untouched, so a client's sequence of
+        batches depends on nothing but its own draw count — landing
+        order cannot perturb anyone else's data."""
+        x, y, lengths = data
+        bx, by, order, pos, key = self._draw_client(
+            jnp.take(x, i, axis=0), jnp.take(y, i, axis=0), lengths[i],
+            state.order[i], state.pos[i], state.key[i], H)
+        return bx, by, SamplerState(order=state.order.at[i].set(order),
+                                    pos=state.pos.at[i].set(pos),
+                                    key=state.key.at[i].set(key))
 
 
 def token_stream(vocab: int, batch: int, seq: int, *, seed: int = 0,

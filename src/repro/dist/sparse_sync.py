@@ -346,3 +346,95 @@ def make_manual_sync(mesh, specs, shapes, *, method: str = "rage_k",
             specs, is_leaf=lambda x: isinstance(x, P)), age_spec_leaves)
         if method == "cafe" else specs)
     return sync
+
+
+# ---------------------------------------------------------------------------
+# buffered (FedBuff-style) union — the async service plane's collective
+# ---------------------------------------------------------------------------
+
+class _BufferState:
+    """Carried accumulator of :func:`make_buffered_sync` — created by
+    ``.init_buffer()``, threaded through every call."""
+
+    __slots__ = ("sums", "count")
+
+    def __init__(self, sums, count):
+        self.sums = sums          # pytree of f32 running union sums
+        self.count = count        # () int32: shard-updates buffered
+
+
+def _buffer_flatten(b):
+    return (b.sums, b.count), None
+
+
+def _buffer_unflatten(_, children):
+    return _BufferState(*children)
+
+
+jax.tree_util.register_pytree_node(_BufferState, _buffer_flatten,
+                                   _buffer_unflatten)
+BufferState = _BufferState
+
+
+def make_buffered_sync(mesh, specs, shapes, *, buffer_k: int,
+                       method: str = "rage_k", candidates: str = "sort",
+                       r: int = 0, k: int = 0, wire_dtype=jnp.bfloat16,
+                       lam: float = 0.1):
+    """FedBuff-style buffered wrapper over :func:`make_manual_sync` —
+    the async service plane's semantics (DESIGN.md §10) expressed on the
+    sharded collective: each call lands that round's ACTIVE-shard union
+    into a running buffer instead of applying it, and the mean update is
+    released only once ``buffer_k`` shard-updates have accumulated.
+
+    Returns ``sync(grads, ages, buf, active=None) -> (synced, new_ages,
+    new_buf, stats)``. ``synced`` is zero (a bitwise no-op update) on
+    buffering calls and the buffered mean — sum of landed updates over
+    the number of landed shard-updates — on flushing calls; ages advance
+    with every call's union exactly as the unbuffered sync (age is a
+    property of requests, not of application). stats adds ``flushed``
+    (bool) and ``buffered_shards`` (post-call count, 0 after a flush).
+
+    ``buffer_k=1`` (with full participation of a single data shard) is
+    call-by-call equivalent to the base sync: every call flushes its own
+    mean. More generally any call reaching ``count >= buffer_k`` flushes
+    sums/count, which for one full-participation round equals the base
+    sync's pmean — pinned by tests/test_dist.py. The closure re-exports
+    ``.n_data`` / ``.age_specs`` and adds ``.init_buffer()``.
+    """
+    if buffer_k < 1:
+        raise ValueError(f"buffer_k must be >= 1, got {buffer_k}")
+    base = make_manual_sync(mesh, specs, shapes, method=method,
+                            candidates=candidates, r=r, k=k,
+                            wire_dtype=wire_dtype, lam=lam)
+
+    def init_buffer() -> _BufferState:
+        sums = jax.tree_util.tree_map(
+            lambda s: jnp.zeros(s.shape, jnp.float32), shapes)
+        return _BufferState(sums, jnp.int32(0))
+
+    def sync(grads, ages, buf: _BufferState, active=None):
+        synced, new_ages, stats = base(grads, ages, active=active)
+        n_act = stats["active_shards"]
+        # undo the base sync's active-shard mean: the buffer holds SUMS,
+        # so flushes landing across rounds with different participation
+        # weight every shard-update equally
+        sums = jax.tree_util.tree_map(
+            lambda b, s: b + s.astype(jnp.float32)
+            * n_act.astype(jnp.float32), buf.sums, synced)
+        count = buf.count + n_act
+        flush = count >= jnp.int32(buffer_k)
+        denom = jnp.maximum(count, 1).astype(jnp.float32)
+        out = jax.tree_util.tree_map(
+            lambda s, g: jnp.where(flush, (s / denom).astype(g.dtype),
+                                   jnp.zeros_like(g)),
+            sums, synced)
+        new_sums = jax.tree_util.tree_map(
+            lambda s: jnp.where(flush, jnp.zeros_like(s), s), sums)
+        new_count = jnp.where(flush, jnp.int32(0), count)
+        stats = dict(stats, flushed=flush, buffered_shards=new_count)
+        return out, new_ages, _BufferState(new_sums, new_count), stats
+
+    sync.n_data = base.n_data
+    sync.age_specs = base.age_specs
+    sync.init_buffer = init_buffer
+    return sync

@@ -2,9 +2,13 @@ from repro.fl.engine import (  # noqa: F401
     DeviceAgeState, FederatedEngine, FLResult, rage_select,
     rage_select_segmented,
 )
+from repro.fl.latency import LatencyModel  # noqa: F401
 from repro.fl.schedule import (  # noqa: F401
     SCHEDULES, AoIBalanced, Deadline, Full, RoundPlan, SchedState,
     Scheduler, UniformM, make_scheduler,
+)
+from repro.fl.service import (  # noqa: F401
+    AsyncService, ServiceResult, ServiceState,
 )
 from repro.fl.simulation import run_fl  # noqa: F401
 from repro.fl.server import (  # noqa: F401

@@ -38,13 +38,14 @@ def unflattener(template):
     return unflatten
 
 
-def make_local_phase(apply_loss: Callable, lr: float) -> Callable:
-    """apply_loss(params, state, batch) -> (loss, new_state).
-
-    Returns jitted phase(params_s, opt_s, state_s, batches) with leading
-    client axis on every arg; batches: (N, H, ...) pytree. Output includes
-    the final-step flat gradients (N, d) and mean loss per client (N,).
-    """
+def make_client_phase(apply_loss: Callable, lr: float) -> Callable:
+    """ONE client's H-step local phase, pure and un-jitted (traceable
+    inside any program — the async service's event loop runs it per
+    arrival). phase(params, opt_state, state, batches) -> (params,
+    opt_state, state, flat_last_grad (d,), mean_loss ()); batches is an
+    (H, ...) pytree. :func:`make_local_phase` is exactly its vmap, so a
+    single-client call is bitwise the corresponding row of the batched
+    phase (pinned by tests/test_service.py)."""
     opt = adam(lr)
 
     def one_step(carry, batch):
@@ -61,7 +62,18 @@ def make_local_phase(apply_loss: Callable, lr: float) -> Callable:
         last_grad = jax.tree_util.tree_map(lambda g: g[-1], grads_seq)
         return params, opt_state, state, flatten_tree(last_grad), losses.mean()
 
-    return jax.jit(jax.vmap(phase_one_client))
+    return phase_one_client
+
+
+def make_local_phase(apply_loss: Callable, lr: float) -> Callable:
+    """apply_loss(params, state, batch) -> (loss, new_state).
+
+    Returns jitted phase(params_s, opt_s, state_s, batches) with leading
+    client axis on every arg; batches: (N, H, ...) pytree. Output includes
+    the final-step flat gradients (N, d) and mean loss per client (N,).
+    The vmap of :func:`make_client_phase`, exactly.
+    """
+    return jax.jit(jax.vmap(make_client_phase(apply_loss, lr)))
 
 
 def stack_clients(trees: list):

@@ -60,6 +60,7 @@ to the pre-plane engine.
 """
 from __future__ import annotations
 
+import threading
 import time
 from concurrent.futures import ThreadPoolExecutor
 from dataclasses import dataclass, field
@@ -177,6 +178,53 @@ def _where_clients(mask: jnp.ndarray, new, old):
 
 
 # ---------------------------------------------------------------------------
+# round pieces shared with the async service plane (fl.service)
+# ---------------------------------------------------------------------------
+
+def select_member_topk(cluster_age, taken, cand, cl, *, k: int,
+                       disjoint: bool):
+    """One member's age-top-k pick against the in-window disjointness
+    set — the shared inner of :func:`rage_select`'s member scan and the
+    async service's per-landing selection. Reads the CURRENT
+    ``cluster_age``; under disjoint=True the result is invariant to the
+    interleaved per-member +1/reset (a landed member's +1 shifts its
+    whole cluster row uniformly and its resets are ``taken``-masked
+    anyway), which is what makes the event-loop selection bit-identical
+    to the round-start-ages reference in the degenerate setting."""
+    ages = cluster_age[cl, cand]
+    if disjoint:
+        ages = jnp.where(taken[cl, cand], jnp.int32(-1), ages)
+    _, sel = jax.lax.top_k(ages, k)             # stable: |g| tie-break
+    return cand[sel]
+
+
+def member_age_row(row, idx):
+    """Eq. (2) for one member/landing: the cluster row advances by one
+    and the requested coordinates reset (sentinel/OOB indices drop)."""
+    return (row + 1).at[idx].set(0, mode="drop")
+
+
+def apply_global(g_opt, unflatten, g_sum, g_params, g_opt_state):
+    """The PS's global update from an aggregated flat gradient — shared
+    tail of the engine round and the service's buffer flush."""
+    updates, g_opt_state = g_opt.update(unflatten(g_sum), g_opt_state,
+                                        g_params)
+    return apply_updates(g_params, updates), g_opt_state
+
+
+def build_eval_sets(shards, test, *, cap: int = 1024):
+    """Per-client eval subsets (the labels each client holds), shared by
+    the engine and the async service."""
+    xte, yte = test
+    out = []
+    for (_, ys) in shards:
+        labels = np.unique(ys)
+        sel = np.isin(yte, labels)
+        out.append((jnp.asarray(xte[sel][:cap]), jnp.asarray(yte[sel][:cap])))
+    return out
+
+
+# ---------------------------------------------------------------------------
 # device-side rAge-k selection (the PS control loop, on accelerator)
 # ---------------------------------------------------------------------------
 
@@ -216,11 +264,8 @@ def rage_select(g: jnp.ndarray, age: DeviceAgeState, *, r: int, k: int,
 
     def sel_body(taken, inp):
         cand, cl, act = inp
-        ages = age.cluster_age[cl, cand]
-        if disjoint:
-            ages = jnp.where(taken[cl, cand], jnp.int32(-1), ages)
-        _, sel = jax.lax.top_k(ages, k)             # stable: |g| tie-break
-        idx = cand[sel]
+        idx = select_member_topk(age.cluster_age, taken, cand, cl, k=k,
+                                 disjoint=disjoint)
         idx = jnp.where(act, idx, jnp.int32(d))     # inactive: no request
         if disjoint:
             taken = taken.at[cl, idx].set(True, mode="drop")
@@ -238,7 +283,7 @@ def rage_select(g: jnp.ndarray, age: DeviceAgeState, *, r: int, k: int,
     def age_body(ca, inp):
         idx_i, cl, act = inp
         row = ca[cl]
-        new_row = (row + 1).at[idx_i].set(0, mode="drop")
+        new_row = member_age_row(row, idx_i)
         return ca.at[cl].set(jnp.where(act, new_row, row)), None
 
     cluster_age, _ = jax.lax.scan(
@@ -429,13 +474,7 @@ class FederatedEngine:
                                        seed=seed + 17)
         self._data = self._store.data
         self.samp = self._store.init_state()
-        xte, yte = test
-        self._eval_sets = []
-        for (xs, ys) in shards:
-            labels = np.unique(ys)
-            sel = np.isin(yte, labels)
-            self._eval_sets.append((jnp.asarray(xte[sel][:1024]),
-                                    jnp.asarray(yte[sel][:1024])))
+        self._eval_sets = build_eval_sets(shards, test)
 
         # --- uplink accounting (per client per round) -----------------------
         ib = bytes_per_index(self.d)
@@ -460,6 +499,11 @@ class FederatedEngine:
         # --- async recluster (scan driver overlaps the every-M DBSCAN) ----
         self._recluster_pool: ThreadPoolExecutor | None = None
         self._recluster_future = None
+        # claims of the in-flight future (and the pool shutdown) are
+        # serialized: close() may race __del__ (GC runs it on another
+        # thread) or a driver blown out of a chunk mid-scan — the worker
+        # result must be joined and applied EXACTLY once
+        self._recluster_lock = threading.Lock()
         self.recluster_s = 0.0           # total host DBSCAN+merge wall
         self.recluster_wait_s = 0.0      # the part the driver blocked on
 
@@ -594,9 +638,8 @@ class FederatedEngine:
         if ef_mem is not None:
             ef_mem = jnp.where(act[:, None], g - sent, ef_mem)
 
-        updates, g_opt_state = self._g_opt.update(
-            self._unflatten(g_sum), g_opt_state, g_params)
-        g_params = apply_updates(g_params, updates)
+        g_params, g_opt_state = apply_global(
+            self._g_opt, self._unflatten, g_sum, g_params, g_opt_state)
         params_s = C.broadcast_global(g_params, self.n)
 
         # AoI bookkeeping + participation metrics (scalars; the per-chunk
@@ -778,12 +821,17 @@ class FederatedEngine:
     def _recluster_join(self):
         """Block on (and apply) the in-flight async recluster, if any.
         Every reader of post-recluster state funnels through here, so a
-        deferred join can never be observed."""
-        if self._recluster_future is None:
+        deferred join can never be observed. The future is CLAIMED under
+        a lock before it is joined, so concurrent callers (close()
+        racing __del__, a driver unwinding from a mid-scan exception)
+        join and apply it exactly once — the losers see None and
+        return."""
+        with self._recluster_lock:
+            fut, self._recluster_future = self._recluster_future, None
+        if fut is None:
             return
         t0 = time.perf_counter()
-        (new_ca, labels), comp_s = self._recluster_future.result()
-        self._recluster_future = None
+        (new_ca, labels), comp_s = fut.result()
         self.recluster_wait_s += time.perf_counter() - t0
         self.recluster_s += comp_s
         self._apply_recluster(new_ca, labels)
@@ -802,13 +850,18 @@ class FederatedEngine:
         return max(0.0, self.recluster_s - self.recluster_wait_s)
 
     def close(self):
-        """Join any in-flight recluster and release its worker thread
-        (idempotent; engines are reusable after close — the pool is
-        re-created lazily on the next scan-driver recluster)."""
+        """Join any in-flight recluster and release its worker thread.
+        Idempotent AND race-safe: the future claim in _recluster_join
+        and the pool hand-off below are both atomic, so close() racing
+        __del__ (or a second close(), or an unwind from a mid-scan
+        exception) joins the worker exactly once and shuts the pool
+        down exactly once. Engines are reusable after close — the pool
+        is re-created lazily on the next scan-driver recluster."""
         self._recluster_join()
-        if self._recluster_pool is not None:
-            self._recluster_pool.shutdown(wait=True)
-            self._recluster_pool = None
+        with self._recluster_lock:
+            pool, self._recluster_pool = self._recluster_pool, None
+        if pool is not None:
+            pool.shutdown(wait=True)
 
     def __del__(self):
         try:

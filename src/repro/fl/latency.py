@@ -1,0 +1,84 @@
+"""Deterministic per-client latency model — ONE simulated-time source for
+every plane that reasons about client speed (DESIGN.md §9/§10).
+
+Extracted from ``fl.schedule.Deadline`` (which drew its lognormal
+compute+uplink times inline through PR 5) so the synchronous
+participation plane and the async PS service plane price a client's
+round with the SAME model: a fixed per-client lognormal base
+(heterogeneity, drawn once from ``seed``) times per-draw lognormal
+noise (jitter). Every draw is ``fold_in``-keyed by its coordinates —
+``(key, round)`` for a synchronous round, ``(key, client, dispatch)``
+for an async dispatch — so any past event is recomputable in O(1) from
+the constant carried key: nothing is ever buffered to remember a time.
+
+``hetero=0, jitter=0`` collapses the model to exactly 1.0 simulated
+seconds for every client and every draw (``exp(0)`` is exact) — the
+equal-latency degenerate setting the async service's golden pin runs
+(tests/test_service.py).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class LatencyModel:
+    """Lognormal compute+uplink time per client.
+
+    base_s[i] = exp(hetero * z_i)   with z ~ N(0,1) from PRNGKey(seed),
+    drawn ONCE at construction — the persistent speed of client i. Each
+    draw multiplies base_s by exp(jitter * z') with z' keyed by the
+    draw's coordinates (see :meth:`round_s` / :meth:`dispatch_s`).
+    """
+
+    n: int
+    hetero: float = 0.5        # lognormal sigma of per-client base times
+    jitter: float = 0.25       # lognormal sigma of per-draw noise
+    seed: int = 0
+    base_s: jnp.ndarray = field(init=False, repr=False, compare=False)
+
+    def __post_init__(self):
+        if self.n < 1:
+            raise ValueError(f"LatencyModel needs n >= 1, got {self.n}")
+        key = jax.random.PRNGKey(self.seed)
+        base = jnp.exp(self.hetero * jax.random.normal(key, (self.n,)))
+        object.__setattr__(self, "base_s", base)
+
+    # -- synchronous rounds (fl.schedule.Deadline) ----------------------
+    def round_s(self, key, rnd) -> jnp.ndarray:
+        """(N,) simulated round times of synchronous round ``rnd`` —
+        the draw Deadline compares against its deadline. Keyed
+        ``fold_in(key, rnd)``: round t-1's stragglers are recomputable
+        at round t from the constant carried key."""
+        noise = jnp.exp(self.jitter * jax.random.normal(
+            jax.random.fold_in(key, rnd), (self.n,)))
+        return self.base_s * noise
+
+    def sync_round_s(self, key, rounds: int) -> jnp.ndarray:
+        """(rounds,) virtual wall of each SYNCHRONOUS round: the round
+        ends when its slowest dispatch returns, so round t costs
+        ``max_i dispatch_s(key, i, t)`` — the straggler bound the async
+        service plane exists to break (benchmarks/engine_bench.py
+        compares aggregations/virtual-sec against this)."""
+        clients = jnp.arange(self.n, dtype=jnp.int32)
+
+        def one_round(t):
+            return jax.vmap(
+                lambda i: self.dispatch_s(key, i, t))(clients).max()
+
+        return jax.vmap(one_round)(jnp.arange(rounds, dtype=jnp.int32))
+
+    # -- async dispatches (fl.service.AsyncService) ---------------------
+    def dispatch_s(self, key, client, j) -> jnp.ndarray:
+        """Scalar simulated time of client ``client``'s ``j``-th
+        dispatch (compute + uplink until the update lands at the PS).
+        Keyed ``fold_in(fold_in(key, client), j)`` — any arrival event
+        is recomputable from (key, client, dispatch count) alone, which
+        is what lets the service's event loop live in a scan carry with
+        no host-side event queue."""
+        sub = jax.random.fold_in(jax.random.fold_in(key, client), j)
+        noise = jnp.exp(self.jitter * jax.random.normal(sub))
+        return self.base_s[client] * noise

@@ -47,6 +47,8 @@ from typing import Any, NamedTuple, Protocol, runtime_checkable
 import jax
 import jax.numpy as jnp
 
+from repro.fl.latency import LatencyModel
+
 
 SCHEDULES = ("full", "uniform", "aoi", "deadline")
 
@@ -200,10 +202,13 @@ class AoIBalanced:
 class Deadline:
     """Timely-FL deadline rounds (Buyukates & Ulukus).
 
-    Each client's round time is simulated as a fixed per-client
-    compute+uplink base (lognormal heterogeneity, drawn once from
-    ``seed``) times per-round lognormal noise (``fold_in(key, rnd)``).
-    Clients finishing within ``deadline_s`` upload fresh (weight 1).
+    Each client's round time comes from the SHARED
+    :class:`repro.fl.latency.LatencyModel` (a fixed per-client
+    compute+uplink base — lognormal heterogeneity, drawn once from
+    ``seed`` — times per-round lognormal noise, ``fold_in(key, rnd)``);
+    the async service plane (``fl.service``) prices its dispatches with
+    the same model. Clients finishing within ``deadline_s`` upload
+    fresh (weight 1).
     Clients that miss it drop out of the current aggregate; their update
     lands NEXT round with staleness 1 and weight ``discount`` — round
     t recomputes round t-1's stragglers from the carried key instead of
@@ -218,24 +223,27 @@ class Deadline:
     discount: float = 0.5      # weight of a one-round-stale arrival
     seed: int = 0
     name: str = "deadline"
-    base_s: jnp.ndarray = field(init=False, repr=False, compare=False)
+    latency: LatencyModel = field(init=False, repr=False, compare=False)
 
     def __post_init__(self):
         if self.deadline_s <= 0:
             raise ValueError(f"Deadline needs deadline_s > 0, got "
                              f"{self.deadline_s}")
-        key = jax.random.PRNGKey(self.seed)
-        base = jnp.exp(self.hetero * jax.random.normal(key, (self.n,)))
-        object.__setattr__(self, "base_s", base)
+        object.__setattr__(self, "latency", LatencyModel(
+            self.n, hetero=self.hetero, jitter=self.jitter,
+            seed=self.seed))
+
+    @property
+    def base_s(self) -> jnp.ndarray:
+        """Per-client base times — the shared model's (back-compat)."""
+        return self.latency.base_s
 
     @property
     def m_bound(self) -> int:
         return self.n            # every client may participate in a round
 
     def _late(self, key, rnd) -> jnp.ndarray:
-        noise = jnp.exp(self.jitter * jax.random.normal(
-            jax.random.fold_in(key, rnd), (self.n,)))
-        return self.base_s * noise > self.deadline_s
+        return self.latency.round_s(key, rnd) > self.deadline_s
 
     def plan(self, state: SchedState, age_state: Any = None) -> RoundPlan:
         fresh = ~self._late(state.key, state.rnd)

@@ -1,0 +1,576 @@
+"""Async PS service plane — event-driven buffered aggregation with
+age-decayed staleness (DESIGN.md §10).
+
+The engine's rounds are lockstep: even under partial participation the
+PS waits for every solicited client, so rounds/sec is bounded by the
+slowest client. This module is the production shape the Timely-FL line
+points at (Buyukates & Ulukus, PAPERS.md): the PS as a continuously
+running server whose throughput is set by AGGREGATION, not stragglers.
+
+The whole service is device-resident and virtual-clocked: a
+deterministic per-client latency model (``fl.latency.LatencyModel``,
+the same lognormal compute+uplink draw ``fl.schedule.Deadline`` prices
+synchronous rounds with, fold_in-keyed so any event is recomputable
+from the constant carried key) drives an event loop run as ONE
+``lax.scan`` over arrival events. Each scan step:
+
+1. pops the in-flight client with the earliest completion time (ties
+   resolve to the lowest client id) and advances the virtual clock;
+2. replays that client's local phase (H steps) against the parameter
+   snapshot of the version it was actually SENT, read from a bounded
+   ring of the last V snapshots — staleness is clipped at V-1 because
+   older versions no longer exist (memory bound V*d);
+3. selects the client's k upload coordinates — ``solicit='report'``
+   (default): the paper's plane, top-r |g| candidates filtered by
+   cluster age with in-window disjointness (the shared
+   ``engine.select_member_topk``); ``solicit='dispatch'``: the PS
+   already solicited the r STALEST coordinates of the client's cluster
+   at dispatch time (disjoint from the cluster's other in-flight
+   solicitations) and the client uploads the k largest-|g| of them —
+   downlink-billed, the rAge-k dual where age narrows to r and
+   magnitude picks k;
+4. lands the update in a FedBuff-style buffer, weighted by the
+   age-decayed staleness discount 1/(1+s)^eta, and applies eq. (2) to
+   the client's cluster row (+1, requested reset);
+5. if K updates have landed, flushes: one global optimizer step on the
+   buffered sum, version += 1, the new snapshot overwrites ring slot
+   ``version % V``, buffer and disjointness window reset;
+6. re-dispatches the client with the post-flush version; its next
+   arrival time is ``clock + latency.dispatch_s(key, client, n)``.
+
+Degenerate pin: at K=N, equal latencies (hetero=jitter=0) and V=1 the
+event loop IS the synchronous ``Full`` engine — everyone lands once per
+window in client-id order against the current params, the flush is the
+round boundary — and tests/test_service.py pins it BIT-IDENTICAL to
+``FederatedEngine`` under both drivers across a recluster boundary.
+
+Only metrics leave the device (per chunk); the every-M-aggregations
+DBSCAN recluster reuses the engine's host path unchanged.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import RAgeKConfig
+from repro.core.compression import (bytes_per_index, bytes_per_round,
+                                    downlink_bytes_per_round)
+from repro.core.strategies import CANDIDATE_IMPLS, client_candidates
+from repro.data.pipeline import DeviceShardStore
+from repro.fl import client as C
+from repro.fl.engine import (DeviceAgeState, _build_model,
+                             _recluster_host_packed, apply_global,
+                             build_eval_sets, member_age_row,
+                             select_member_topk)
+from repro.fl.latency import LatencyModel
+from repro.optim.optimizers import adam, sgd
+
+SOLICIT_MODES = ("report", "dispatch")
+
+
+class ServiceState(NamedTuple):
+    """The async PS's entire mutable state, threaded through the event
+    scan — chunk boundaries round-trip it through the host untouched,
+    so ``run_async(T)`` is invariant to chunking (tests/test_service).
+
+    clock:        () f32   — virtual time (last processed arrival).
+    next_done:    (N,) f32 — per-client in-flight completion times.
+    sent_version: (N,) i32 — model version each client was dispatched.
+    n_dispatch:   (N,) i32 — per-client dispatch counter (latency key).
+    version:      () i32   — current global model version.
+    ring:         pytree, leaves (V, ...) — last V parameter snapshots;
+                  slot v%V holds version v. Memory bound: V*d.
+    g_params / g_opt_state — current global model + optimizer.
+    buf:          (d,) f32 — FedBuff accumulator (staleness-weighted).
+    buf_count:    () i32   — updates landed since the last flush.
+    taken:        (N, d) bool — in-window cluster disjointness set
+                  (report mode; reset at every flush).
+    solicited:    (N, r) i32  — dispatch mode: the coordinate list the
+                  PS solicited from each client at its dispatch.
+    inflight:     (N, d) bool — dispatch mode: coordinates currently
+                  solicited from ANY in-flight member, per cluster row.
+    age:          DeviceAgeState — cluster ages / freq / labels.
+    opt_s / state_s / samp — per-client local optimizer, model state
+                  (BatchNorm), sampler rows; only the landing client's
+                  row advances per event.
+    key:          (2,) u32 — constant latency PRNG key.
+    """
+
+    clock: jnp.ndarray
+    next_done: jnp.ndarray
+    sent_version: jnp.ndarray
+    n_dispatch: jnp.ndarray
+    version: jnp.ndarray
+    ring: Any
+    g_params: Any
+    g_opt_state: Any
+    buf: jnp.ndarray
+    buf_count: jnp.ndarray
+    taken: jnp.ndarray
+    solicited: jnp.ndarray
+    inflight: jnp.ndarray
+    age: DeviceAgeState
+    opt_s: Any
+    state_s: Any
+    samp: Any
+    key: jnp.ndarray
+
+
+@dataclass
+class ServiceResult:
+    """Per-aggregation curves + per-event traces of one service run."""
+
+    rounds: list = field(default_factory=list)       # aggregation index
+    loss: list = field(default_factory=list)         # window mean loss
+    acc: list = field(default_factory=list)
+    uplink_bytes: list = field(default_factory=list)   # cumulative
+    downlink_bytes: list = field(default_factory=list) # cumulative
+    clock: list = field(default_factory=list)        # virtual s at eval
+    cluster_labels: list = field(default_factory=list)
+    # per-EVENT traces (one entry per landing, in event order)
+    clients: list = field(default_factory=list)      # landing client id
+    staleness: list = field(default_factory=list)    # versions late
+    event_clock: list = field(default_factory=list)
+    requested: list = field(default_factory=list)    # (k,) idx per event
+    wall_s: float = 0.0
+
+    def staleness_hist(self) -> dict:
+        vals, counts = np.unique(np.asarray(self.staleness, np.int64),
+                                 return_counts=True)
+        return {int(v): int(c) for v, c in zip(vals, counts)}
+
+    def summary(self) -> dict:
+        virtual_s = float(self.event_clock[-1]) if self.event_clock else 0.0
+        aggs = self.rounds[-1] if self.rounds else 0
+        return {
+            "aggregations": aggs,
+            "events": len(self.clients),
+            "virtual_s": virtual_s,
+            "aggs_per_virtual_s": (aggs / virtual_s if virtual_s else 0.0),
+            "final_acc": self.acc[-1] if self.acc else float("nan"),
+            "final_loss": self.loss[-1] if self.loss else float("nan"),
+            "total_uplink_mb": (self.uplink_bytes[-1] / 2**20
+                                if self.uplink_bytes else 0.0),
+            "total_downlink_mb": (self.downlink_bytes[-1] / 2**20
+                                  if self.downlink_bytes else 0.0),
+            "staleness_mean": (float(np.mean(self.staleness))
+                               if self.staleness else 0.0),
+            "staleness_max": (int(max(self.staleness))
+                              if self.staleness else 0),
+            "wall_s": self.wall_s,
+        }
+
+
+class AsyncService:
+    """The engine as a continuously running server (virtual-clocked).
+
+    Usage::
+
+        svc = AsyncService("mlp", shards, test, hp, seed=0,
+                           latency=LatencyModel(len(shards), hetero=1.0))
+        res = svc.run_async(aggregations=40, eval_every=5)
+
+    ``hp.buffer_k`` (K; 0 -> N), ``hp.staleness_eta`` (eta of the
+    1/(1+s)^eta discount) and ``hp.version_window`` (V) come from
+    :class:`RAgeKConfig`; ``latency=None`` means the equal-latency
+    degenerate model (hetero=jitter=0 — every dispatch takes exactly
+    1.0 virtual seconds), which together with K=N and V=1 is the
+    configuration pinned bit-identical to the synchronous engine.
+    """
+
+    def __init__(self, kind: str, shards: list, test: tuple,
+                 hp: RAgeKConfig, *, seed: int = 0,
+                 latency: LatencyModel | None = None,
+                 solicit: str = "report", global_opt: str = "adam"):
+        if hp.method != "rage_k":
+            raise ValueError(
+                f"AsyncService runs the rAge-k plane; method "
+                f"{hp.method!r} has no age state to solicit from "
+                f"(use FederatedEngine)")
+        if solicit not in SOLICIT_MODES:
+            raise ValueError(f"solicit must be one of {SOLICIT_MODES}, "
+                             f"got {solicit!r}")
+        if hp.candidates not in CANDIDATE_IMPLS:
+            raise ValueError(f"candidates must be one of "
+                             f"{CANDIDATE_IMPLS}, got {hp.candidates!r}")
+        if hp.r < hp.k:
+            raise ValueError(f"need r >= k (got r={hp.r}, k={hp.k})")
+        if hp.version_window < 1:
+            raise ValueError(f"version_window (V) must be >= 1, got "
+                             f"{hp.version_window}")
+        if hp.buffer_k < 0 or hp.buffer_k > len(shards):
+            raise ValueError(
+                f"buffer_k must be in [0, N={len(shards)}] (0 -> N), "
+                f"got {hp.buffer_k}")
+        if hp.staleness_eta < 0:
+            raise ValueError(f"staleness_eta must be >= 0, got "
+                             f"{hp.staleness_eta}")
+        self.hp = hp
+        self.kind = kind
+        self.n = len(shards)
+        self.seed = seed
+        self.K = hp.buffer_k or self.n
+        self.V = hp.version_window
+        self.eta = float(hp.staleness_eta)
+        self._solicit = solicit
+        self._latency = latency if latency is not None else LatencyModel(
+            self.n, hetero=0.0, jitter=0.0, seed=seed)
+        if self._latency.n != self.n:
+            raise ValueError(f"latency model is for n={self._latency.n} "
+                             f"clients, engine has N={self.n}")
+
+        key = jax.random.PRNGKey(seed)
+        g_params, state0, apply_loss, predict = _build_model(kind, key)
+        self._predict = predict
+        self._state0 = state0
+        self.d = sum(int(x.size)
+                     for x in jax.tree_util.tree_leaves(g_params))
+        self._unflatten = C.unflattener(g_params)
+        self._client_phase = C.make_client_phase(apply_loss, hp.lr)
+        self._g_opt = adam(hp.lr) if global_opt == "adam" else sgd(hp.lr)
+        self._wire_dtype = jnp.dtype(hp.wire_dtype)
+
+        # --- device state (mirrors the engine's layout) --------------------
+        n, d, V = self.n, self.d, self.V
+        params_s = C.broadcast_global(g_params, n)
+        self.state = ServiceState(
+            clock=jnp.float32(0.0),
+            next_done=jax.vmap(lambda i: self._latency.dispatch_s(
+                key, i, jnp.int32(0)))(jnp.arange(n, dtype=jnp.int32)
+                                       ).astype(jnp.float32),
+            sent_version=jnp.zeros((n,), jnp.int32),
+            n_dispatch=jnp.zeros((n,), jnp.int32),
+            version=jnp.int32(0),
+            ring=jax.tree_util.tree_map(
+                lambda p: jnp.broadcast_to(p[None], (V,) + p.shape), g_params),
+            g_params=g_params,
+            g_opt_state=self._g_opt.init(g_params),
+            buf=jnp.zeros((d,), jnp.float32),
+            buf_count=jnp.int32(0),
+            taken=jnp.zeros((n, d), bool),
+            solicited=jnp.zeros(
+                (n, hp.r if solicit == "dispatch" else 1), jnp.int32),
+            inflight=jnp.zeros((n if solicit == "dispatch" else 1, d), bool),
+            age=DeviceAgeState.create(d, n),
+            opt_s=jax.vmap(adam(hp.lr).init)(params_s),
+            state_s=C.stack_clients([state0] * n) if state0 else {},
+            samp=None,                       # filled below (needs store)
+            key=key,
+        )
+
+        self._store = DeviceShardStore(shards, hp.batch_size,
+                                       seed=seed + 17)
+        self._data = self._store.data
+        self.state = self.state._replace(samp=self._store.init_state())
+        if solicit == "dispatch":
+            self.state = self.state._replace(
+                **self._initial_solicitations(self.state))
+        self._eval_sets = build_eval_sets(shards, test)
+        self._eval = jax.jit(self._eval_impl)
+        self._chunks: dict = {}
+
+        # --- wire accounting (per landing / per dispatch) -------------------
+        ib = bytes_per_index(d)
+        if solicit == "report":
+            # the paper's uplink (k entries + the r-candidate report) and
+            # the previously-unbilled downlink: the PS's k-requested list
+            self._uplink_per_landing = bytes_per_round(
+                hp.k, d, wire_dtype=hp.wire_dtype) + hp.r * ib
+            self._downlink_per_dispatch = downlink_bytes_per_round(hp.k, d)
+        else:
+            # flipped protocol: the solicitation (r stalest indices) goes
+            # DOWN at dispatch; only k entries come up
+            self._uplink_per_landing = bytes_per_round(
+                hp.k, d, wire_dtype=hp.wire_dtype)
+            self._downlink_per_dispatch = downlink_bytes_per_round(hp.r, d)
+        self.cum_uplink = 0
+        self.cum_downlink = self._downlink_per_dispatch * self.n  # t=0 fleet
+        self.aggs_done = 0
+        self.events_done = 0
+        self.device_s = 0.0
+        self.recluster_s = 0.0
+
+    # ------------------------------------------------------------------
+    # jitted bodies
+    # ------------------------------------------------------------------
+    def _initial_solicitations(self, st: ServiceState) -> dict:
+        """Dispatch mode t=0: solicit the r stalest coordinates of every
+        client's cluster row, sequentially in client id order with
+        in-flight disjointness (the same discipline the event loop
+        maintains afterwards)."""
+        r = self.hp.r
+
+        def body(inflight, i):
+            cl = st.age.cluster_of[i]
+            masked = jnp.where(inflight[cl], jnp.int32(-1),
+                               st.age.cluster_age[cl])
+            _, sol = jax.lax.top_k(masked, r)
+            return inflight.at[cl, sol].set(True), sol.astype(jnp.int32)
+
+        inflight, solicited = jax.lax.scan(
+            body, jnp.zeros((self.n, self.d), bool),
+            jnp.arange(self.n, dtype=jnp.int32))
+        return {"inflight": inflight, "solicited": solicited}
+
+    def _select_landing(self, st: ServiceState, i, cl, g_i):
+        """The landing client's k upload coordinates + the updated
+        disjointness/solicitation state (mode-dependent)."""
+        hp = self.hp
+        if self._solicit == "report":
+            cand = client_candidates(g_i[None], hp.r, hp.candidates)[0]
+            idx = select_member_topk(st.age.cluster_age, st.taken, cand,
+                                     cl, k=hp.k,
+                                     disjoint=hp.disjoint_in_cluster)
+            taken = (st.taken.at[cl, idx].set(True, mode="drop")
+                     if hp.disjoint_in_cluster else st.taken)
+            return idx, taken, st.solicited, st.inflight
+        # dispatch mode: the PS solicited `solicited[i]` when it sent the
+        # model; the client uploads the k largest-|g| of those r
+        sub = st.solicited[i]
+        _, sel = jax.lax.top_k(jnp.abs(g_i)[sub], hp.k)
+        idx = sub[sel]
+        # the completed solicitation frees its coordinates for the
+        # cluster's next dispatches (solicitations are disjoint, so only
+        # client i holds these marks)
+        inflight = st.inflight.at[cl, sub].set(False)
+        return idx, st.taken, st.solicited, inflight
+
+    def _resolicit(self, st: ServiceState, inflight, cluster_age, i, cl):
+        """Dispatch mode re-dispatch: solicit the r stalest coordinates
+        of the client's (just-updated) cluster row, disjoint from the
+        cluster's other in-flight solicitations."""
+        masked = jnp.where(inflight[cl], jnp.int32(-1), cluster_age[cl])
+        _, sol = jax.lax.top_k(masked, self.hp.r)
+        sol = sol.astype(jnp.int32)
+        return (st.solicited.at[i].set(sol),
+                inflight.at[cl, sol].set(True))
+
+    def _event_impl(self, data, st: ServiceState):
+        """One arrival event: land, buffer, maybe flush, re-dispatch."""
+        hp = self.hp
+        n, d, V, K = self.n, self.d, self.V, self.K
+
+        # 1. pop the earliest in-flight completion (ties -> lowest id)
+        i = jnp.argmin(st.next_done).astype(jnp.int32)
+        t = st.next_done[i]
+
+        # 2. local phase against the snapshot of the version client i
+        #    was SENT — clipped to the ring's memory: versions older
+        #    than V-1 flushes ago were overwritten (staleness clip)
+        eff_v = jnp.maximum(st.sent_version[i], st.version - (V - 1))
+        s = st.version - eff_v
+        params_i = jax.tree_util.tree_map(lambda rg: rg[eff_v % V], st.ring)
+        bx, by, samp = self._store.draw_one(data, st.samp, hp.H, i)
+        opt_i = jax.tree_util.tree_map(lambda x: x[i], st.opt_s)
+        state_i = (jax.tree_util.tree_map(lambda x: x[i], st.state_s)
+                   if st.state_s else {})
+        _, opt_i, state_i, g_i, loss = self._client_phase(
+            params_i, opt_i, state_i, (bx, by))
+        opt_s = jax.tree_util.tree_map(
+            lambda full, one: full.at[i].set(one), st.opt_s, opt_i)
+        state_s = (jax.tree_util.tree_map(
+            lambda full, one: full.at[i].set(one), st.state_s, state_i)
+            if st.state_s else {})
+
+        # 3. upload coordinates (mode-dependent selection)
+        cl = st.age.cluster_of[i]
+        idx, taken, solicited, inflight = self._select_landing(
+            st, i, cl, g_i)
+
+        # 4. land in the buffer, staleness-discounted; eq. (2) on the
+        #    cluster row (+1, requested reset), freq counts the upload
+        vals = g_i[idx].astype(self._wire_dtype).astype(g_i.dtype)
+        w = jnp.power(1.0 + s.astype(jnp.float32), -self.eta)
+        vals = jnp.where(s > 0, vals * w.astype(vals.dtype), vals)
+        buf = st.buf.at[idx].add(vals.astype(jnp.float32), mode="drop")
+        buf_count = st.buf_count + 1
+        ca = st.age.cluster_age.at[cl].set(
+            member_age_row(st.age.cluster_age[cl], idx))
+        freq = st.age.freq.at[i, idx].add(1, mode="drop")
+
+        # 5. flush when K updates have landed: one global step on the
+        #    buffered sum, new snapshot into ring slot (version+1) % V.
+        #    lax.cond, NOT a where-select: cond branches compile as
+        #    separate XLA subcomputations, so the adam chain keeps the
+        #    exact fused arithmetic of the engine's in-round apply_global
+        #    (a fused-in select perturbs its FMA contraction by 1 ulp —
+        #    observed, and it breaks the degenerate bitwise pin). It
+        #    also runs the global update once per K events, not per
+        #    event.
+        flush = buf_count >= K
+        version = st.version + flush.astype(jnp.int32)
+
+        def do_flush(op):
+            buf, gp, go, ring, taken = op
+            new_p, new_o = apply_global(self._g_opt, self._unflatten,
+                                        buf, gp, go)
+            ring = jax.tree_util.tree_map(
+                lambda rg, p: rg.at[version % V].set(p), ring, new_p)
+            return (jnp.zeros_like(buf), new_p, new_o, ring,
+                    jnp.zeros_like(taken), jnp.int32(0))
+
+        def no_flush(op):
+            buf, gp, go, ring, taken = op
+            return buf, gp, go, ring, taken, buf_count
+
+        buf, g_params, g_opt_state, ring, taken, buf_count = jax.lax.cond(
+            flush, do_flush, no_flush,
+            (buf, st.g_params, st.g_opt_state, st.ring, taken))
+
+        # 6. re-dispatch client i with the post-flush version
+        nd = st.n_dispatch[i] + 1
+        lat = self._latency.dispatch_s(st.key, i, nd).astype(jnp.float32)
+        if self._solicit == "dispatch":
+            solicited, inflight = self._resolicit(
+                st._replace(solicited=solicited), inflight, ca, i, cl)
+
+        new_st = ServiceState(
+            clock=t,
+            next_done=st.next_done.at[i].set(t + lat),
+            sent_version=st.sent_version.at[i].set(version),
+            n_dispatch=st.n_dispatch.at[i].set(nd),
+            version=version,
+            ring=ring, g_params=g_params, g_opt_state=g_opt_state,
+            buf=buf, buf_count=buf_count, taken=taken,
+            solicited=solicited, inflight=inflight,
+            age=DeviceAgeState(ca, freq, st.age.cluster_of),
+            opt_s=opt_s, state_s=state_s, samp=samp, key=st.key)
+        metrics = {"loss": loss, "client": i, "staleness": s,
+                   "version": version, "flushed": flush, "clock": t,
+                   "idx": idx.astype(jnp.int32)}
+        return new_st, metrics
+
+    def _eval_impl(self, g_params, state_s):
+        accs = []
+        for i in range(self.n):
+            s_i = (jax.tree_util.tree_map(lambda x: x[i], state_s)
+                   if state_s else self._state0)
+            xe, ye = self._eval_sets[i]
+            logits = self._predict(g_params, s_i, xe)
+            accs.append(jnp.mean(
+                (jnp.argmax(logits, -1) == ye).astype(jnp.float32)))
+        return jnp.stack(accs)
+
+    def _chunk(self, length: int):
+        fn = self._chunks.get(length)
+        if fn is None:
+            def chunk(data, st):
+                return jax.lax.scan(
+                    lambda c, _: self._event_impl(data, c), st, None,
+                    length=length)
+            fn = self._chunks[length] = jax.jit(chunk)
+        return fn
+
+    # ------------------------------------------------------------------
+    # host control plane
+    # ------------------------------------------------------------------
+    def _advance(self, n_events: int) -> dict:
+        """Run ``n_events`` arrival events as one jitted scan chunk and
+        return the stacked (n_events, ...) metrics as numpy. The carry
+        round-trips through ``self.state``, so ANY chunking of the same
+        total event count replays the identical event sequence."""
+        t0 = time.perf_counter()
+        st, metrics = self._chunk(n_events)(self._data, self.state)
+        jax.block_until_ready(metrics["loss"])
+        self.device_s += time.perf_counter() - t0
+        self.state = st
+        self.events_done += n_events
+        return {k: np.asarray(v) for k, v in metrics.items()}
+
+    def _recluster(self):
+        """The every-M-aggregations host DBSCAN — the engine's recluster
+        path verbatim (eq. (3) similarity -> DBSCAN -> age merge). Runs
+        at flush boundaries, where the disjointness window is empty; in
+        dispatch mode the in-flight solicitation marks are re-keyed to
+        the new cluster rows."""
+        t0 = time.perf_counter()
+        new_ca, labels = _recluster_host_packed(
+            self.state.age, self.hp.eps, self.hp.min_pts)
+        age = DeviceAgeState(cluster_age=jnp.asarray(new_ca),
+                             freq=self.state.age.freq,
+                             cluster_of=jnp.asarray(labels, jnp.int32))
+        self.state = self.state._replace(age=age)
+        if self._solicit == "dispatch":
+            cl = age.cluster_of
+            inflight = jnp.zeros_like(self.state.inflight)
+            rows = jnp.repeat(cl[:, None], self.hp.r, axis=1)
+            inflight = inflight.at[rows, self.state.solicited].set(True)
+            self.state = self.state._replace(inflight=inflight)
+        self.recluster_s += time.perf_counter() - t0
+
+    def _next_stop(self, end: int, eval_every: int) -> int:
+        """Next aggregation count where the host must intervene:
+        recluster (every M aggregations), eval, or the end."""
+        a = self.aggs_done
+        stops = [end, a + eval_every - a % eval_every,
+                 a + self.hp.M - a % self.hp.M]
+        return min(stops)
+
+    def eval_acc(self) -> float:
+        t0 = time.perf_counter()
+        accs = self._eval(self.state.g_params, self.state.state_s)
+        jax.block_until_ready(accs)
+        self.device_s += time.perf_counter() - t0
+        return float(jnp.mean(accs))
+
+    @property
+    def cluster_of(self) -> np.ndarray:
+        return np.asarray(self.state.age.cluster_of).astype(np.int64)
+
+    @property
+    def age(self) -> DeviceAgeState:
+        return self.state.age
+
+    def run_async(self, aggregations: int, *, eval_every: int = 5,
+                  verbose: bool = False) -> ServiceResult:
+        """Drive the service until ``aggregations`` more buffer flushes
+        have happened (every flush consumes exactly K landings, so the
+        event count is ``aggregations * K``). Chunk boundaries align to
+        the every-M recluster and the eval cadence, both in aggregation
+        units; the carry round-trips through ``self.state`` so chained
+        calls continue the SAME event stream (chunk invariance is
+        pinned by tests/test_service.py)."""
+        t0 = time.time()
+        res = ServiceResult()
+        end = self.aggs_done + aggregations
+        while self.aggs_done < end:
+            stop = self._next_stop(end, eval_every)
+            n_aggs = stop - self.aggs_done
+            metrics = self._advance(n_aggs * self.K)
+            self.aggs_done = stop
+            # per-event traces + wire ledger
+            res.clients.extend(int(c) for c in metrics["client"])
+            res.staleness.extend(int(s) for s in metrics["staleness"])
+            res.event_clock.extend(float(c) for c in metrics["clock"])
+            res.requested.extend(np.asarray(metrics["idx"]))
+            self.cum_uplink += self._uplink_per_landing * len(
+                metrics["client"])
+            # every landing triggers exactly one re-dispatch
+            self.cum_downlink += self._downlink_per_dispatch * len(
+                metrics["client"])
+            assert int(metrics["flushed"].sum()) == n_aggs
+            if self.hp.method == "rage_k" and stop % self.hp.M == 0:
+                self._recluster()
+            if stop % eval_every == 0 or stop == end:
+                acc = self.eval_acc()
+                # window loss: mean over the LAST flush window's K
+                # landings (the engine's per-round loss, degenerately)
+                res.rounds.append(stop)
+                res.loss.append(float(metrics["loss"][-self.K:].mean()))
+                res.acc.append(acc)
+                res.uplink_bytes.append(self.cum_uplink)
+                res.downlink_bytes.append(self.cum_downlink)
+                res.clock.append(float(metrics["clock"][-1]))
+                res.cluster_labels.append(self.cluster_of)
+                if verbose:
+                    print(f"[async k={self.K} eta={self.eta} V={self.V}] "
+                          f"agg {stop:4d} t={res.clock[-1]:8.2f}s "
+                          f"loss={res.loss[-1]:.4f} acc={acc:.4f} "
+                          f"stale_max={max(res.staleness):d}")
+        res.wall_s = time.time() - t0
+        return res

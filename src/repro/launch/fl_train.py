@@ -14,7 +14,7 @@ import numpy as np
 from repro.configs.base import RAgeKConfig
 from repro.data.federated import paper_cifar_split, paper_mnist_split
 from repro.data.synthetic import cifar10_like, mnist_like
-from repro.fl import FederatedEngine
+from repro.fl import AsyncService, FederatedEngine, LatencyModel
 
 
 def main():
@@ -43,12 +43,43 @@ def main():
                     choices=("auto", "jnp", "pallas"),
                     help="sparse-aggregation backend (pallas = fused "
                          "scatter-add kernel; auto picks it on TPU)")
-    ap.add_argument("--driver", default="scan", choices=("step", "scan"),
+    ap.add_argument("--driver", default="scan",
+                    choices=("step", "scan", "async"),
                     help="round driver: 'step' dispatches one jitted "
                          "round at a time (host-paced, easiest to "
                          "inspect); 'scan' runs whole chunks of rounds "
                          "per dispatch via lax.scan (bit-identical, "
-                         "faster)")
+                         "faster); 'async' runs the event-driven "
+                         "buffered PS service plane (DESIGN.md §10) — "
+                         "--rounds then counts buffer FLUSHES, and "
+                         "--buffer-k/--staleness-eta/--version-window/"
+                         "--hetero/--jitter configure it")
+    ap.add_argument("--buffer-k", type=int, default=0,
+                    help="async driver: aggregate after K client "
+                         "updates land (FedBuff window; 0 -> N, which "
+                         "with --hetero 0 --jitter 0 and "
+                         "--version-window 1 is bit-identical to the "
+                         "sync drivers)")
+    ap.add_argument("--staleness-eta", type=float, default=0.5,
+                    help="async driver: exponent of the age-decayed "
+                         "staleness discount 1/(1+s)^eta on late "
+                         "arrivals")
+    ap.add_argument("--version-window", type=int, default=4,
+                    help="async driver: parameter snapshots the PS "
+                         "retains (staleness clips at V-1; V*d memory)")
+    ap.add_argument("--solicit", default="report",
+                    choices=("report", "dispatch"),
+                    help="async driver: 'report' keeps the paper's "
+                         "landing-time candidate protocol; 'dispatch' "
+                         "solicits the r stalest cluster coordinates at "
+                         "dispatch time (downlink-billed)")
+    ap.add_argument("--hetero", type=float, default=0.5,
+                    help="async driver: client speed heterogeneity "
+                         "(lognormal sigma of the per-client base "
+                         "latency; 0 = identical clients)")
+    ap.add_argument("--jitter", type=float, default=0.25,
+                    help="async driver: per-dispatch latency jitter "
+                         "(lognormal sigma; 0 = deterministic)")
     ap.add_argument("--candidates", default="threshold",
                     choices=("threshold", "sort"),
                     help="top-r candidate plane: 'threshold' computes "
@@ -110,7 +141,40 @@ def main():
     hp = RAgeKConfig(method=args.method, cafe_lam=args.cafe_lam,
                      candidates=args.candidates, schedule=args.schedule,
                      participation_m=args.participation_m,
-                     deadline_s=args.deadline_s, **defaults)
+                     deadline_s=args.deadline_s,
+                     buffer_k=args.buffer_k,
+                     staleness_eta=args.staleness_eta,
+                     version_window=args.version_window, **defaults)
+
+    if args.driver == "async":
+        latency = LatencyModel(len(shards), hetero=args.hetero,
+                               jitter=args.jitter, seed=args.seed)
+        svc = AsyncService(kind, shards, test, hp, seed=args.seed,
+                           latency=latency, solicit=args.solicit)
+        res = svc.run_async(args.rounds,
+                            eval_every=max(args.rounds // 20, 1),
+                            verbose=True)
+        summary = res.summary()
+        print("summary:", summary)
+        print("final clusters:", res.cluster_labels[-1].tolist())
+        if args.out:
+            with open(args.out, "w") as f:
+                json.dump({"driver": "async", "rounds": res.rounds,
+                           "acc": res.acc, "loss": res.loss,
+                           "uplink": res.uplink_bytes,
+                           "downlink": res.downlink_bytes,
+                           "clock": res.clock,
+                           "aggregations": summary["aggregations"],
+                           "staleness_hist": {
+                               str(s): c for s, c in
+                               res.staleness_hist().items()},
+                           "clusters": res.cluster_labels[-1].tolist(),
+                           "buffer_k": svc.K,
+                           "staleness_eta": hp.staleness_eta,
+                           "version_window": hp.version_window,
+                           "solicit": args.solicit},
+                          f, indent=1)
+        return
 
     engine = FederatedEngine(kind, shards, test, hp, seed=args.seed,
                              ef=args.ef, aggregate_impl=args.aggregate,

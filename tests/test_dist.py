@@ -130,3 +130,95 @@ def test_dense_sync_matches_plain_grad():
     # adam step of size lr towards 3.0
     np.testing.assert_allclose(np.asarray(p2["w"]),
                                np.asarray(params["w"]) + 0.1, rtol=1e-3)
+
+
+# ---------------------------------------------------------------------------
+# buffered (FedBuff-style) sync — the async service plane's collective
+# ---------------------------------------------------------------------------
+
+def _buffered_setup():
+    from repro.dist.sparse_sync import (init_age_state_sharded,
+                                        make_buffered_sync,
+                                        make_manual_sync)
+    mesh = make_host_mesh(1, 1)
+    grads = {"a": jnp.arange(-8.0, 8.0).reshape(4, 4),
+             "b": jnp.ones((6,)) * 0.5}
+    specs = jax.tree_util.tree_map(lambda _: P(), grads)
+    shapes = jax.tree_util.tree_map(
+        lambda g: jax.ShapeDtypeStruct(g.shape, g.dtype), grads)
+    kw = dict(method="rage_k", r=8, k=4, wire_dtype=jnp.float32)
+    return (grads, init_age_state_sharded,
+            make_manual_sync(mesh, specs, shapes, **kw),
+            lambda bk: make_buffered_sync(mesh, specs, shapes,
+                                          buffer_k=bk, **kw))
+
+
+def test_buffered_sync_k1_is_the_base_sync():
+    """buffer_k=1 flushes every call: call-by-call identical to the
+    unbuffered sync (values AND ages)."""
+    grads, init_ages, base, make_buf = _buffered_setup()
+    buf1 = make_buf(1)
+    shapes = jax.tree_util.tree_map(
+        lambda g: jax.ShapeDtypeStruct(g.shape, g.dtype), grads)
+    ages_b, ages_o = init_ages(shapes), init_ages(shapes)
+    b = buf1.init_buffer()
+    for _ in range(3):
+        sb, ages_b, _ = base(grads, ages_b)
+        so, ages_o, b, stats = buf1(grads, ages_o, b)
+        assert bool(stats["flushed"])
+        assert int(stats["buffered_shards"]) == 0
+        for k in sb:
+            np.testing.assert_array_equal(np.asarray(so[k]),
+                                          np.asarray(sb[k]))
+            np.testing.assert_array_equal(np.asarray(ages_o[k]),
+                                          np.asarray(ages_b[k]))
+
+
+def test_buffered_sync_flush_cadence_mean_and_aging():
+    """buffer_k=3: two buffering calls release a bitwise-zero update
+    while ages keep advancing exactly like the base sync (age is a
+    property of requests, not application); the third call flushes the
+    f32 mean of the three landed unions and resets the buffer."""
+    grads, init_ages, base, make_buf = _buffered_setup()
+    buf3 = make_buf(3)
+    shapes = jax.tree_util.tree_map(
+        lambda g: jax.ShapeDtypeStruct(g.shape, g.dtype), grads)
+    ages_b, ages_o = init_ages(shapes), init_ages(shapes)
+    b = buf3.init_buffer()
+    landed = {k: np.zeros(v.shape, np.float32) for k, v in grads.items()}
+    for step in range(3):
+        sb, ages_b, _ = base(grads, ages_b)
+        for k in landed:
+            landed[k] = landed[k] + np.asarray(sb[k], np.float32)
+        so, ages_o, b, stats = buf3(grads, ages_o, b)
+        for k in grads:
+            np.testing.assert_array_equal(np.asarray(ages_o[k]),
+                                          np.asarray(ages_b[k]))
+        if step < 2:
+            assert not bool(stats["flushed"])
+            assert int(stats["buffered_shards"]) == step + 1
+            assert all(not np.asarray(v).any() for v in
+                       jax.tree_util.tree_leaves(so))
+        else:
+            assert bool(stats["flushed"])
+            assert int(stats["buffered_shards"]) == 0
+            for k in grads:
+                np.testing.assert_array_equal(
+                    np.asarray(so[k]),
+                    (landed[k] / np.float32(3.0)).astype(np.float32))
+    # the buffer really reset: next call buffers from scratch
+    _, _, b, stats = buf3(grads, ages_o, b)
+    assert not bool(stats["flushed"])
+    assert int(stats["buffered_shards"]) == 1
+
+
+def test_buffered_sync_validates_k():
+    import pytest
+    from repro.dist.sparse_sync import make_buffered_sync
+    mesh = make_host_mesh(1, 1)
+    g = {"a": jnp.zeros((4,))}
+    specs = jax.tree_util.tree_map(lambda _: P(), g)
+    shapes = jax.tree_util.tree_map(
+        lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), g)
+    with pytest.raises(ValueError, match="buffer_k"):
+        make_buffered_sync(mesh, specs, shapes, buffer_k=0, r=2, k=1)

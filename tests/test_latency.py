@@ -1,0 +1,77 @@
+"""fl.latency.LatencyModel — the ONE simulated-time source shared by the
+synchronous participation plane (fl.schedule.Deadline) and the async PS
+service plane (fl.service.AsyncService), DESIGN.md §9/§10.
+
+Pins: the hetero=jitter=0 degenerate is EXACTLY 1.0 s (the async golden
+pin depends on it), Deadline prices rounds with the shared model,
+fold_in keying makes every draw recomputable in O(1), and sync_round_s
+is the straggler bound max_i dispatch_s the bench compares against.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.fl.latency import LatencyModel
+from repro.fl.schedule import Deadline
+
+
+def test_degenerate_is_exactly_one_second():
+    lat = LatencyModel(5, hetero=0.0, jitter=0.0, seed=3)
+    key = jax.random.PRNGKey(3)
+    np.testing.assert_array_equal(np.asarray(lat.base_s), 1.0)
+    for i in range(5):
+        for j in (0, 1, 7):
+            assert float(lat.dispatch_s(key, i, j)) == 1.0
+    np.testing.assert_array_equal(np.asarray(lat.round_s(key, 7)), 1.0)
+    np.testing.assert_array_equal(np.asarray(lat.sync_round_s(key, 4)), 1.0)
+
+
+def test_deadline_prices_rounds_with_the_shared_model():
+    dl = Deadline(8, 1.0, seed=5)
+    lat = LatencyModel(8, hetero=dl.hetero, jitter=dl.jitter, seed=5)
+    np.testing.assert_array_equal(np.asarray(dl.base_s),
+                                  np.asarray(lat.base_s))
+    key = jax.random.PRNGKey(0)
+    np.testing.assert_array_equal(
+        np.asarray(dl._late(key, 3)),
+        np.asarray(lat.round_s(key, 3)) > 1.0)
+
+
+def test_fold_in_recomputability():
+    """Any past event is recomputable from (key, coordinates) alone —
+    the property that lets the event loop carry no host-side queue."""
+    lat = LatencyModel(6, hetero=0.7, jitter=0.4, seed=1)
+    key = jax.random.PRNGKey(9)
+    a = float(lat.dispatch_s(key, 2, 5))
+    assert float(lat.dispatch_s(key, 2, 5)) == a
+    assert float(lat.dispatch_s(key, 2, 6)) != a     # next dispatch
+    assert float(lat.dispatch_s(key, 3, 5)) != a     # another client
+    np.testing.assert_array_equal(np.asarray(lat.round_s(key, 4)),
+                                  np.asarray(lat.round_s(key, 4)))
+
+
+def test_sync_round_is_the_straggler_bound():
+    lat = LatencyModel(7, hetero=1.0, jitter=0.5, seed=2)
+    key = jax.random.PRNGKey(0)
+    walls = np.asarray(lat.sync_round_s(key, 5))
+    expect = np.array([
+        max(float(lat.dispatch_s(key, i, t)) for i in range(7))
+        for t in range(5)], np.float32)
+    np.testing.assert_array_equal(walls, expect)
+
+
+def test_base_times_persistent_heterogeneous_and_jitter_free_draws():
+    lat = LatencyModel(64, hetero=1.0, jitter=0.0, seed=0)
+    assert float(jnp.std(lat.base_s)) > 0.1          # real heterogeneity
+    lat2 = LatencyModel(64, hetero=1.0, jitter=0.0, seed=0)
+    np.testing.assert_array_equal(np.asarray(lat.base_s),
+                                  np.asarray(lat2.base_s))
+    key = jax.random.PRNGKey(4)
+    for i in (0, 13):                 # jitter=0: every draw IS base_s[i]
+        assert float(lat.dispatch_s(key, i, 2)) == float(lat.base_s[i])
+
+
+def test_validates_n():
+    with pytest.raises(ValueError, match="n >= 1"):
+        LatencyModel(0)

@@ -1,0 +1,356 @@
+"""Async PS service plane (fl.service + fl.latency, DESIGN.md §10).
+
+1. Degenerate golden pin: at K=N, equal latencies (hetero=jitter=0) and
+   V=1 the event loop IS the synchronous Full engine — BIT-IDENTICAL
+   losses, accuracy, requested indices, cluster labels, params, ages,
+   freq and uplink across the round-3 recluster boundary, under both
+   the step and scan drivers; landings happen in client-id order with
+   zero staleness and the virtual clock ticks 1.0/round.
+2. Chunk invariance: run_async(T) == run_async(T1) + run_async(T2)
+   bitwise (the carry round-trips through the host untouched), plus a
+   hypothesis property over arbitrary chunkings and a pure-numpy host
+   replay of the argmin event loop (arrival order is a function of
+   (seed, latency) alone).
+3. Buffer/ring semantics: flush exactly every K-th landing, staleness
+   clipped at V-1 (V=1 forces fresh reads even under stragglers).
+4. Dispatch-time solicitation: per-cluster in-flight disjointness, the
+   inflight mask consistent with the solicitation table, downlink
+   billed r indices per dispatch (uplink drops the r-report).
+5. Constructor validation + the draw_one sampler-row pin the event
+   loop's data independence rests on.
+6. FederatedEngine.close() race regression: concurrent close() /
+   _recluster_join() apply a pending recluster exactly once.
+"""
+import threading
+from concurrent.futures import ThreadPoolExecutor
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import RAgeKConfig
+from repro.core.compression import (bytes_per_index, bytes_per_round,
+                                    downlink_bytes_per_round)
+from repro.data.federated import paper_mnist_split
+from repro.data.pipeline import DeviceShardStore
+from repro.data.synthetic import mnist_like
+from repro.fl import AsyncService, FederatedEngine, LatencyModel
+
+HP = dict(r=30, k=6, H=2, M=3, lr=2e-3, batch_size=16)
+ROUNDS = 4  # crosses the round-3 recluster boundary
+
+
+@pytest.fixture(scope="module")
+def mnist_setup():
+    (xtr, ytr), test = mnist_like(n_train=1200, n_test=400, seed=0)
+    return paper_mnist_split(xtr, ytr, seed=0), test
+
+
+def _hp(**over):
+    base = dict(HP)
+    base.update(over)
+    return RAgeKConfig(method="rage_k", **base)
+
+
+def _leaves_equal(a, b):
+    la = jax.tree_util.tree_leaves(a)
+    lb = jax.tree_util.tree_leaves(b)
+    return len(la) == len(lb) and all(
+        np.array_equal(np.asarray(x), np.asarray(y))
+        for x, y in zip(la, lb))
+
+
+# ---------------------------------------------------------------------------
+# 1. degenerate golden pin vs the synchronous engine
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def degenerate_pin(mnist_setup):
+    shards, test = mnist_setup
+    hp = _hp()
+    eng = FederatedEngine("mlp", shards, test, hp, seed=0)
+    er = eng.run(ROUNDS, eval_every=1)
+    eng.close()
+    svc = AsyncService("mlp", shards, test, hp, seed=0)  # K=N, V=1, lat=1s
+    sr = svc.run_async(ROUNDS, eval_every=1)
+    return eng, er, svc, sr
+
+
+def test_degenerate_pin_curves(degenerate_pin):
+    _, er, _, sr = degenerate_pin
+    assert sr.rounds == er.rounds == list(range(1, ROUNDS + 1))
+    assert sr.loss == er.loss
+    assert sr.acc == er.acc
+    assert sr.uplink_bytes == er.uplink_bytes
+
+
+def test_degenerate_pin_requests_and_labels(degenerate_pin):
+    _, er, svc, sr = degenerate_pin
+    req_e = np.stack([np.asarray(r) for r in er.requested])   # (T, N, k)
+    req_s = np.stack(sr.requested).reshape(ROUNDS, svc.n, svc.hp.k)
+    np.testing.assert_array_equal(req_e, req_s)
+    assert all(np.array_equal(a, b) for a, b in
+               zip(er.cluster_labels, sr.cluster_labels))
+
+
+def test_degenerate_pin_final_state(degenerate_pin):
+    eng, _, svc, _ = degenerate_pin
+    assert _leaves_equal(eng.g_params, svc.state.g_params)
+    np.testing.assert_array_equal(np.asarray(eng.age.cluster_age),
+                                  np.asarray(svc.age.cluster_age))
+    np.testing.assert_array_equal(np.asarray(eng.age.freq),
+                                  np.asarray(svc.age.freq))
+
+
+def test_degenerate_event_discipline(degenerate_pin):
+    _, _, svc, sr = degenerate_pin
+    n = svc.n
+    assert sr.clients == list(range(n)) * ROUNDS   # client-id order
+    assert max(sr.staleness) == 0                  # everyone fresh (V=1)
+    np.testing.assert_array_equal(
+        np.asarray(sr.clock), np.arange(1, ROUNDS + 1, dtype=np.float32))
+
+
+def test_degenerate_pin_scan_driver(mnist_setup, degenerate_pin):
+    shards, test = mnist_setup
+    _, _, svc, sr = degenerate_pin
+    eng = FederatedEngine("mlp", shards, test, _hp(), seed=0)
+    er = eng.run_scanned(ROUNDS, eval_every=1)
+    eng.close()
+    assert sr.loss == er.loss and sr.acc == er.acc
+    assert _leaves_equal(eng.g_params, svc.state.g_params)
+
+
+# ---------------------------------------------------------------------------
+# 2. chunk invariance + arrival-order determinism (production config)
+# ---------------------------------------------------------------------------
+
+def _prod_svc(mnist_setup, **over):
+    shards, test = mnist_setup
+    hp = _hp(buffer_k=over.pop("buffer_k", 4),
+             version_window=over.pop("version_window", 4),
+             staleness_eta=0.5)
+    lat = LatencyModel(len(shards), hetero=1.0, jitter=0.25, seed=0)
+    return AsyncService("mlp", shards, test, hp, seed=0, latency=lat,
+                        **over)
+
+
+def test_chunk_invariance(mnist_setup):
+    a = _prod_svc(mnist_setup)
+    ra = a.run_async(9, eval_every=3)
+    b = _prod_svc(mnist_setup)
+    rb1 = b.run_async(4, eval_every=3)
+    rb2 = b.run_async(5, eval_every=3)
+    assert ra.clients == rb1.clients + rb2.clients
+    assert ra.staleness == rb1.staleness + rb2.staleness
+    assert ra.event_clock == rb1.event_clock + rb2.event_clock
+    assert _leaves_equal(a.state.g_params, b.state.g_params)
+    np.testing.assert_array_equal(np.asarray(a.age.cluster_age),
+                                  np.asarray(b.age.cluster_age))
+    # staleness respects the ring's memory bound
+    assert max(ra.staleness) <= a.V - 1
+
+
+def test_event_order_matches_host_replay(mnist_setup):
+    """The arrival order is a pure function of (seed, latency): a numpy
+    replay of the argmin loop — fold_in draws, f32 clock arithmetic,
+    first-occurrence ties — reproduces the device event stream."""
+    svc = _prod_svc(mnist_setup)
+    res = svc.run_async(3, eval_every=3)
+    n, key, lat = svc.n, jax.random.PRNGKey(0), svc._latency
+    nd = np.zeros(n, np.int64)
+    next_done = np.array([float(lat.dispatch_s(key, i, 0))
+                          for i in range(n)], np.float32)
+    clients, clocks = [], []
+    for _ in range(len(res.clients)):
+        i = int(np.argmin(next_done))          # ties -> lowest id
+        t = next_done[i]
+        clients.append(i)
+        clocks.append(t)
+        nd[i] += 1
+        next_done[i] = np.float32(
+            t + np.float32(float(lat.dispatch_s(key, i, int(nd[i])))))
+    assert res.clients == clients
+    np.testing.assert_array_equal(
+        np.asarray(res.event_clock, np.float32),
+        np.asarray(clocks, np.float32))
+
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+
+    @settings(max_examples=3, deadline=None)
+    @given(split=st.sampled_from([1, 4, 7]))
+    def test_arrival_order_invariant_to_chunking(mnist_setup, split):
+        """Any two-chunk split of the same aggregation total replays the
+        identical event stream (clients, staleness, clocks)."""
+        a = _prod_svc(mnist_setup)
+        ra = a.run_async(8, eval_every=8)
+        b = _prod_svc(mnist_setup)
+        rb1 = b.run_async(split, eval_every=8)
+        rb2 = b.run_async(8 - split, eval_every=8)
+        assert ra.clients == rb1.clients + rb2.clients
+        assert ra.staleness == rb1.staleness + rb2.staleness
+        assert ra.event_clock == rb1.event_clock + rb2.event_clock
+except ImportError:                                    # pragma: no cover
+    pass
+
+
+# ---------------------------------------------------------------------------
+# 3. buffer / version-ring semantics
+# ---------------------------------------------------------------------------
+
+def test_flush_exactly_every_kth_landing(mnist_setup):
+    svc = _prod_svc(mnist_setup)                       # K=4
+    metrics = svc._advance(12)
+    flushed = metrics["flushed"].reshape(3, 4)
+    assert not flushed[:, :-1].any() and flushed[:, -1].all()
+    # version counts flushes; buf_count cycles back to zero at each
+    assert int(svc.state.version) == 3
+    assert int(svc.state.buf_count) == 0
+    np.testing.assert_array_equal(np.asarray(svc.state.buf), 0.0)
+
+
+def test_version_window_one_forces_fresh_reads(mnist_setup):
+    """V=1 keeps only the live params: even with stragglers in flight
+    the staleness clip leaves nothing to be late against."""
+    svc = _prod_svc(mnist_setup, buffer_k=2, version_window=1)
+    res = svc.run_async(4, eval_every=4)
+    assert max(res.staleness) == 0
+
+
+# ---------------------------------------------------------------------------
+# 4. dispatch-time solicitation
+# ---------------------------------------------------------------------------
+
+def test_dispatch_solicitation_disjoint_and_billed(mnist_setup):
+    svc = _prod_svc(mnist_setup, solicit="dispatch")
+    # t=0 fleet solicitation: r unique coords per member, disjoint
+    # across each cluster, inflight marking exactly the union. (After a
+    # recluster MERGES clusters, solicitations drawn under the old
+    # labels may overlap — disjointness is per-dispatch discipline, not
+    # a global invariant, so it is only asserted on the clean slate.)
+    sol = np.asarray(svc.state.solicited)              # (N, r)
+    inflight = np.asarray(svc.state.inflight)          # (N, d)
+    cl = np.asarray(svc.state.age.cluster_of)
+    for c in np.unique(cl):
+        members = np.where(cl == c)[0]
+        coords = sol[members].ravel()
+        assert len(set(coords.tolist())) == len(members) * svc.hp.r
+        assert set(np.where(inflight[c])[0].tolist()) == set(
+            coords.tolist())
+    res = svc.run_async(3, eval_every=3)
+    # each client still holds r distinct solicited coordinates
+    sol = np.asarray(svc.state.solicited)
+    assert all(len(set(row.tolist())) == svc.hp.r for row in sol)
+    n_events = len(res.clients)
+    d, hp = svc.d, svc.hp
+    ib = bytes_per_index(d)
+    # uplink drops the r-report (the PS already chose the candidates);
+    # the solicitation goes DOWN: r indices per dispatch, fleet at t=0
+    assert res.uplink_bytes[-1] == n_events * bytes_per_round(
+        hp.k, d, wire_dtype=hp.wire_dtype)
+    assert res.downlink_bytes[-1] == (svc.n + n_events) * hp.r * ib
+    assert (downlink_bytes_per_round(hp.r, d) == hp.r * ib)
+    # every upload comes from its client's solicitation list
+    req = np.stack(res.requested)                      # (events, k)
+    assert req.shape == (n_events, hp.k)
+
+
+def test_report_mode_bills_the_k_request_downlink(degenerate_pin):
+    _, _, svc, sr = degenerate_pin
+    d, hp, n = svc.d, svc.hp, svc.n
+    events = len(sr.clients)
+    assert sr.downlink_bytes[-1] == (n + events) * downlink_bytes_per_round(
+        hp.k, d)
+    assert sr.uplink_bytes[-1] == events * (
+        bytes_per_round(hp.k, d, wire_dtype=hp.wire_dtype)
+        + hp.r * bytes_per_index(d))
+
+
+# ---------------------------------------------------------------------------
+# 5. validation + the sampler-row independence pin
+# ---------------------------------------------------------------------------
+
+def test_constructor_validation(mnist_setup):
+    shards, test = mnist_setup
+    mk = lambda hp, **kw: AsyncService("mlp", shards, test, hp, **kw)
+    with pytest.raises(ValueError, match="rAge-k"):
+        mk(RAgeKConfig(method="top_k", **HP))
+    with pytest.raises(ValueError, match="solicit"):
+        mk(_hp(), solicit="queue")
+    with pytest.raises(ValueError):
+        mk(_hp(k=40))                                  # r < k
+    with pytest.raises(ValueError, match="version_window"):
+        mk(_hp(version_window=0))
+    with pytest.raises(ValueError, match="buffer_k"):
+        mk(_hp(buffer_k=len(shards) + 1))
+    with pytest.raises(ValueError, match="staleness_eta"):
+        mk(_hp(staleness_eta=-0.5))
+    with pytest.raises(ValueError, match="latency model"):
+        mk(_hp(), latency=LatencyModel(len(shards) + 3))
+
+
+def test_draw_one_advances_only_the_landing_row(mnist_setup):
+    """The event loop's data independence: draw_one(i) is bitwise the
+    i-th row of the batched draw and leaves every other sampler row
+    untouched, so landing order cannot perturb anyone else's stream."""
+    shards, _ = mnist_setup
+    store = DeviceShardStore(shards, 16, seed=17)
+    st0 = store.init_state()
+    bx_all, by_all, st_all = store.draw(store.data, st0, 3)
+    i = 4
+    bx, by, st_one = store.draw_one(store.data, st0, 3, jnp.int32(i))
+    np.testing.assert_array_equal(np.asarray(bx), np.asarray(bx_all[i]))
+    np.testing.assert_array_equal(np.asarray(by), np.asarray(by_all[i]))
+    others = np.arange(store.n) != i
+    for name in ("order", "pos", "key"):
+        full0 = np.asarray(getattr(st0, name))
+        after = np.asarray(getattr(st_one, name))
+        np.testing.assert_array_equal(after[others], full0[others])
+        np.testing.assert_array_equal(after[i],
+                                      np.asarray(getattr(st_all, name))[i])
+
+
+# ---------------------------------------------------------------------------
+# 6. engine close() race regression
+# ---------------------------------------------------------------------------
+
+def test_close_applies_pending_recluster_exactly_once(mnist_setup,
+                                                      monkeypatch):
+    shards, test = mnist_setup
+    eng = FederatedEngine("mlp", shards, test, _hp(), seed=0)
+    applied = []
+    orig = FederatedEngine._apply_recluster
+
+    def counting(self, ca, labels):
+        applied.append(1)
+        return orig(self, ca, labels)
+
+    monkeypatch.setattr(FederatedEngine, "_apply_recluster", counting)
+    ca0 = np.asarray(eng.age.cluster_age)
+    labels0 = np.asarray(eng.age.cluster_of)
+    gate = threading.Event()
+
+    def work():
+        gate.wait(10)
+        return (ca0, labels0), 0.125
+
+    eng._recluster_pool = ThreadPoolExecutor(max_workers=1,
+                                             thread_name_prefix="recluster")
+    eng._recluster_future = eng._recluster_pool.submit(work)
+    threads = ([threading.Thread(target=eng.close) for _ in range(4)]
+               + [threading.Thread(target=eng._recluster_join)
+                  for _ in range(4)])
+    for th in threads:
+        th.start()
+    gate.set()
+    for th in threads:
+        th.join(20)
+    assert sum(applied) == 1                 # exactly one claimant won
+    assert eng._recluster_future is None
+    assert eng._recluster_pool is None       # exactly one shutdown
+    eng.close()                              # idempotent afterwards
+    assert sum(applied) == 1
