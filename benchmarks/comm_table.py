@@ -7,16 +7,36 @@ candidate report included only for the active clients — and the
 PS->client DOWNLINK control traffic the uplink tables ignore: the sync
 rAge-k PS sends each client its k requested indices per round, the
 async service's dispatch-time solicitation sends the r stalest instead
-(DESIGN.md §10).
+(DESIGN.md §10). The ``active_compute`` rows put the COMPUTE budget
+next to the wire budget: under the gathered compute plane (DESIGN.md
+§11) a partial round also runs only m/N of the local-phase training
+FLOPs — measured ratios, when benchmarks/engine_bench.py has run, with
+the analytic m/N fraction as the fallback.
 """
 from __future__ import annotations
 
-from benchmarks.common import save_json
+import json
+import os
+
+from benchmarks.common import art_dir, save_json
 from repro.core.compression import (bytes_per_index, bytes_per_round,
                                     downlink_bytes_per_round)
 
 
+def _measured_compute() -> dict | None:
+    """The active_compute section of BENCH_engine.json, if that bench
+    has produced one (CI runs it first; standalone invocations fall
+    back to the analytic fraction)."""
+    path = os.path.join(art_dir("bench"), "BENCH_engine.json")
+    try:
+        with open(path) as f:
+            return json.load(f).get("active_compute")
+    except (OSError, ValueError):
+        return None
+
+
 def main(fast: bool = True):
+    measured = _measured_compute()
     settings = {
         "mnist (d=39,760, r=75, k=10)": dict(d=39_760, r=75, k=10, n=10),
         "cifar (d=2,515,338, r=2500, k=100)": dict(d=2_515_338, r=2500,
@@ -63,11 +83,26 @@ def main(fast: bool = True):
                     s["r"], s["d"], m_active=n)},
             "round_total_incl_downlink": full_round + n * dl_sync,
         }
+        # compute next to wire (DESIGN.md §11): the gathered plane cuts
+        # the local-phase FLOPs to ~m/N of the full round too — the
+        # measured jitted-HLO ratio when engine_bench has run, the
+        # analytic fraction otherwise (selection/aggregation tails keep
+        # the measured value above m/N)
+        ac = {"wire_fraction_of_full": partial_round / full_round,
+              "flops_fraction_analytic": m / n}
+        if measured is not None:
+            ac["flops_ratio_measured_m_quarter"] = measured[
+                "flops_ratio_m8"]
+            ac["speedup_measured_m_quarter"] = measured["speedup_m8"]
+            ac["measured_at"] = {"n": measured["n_clients"],
+                                 "m": measured["gathered_m8"]["m_bound"]}
+        table[name]["active_compute"] = ac
         rows.append((f"comm:{name}", 0.0,
                      f"dense={dense}B sparse={sparse_rep}B "
                      f"x{dense / sparse_rep:.0f} less; "
                      f"round m={m}/{n}: {partial_round}B; "
-                     f"downlink k-req={dl_sync}B r-solicit={dl_async}B"))
+                     f"downlink k-req={dl_sync}B r-solicit={dl_async}B; "
+                     f"compute m/N={m / n:.2f}"))
     save_json("comm_table", table)
     return rows
 

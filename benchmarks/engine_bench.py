@@ -15,6 +15,10 @@
   (client-level mean/peak AoI, coordinate-level cluster_age mean/peak)
   — at EQUAL uplink bytes the AoI-balancing scheduler should show the
   lower peak client AoI than uniform sampling;
+* COMPUTE plane (DESIGN.md §11): gathered (train only the m active
+  clients) vs masked (train all N, discard) on a 32-client split at
+  m ∈ {N, N/4, N/16} — measured rounds/sec plus the compiled round's
+  HLO FLOPs, which must scale with the scheduler's static m bound;
 * ASYNC SERVICE plane (DESIGN.md §10): the event-driven buffered PS
   under a straggler-heavy latency draw vs the lockstep engine on the
   SAME LatencyModel, at EQUAL uplink bytes (equal landings): the sync
@@ -173,6 +177,79 @@ def _async_service(shards, test, sync_rounds: int) -> dict:
     }
 
 
+def _active_compute(rounds: int, repeats: int) -> dict:
+    """The compute plane (DESIGN.md §11) at scale: a 32-client equal
+    split, uniform participation at m ∈ {N, N/4, N/16}, gathered vs
+    masked. Two measurements per point:
+
+    * rounds/sec of the scanned driver (interleaved best-of) — the
+      wall-clock win of training m rows instead of N;
+    * the compiled round's HLO FLOPs (``cost_analysis`` on the jitted
+      program) — the structural claim that local-phase cost scales with
+      the scheduler's static m bound, independent of machine noise.
+
+    The m=N row runs the masked program (auto: no cut to exploit) and
+    doubles as the reference denominator."""
+    from repro.launch.dryrun import cost_dict
+
+    n, per = 32, 100
+    (xtr, ytr), test = mnist_like(n_train=n * per, n_test=500, seed=0)
+    shards = [(xtr[i * per:(i + 1) * per], ytr[i * per:(i + 1) * per])
+              for i in range(n)]
+
+    def build(m, compute):
+        hp = RAgeKConfig(r=75, k=10, H=4, M=rounds + 1, lr=2e-3,
+                         batch_size=32, method="rage_k",
+                         schedule="uniform", participation_m=m)
+        return FederatedEngine("mlp", shards, test, hp, seed=0,
+                               compute=compute)
+
+    def flops(engine):
+        ns, ms = engine._seg_bounds()
+        compiled = engine._round.lower(engine._data, engine._pack(),
+                                       num_segments=ns,
+                                       max_seg=ms).compile()
+        return float(cost_dict(compiled).get("flops", 0.0))
+
+    variants = {"masked_m32": build(n, "masked"),
+                "masked_m8": build(n // 4, "masked"),
+                "gathered_m8": build(n // 4, "gathered"),
+                "gathered_m2": build(n // 16, "gathered")}
+    out = {"n_clients": n, "rounds": rounds,
+           "m_values": [n, n // 4, n // 16]}
+    for name, engine in variants.items():
+        out[name] = {"m_bound": engine._scheduler.m_bound,
+                     "compute": engine._compute,
+                     "round_flops": flops(engine)}
+        engine.run_scanned(rounds, eval_every=rounds)   # compile + warm
+    best, _ = interleaved_best(
+        {name: (lambda e_=engine: e_.run_scanned(rounds,
+                                                 eval_every=rounds))
+         for name, engine in variants.items()},
+        repeats=repeats)
+    for name in variants:
+        out[name]["rounds_per_s"] = rounds / best[name]
+        out[name]["wall_s"] = best[name]
+    ref = out["masked_m8"]
+    out["speedup_m8"] = (out["gathered_m8"]["rounds_per_s"]
+                         / ref["rounds_per_s"])
+    out["flops_ratio_m8"] = (out["gathered_m8"]["round_flops"]
+                             / ref["round_flops"])
+    out["flops_ratio_m2"] = (out["gathered_m2"]["round_flops"]
+                             / ref["round_flops"])
+    out["gathered_beats_masked_at_m8"] = out["speedup_m8"] > 1.0
+    # the structural claim: FLOPs follow the m bound (m/N + the
+    # m-independent selection/aggregation tail keeps it below 1/2 at
+    # m = N/4)
+    out["flops_scale_with_m"] = (
+        out["gathered_m2"]["round_flops"]
+        < out["gathered_m8"]["round_flops"]
+        < ref["round_flops"]) and out["flops_ratio_m8"] < 0.5
+    for engine in variants.values():
+        engine.close()
+    return out
+
+
 def main(fast: bool = True):
     # 5-round smoke for CI; more repeats because short walls are noisy
     rounds, repeats = (5, 9) if fast else (20, 5)
@@ -247,6 +324,17 @@ def main(fast: bool = True):
                  f"(K={asv['buffer_k']}, "
                  f"stale_mean={asv['staleness_mean']:.2f}, "
                  f"uplink_matched={asv['uplink_matched']})"))
+
+    # compute plane (DESIGN.md §11): gathered vs masked at m < N
+    out["active_compute"] = ac = _active_compute(
+        rounds, max(repeats // 3, 2))
+    rows.append(("active_compute_m8",
+                 1e6 / max(ac["gathered_m8"]["rounds_per_s"], 1e-9),
+                 f"gathered={ac['gathered_m8']['rounds_per_s']:.2f}/s "
+                 f"masked={ac['masked_m8']['rounds_per_s']:.2f}/s "
+                 f"x{ac['speedup_m8']:.2f} "
+                 f"(flops_ratio={ac['flops_ratio_m8']:.3f}, "
+                 f"scales={ac['flops_scale_with_m']})"))
 
     save_json("BENCH_engine", out)
     rows.append(("engine_scan_speedup", 0.0, f"x{speedup:.2f}"))

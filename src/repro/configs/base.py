@@ -238,3 +238,57 @@ class RAgeKConfig:
     buffer_k: int = 0                # 0 -> N (sync-equivalent window)
     staleness_eta: float = 0.5
     version_window: int = 1
+
+    # population-independent validation at CONSTRUCTION time, so a bad
+    # flag fails with a clear ValueError here instead of a shape error
+    # deep inside a jitted round (N-dependent checks — participation_m
+    # <= N, buffer_k <= N — stay with the engine/service/scheduler,
+    # which know the population). The literals mirror
+    # core.strategies.STRATEGIES / CANDIDATE_IMPLS / fl.schedule — kept
+    # inline so configs import nothing heavier than dataclasses.
+    _METHODS = ("rage_k", "rtop_k", "top_k", "random_k", "dense", "cafe")
+    _CANDIDATES = ("sort", "threshold")
+    _SCHEDULES = ("full", "uniform", "aoi", "deadline")
+    _WIRE_DTYPES = ("float32", "bfloat16", "float16")
+
+    def __post_init__(self):
+        if self.method not in self._METHODS:
+            raise ValueError(f"method must be one of {self._METHODS}, "
+                             f"got {self.method!r}")
+        if self.candidates not in self._CANDIDATES:
+            raise ValueError(f"candidates must be one of "
+                             f"{self._CANDIDATES}, got {self.candidates!r}")
+        if self.schedule not in self._SCHEDULES:
+            raise ValueError(f"schedule must be one of {self._SCHEDULES}, "
+                             f"got {self.schedule!r}")
+        if self.wire_dtype not in self._WIRE_DTYPES:
+            raise ValueError(f"wire_dtype must be one of "
+                             f"{self._WIRE_DTYPES}, got {self.wire_dtype!r}")
+        for name in ("r", "k", "H", "M", "batch_size", "min_pts"):
+            if getattr(self, name) < 1:
+                raise ValueError(f"{name} must be >= 1, "
+                                 f"got {getattr(self, name)}")
+        if self.method in ("rage_k", "rtop_k", "cafe") and self.r < self.k:
+            raise ValueError(
+                f"method {self.method!r} selects k of the top-r "
+                f"candidates; need r >= k (got r={self.r}, k={self.k})")
+        for name in ("lr", "eps"):
+            if getattr(self, name) <= 0:
+                raise ValueError(f"{name} must be > 0, "
+                                 f"got {getattr(self, name)}")
+        # 0 is the "use the default" sentinel for both schedule knobs
+        if self.participation_m < 0:
+            raise ValueError(f"participation_m must be >= 0 (0 -> "
+                             f"max(N // 4, 1)), got {self.participation_m}")
+        if self.deadline_s < 0:
+            raise ValueError(f"deadline_s must be >= 0 (0 -> 1.0), "
+                             f"got {self.deadline_s}")
+        if self.buffer_k < 0:
+            raise ValueError(f"buffer_k must be >= 0 (0 -> N), "
+                             f"got {self.buffer_k}")
+        if self.staleness_eta < 0:
+            raise ValueError(f"staleness_eta must be >= 0, "
+                             f"got {self.staleness_eta}")
+        if self.version_window < 1:
+            raise ValueError(f"version_window must be >= 1, "
+                             f"got {self.version_window}")

@@ -211,15 +211,17 @@ class RAgeK:
                          num_segments: int | None = None,
                          max_seg: int | None = None,
                          disjoint: bool = True, impl: str = "jnp",
-                         active=None):
+                         active=None, cands=None, d: int | None = None):
         """Cluster-coordinated batched selection (engine PS path); see
         :func:`segmented_rage_select`. ``active`` is the participation
-        plane's (N,) mask (DESIGN.md §9)."""
+        plane's (N,) mask (DESIGN.md §9); ``cands``/``d`` admit a
+        precomputed report with no (N, d) gradient matrix at all
+        (DESIGN.md §11)."""
         return segmented_rage_select(
             G, cluster_age, cluster_of, r=self.r, k=self.k,
             num_segments=num_segments, max_seg=max_seg,
             disjoint=disjoint, impl=impl, candidates=self.candidates,
-            active=active)
+            active=active, cands=cands, d=d)
 
 
 @dataclass(frozen=True)
@@ -378,7 +380,8 @@ def segmented_rage_select(G: jnp.ndarray, cluster_age: jnp.ndarray,
                           disjoint: bool = True, impl: str = "jnp",
                           cands: jnp.ndarray | None = None,
                           candidates: str = "sort",
-                          active: jnp.ndarray | None = None):
+                          active: jnp.ndarray | None = None,
+                          d: int | None = None):
     """Paper Algorithm 1 steps 2-3 + eq. (2) in the segmented per-cluster
     formulation: the disjointness recursion runs only WITHIN each padded
     cluster (scan length = max_seg, not N) and clusters run in parallel
@@ -405,8 +408,22 @@ def segmented_rage_select(G: jnp.ndarray, cluster_age: jnp.ndarray,
     commute and the disjointness/tie-break contract stays the
     within-cluster ACTIVE client order. Inactive clients' idx rows
     return the sentinel d ("no request"). active=None == all-True.
+
+    ``G`` may be None when ``cands`` is a precomputed report and ``d``
+    (the static gradient dimension) is given — the compute plane's
+    fused-report hand-off (DESIGN.md §11): selection then never touches
+    an (N, d) gradient matrix. ``cands`` rows of inactive clients are
+    never read (they are not packed), so a gathered round may scatter
+    its compact (m, r) report into any full-N layout.
     """
-    n, d = G.shape
+    if G is None:
+        if cands is None or d is None:
+            raise ValueError("segmented_rage_select: G=None needs a "
+                             "precomputed cands report AND the static "
+                             "gradient dim d")
+        n = cluster_of.shape[0]
+    else:
+        n, d = G.shape
     if num_segments is None:
         num_segments = n
     if max_seg is None:

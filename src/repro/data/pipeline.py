@@ -110,11 +110,12 @@ class DeviceShardStore:
         return SamplerState(order=order,
                             pos=jnp.zeros((self.n,), jnp.int32), key=key)
 
-    def _draw_client(self, xi, yi, length, order, pos, key, H: int):
-        """H batches of ONE client from its shard + sampler row — the
-        shared inner of the batched :meth:`draw` (its vmap) and the
-        per-arrival :meth:`draw_one` (a single application, bitwise the
-        corresponding vmapped row)."""
+    def _sel_client(self, length, order, pos, key, H: int):
+        """Advance ONE client's sampler H steps, returning the (H, bs)
+        sample-index matrix instead of gathered batches — the sampler
+        math (epoch wrap, reshuffle, cursor) lives HERE and nowhere
+        else, so every draw flavor (:meth:`draw`, :meth:`draw_one`,
+        :meth:`draw_gathered`) sees bit-identical epochs."""
         bs, cap = self.bs, self.capacity
 
         def step(carry, _):
@@ -124,11 +125,21 @@ class DeviceShardStore:
             order = jnp.where(wrap, self._perm(sub, length, cap), order)
             pos = jnp.where(wrap, 0, pos)
             sel = jax.lax.dynamic_slice(order, (pos,), (bs,))
-            return ((order, pos + bs, key),
-                    (jnp.take(xi, sel, axis=0), jnp.take(yi, sel, axis=0)))
+            return (order, pos + bs, key), sel
 
-        (order, pos, key), (bx, by) = jax.lax.scan(
+        (order, pos, key), sel = jax.lax.scan(
             step, (order, pos, key), None, length=H)
+        return sel, order, pos, key
+
+    def _draw_client(self, xi, yi, length, order, pos, key, H: int):
+        """H batches of ONE client from its shard + sampler row — the
+        shared inner of the batched :meth:`draw` (its vmap) and the
+        per-arrival :meth:`draw_one` (a single application, bitwise the
+        corresponding vmapped row)."""
+        sel, order, pos, key = self._sel_client(length, order, pos, key, H)
+        flat = sel.reshape(-1)
+        bx = jnp.take(xi, flat, axis=0).reshape(sel.shape + xi.shape[1:])
+        by = jnp.take(yi, flat, axis=0).reshape(sel.shape)
         return bx, by, order, pos, key
 
     def draw(self, data, state: SamplerState, H: int):
@@ -157,6 +168,30 @@ class DeviceShardStore:
         return bx, by, SamplerState(order=state.order.at[i].set(order),
                                     pos=state.pos.at[i].set(pos),
                                     key=state.key.at[i].set(key))
+
+    def draw_gathered(self, data, state: SamplerState, H: int, idx):
+        """Draw the next H batches of the clients in ``idx`` only — the
+        compute plane's active-only draw (DESIGN.md §11). ``idx`` is an
+        (m,) int32 compaction of the active client ids, sentinel-padded
+        with N (the scheduler's static m bound fixes m): padded slots
+        read a clipped duplicate row but write NOTHING back. Returns
+        ``(bx (m, H, B, ...), by (m, H, B), new_state)`` with ONLY the
+        listed clients' sampler rows advanced; each row advances by
+        exactly the math :meth:`draw` would apply to it (``_sel_client``
+        is shared), so a gathered round leaves held clients' streams
+        bitwise untouched and consumes active streams identically."""
+        x, y, lengths = data
+        n = lengths.shape[0]
+        ic = jnp.minimum(idx, jnp.int32(n - 1))
+        sel, order, pos, key = jax.vmap(
+            lambda l, o, p, k: self._sel_client(l, o, p, k, H))(
+            lengths[ic], state.order[ic], state.pos[ic], state.key[ic])
+        bx = x[ic[:, None, None], sel]
+        by = y[ic[:, None, None], sel]
+        return bx, by, SamplerState(
+            order=state.order.at[idx].set(order, mode="drop"),
+            pos=state.pos.at[idx].set(pos, mode="drop"),
+            key=state.key.at[idx].set(key, mode="drop"))
 
 
 def token_stream(vocab: int, batch: int, seq: int, *, seed: int = 0,

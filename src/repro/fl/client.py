@@ -2,6 +2,15 @@
 lines 3-5). All N clients advance H local Adam steps inside one jitted
 scan; the LAST local gradient is returned flat for sparsification (line 7
 applies rAge-k to the gradient at the global-iteration step).
+
+Both phases can FUSE the protocol's client-side tail into the same
+program (DESIGN.md §11): error-feedback add (``g + ef``) and the top-r
+magnitude candidate report (``core.strategies.client_candidates``) run
+while the flat gradient is still live, so the (N, d) grad matrix is
+never re-materialized and re-read by the selection plane. The report is
+computed by the IDENTICAL batched function the parameter server would
+otherwise call on the same post-ef gradients — fusing it is a bitwise
+no-op on every value.
 """
 from __future__ import annotations
 
@@ -11,6 +20,7 @@ from typing import Callable
 import jax
 import jax.numpy as jnp
 
+from repro.core.strategies import client_candidates
 from repro.optim.optimizers import adam, apply_updates
 
 
@@ -38,14 +48,23 @@ def unflattener(template):
     return unflatten
 
 
-def make_client_phase(apply_loss: Callable, lr: float) -> Callable:
+def make_client_phase(apply_loss: Callable, lr: float, *,
+                      report_r: int | None = None,
+                      report_impl: str = "sort") -> Callable:
     """ONE client's H-step local phase, pure and un-jitted (traceable
     inside any program — the async service's event loop runs it per
-    arrival). phase(params, opt_state, state, batches) -> (params,
+    arrival). phase(params, opt_state, state, batches[, ef]) -> (params,
     opt_state, state, flat_last_grad (d,), mean_loss ()); batches is an
     (H, ...) pytree. :func:`make_local_phase` is exactly its vmap, so a
     single-client call is bitwise the corresponding row of the batched
-    phase (pinned by tests/test_service.py)."""
+    phase (pinned by tests/test_service.py).
+
+    ``ef`` (optional) is the client's (d,) error-feedback residual,
+    added to the flat gradient in-phase. ``report_r`` fuses the top-r
+    candidate report into the phase tail: the return grows a sixth
+    element, ``(params, opt_state, state, g, cand (r,), mean_loss)``,
+    with ``cand`` the row of :func:`client_candidates` on the post-ef
+    gradient (``report_impl``: 'sort' | 'threshold', bit-identical)."""
     opt = adam(lr)
 
     def one_step(carry, batch):
@@ -56,24 +75,52 @@ def make_client_phase(apply_loss: Callable, lr: float) -> Callable:
         params = apply_updates(params, updates)
         return (params, opt_state, new_state), (loss, grads)
 
-    def phase_one_client(params, opt_state, state, batches):
+    def phase_one_client(params, opt_state, state, batches, ef=None):
         (params, opt_state, state), (losses, grads_seq) = jax.lax.scan(
             one_step, (params, opt_state, state), batches)
         last_grad = jax.tree_util.tree_map(lambda g: g[-1], grads_seq)
-        return params, opt_state, state, flatten_tree(last_grad), losses.mean()
+        g = flatten_tree(last_grad)
+        if ef is not None:
+            g = g + ef
+        if report_r is None:
+            return params, opt_state, state, g, losses.mean()
+        cand = client_candidates(g[None], report_r, report_impl)[0]
+        return params, opt_state, state, g, cand, losses.mean()
 
     return phase_one_client
 
 
-def make_local_phase(apply_loss: Callable, lr: float) -> Callable:
+def make_local_phase(apply_loss: Callable, lr: float, *,
+                     report_r: int | None = None,
+                     report_impl: str = "sort") -> Callable:
     """apply_loss(params, state, batch) -> (loss, new_state).
 
-    Returns jitted phase(params_s, opt_s, state_s, batches) with leading
-    client axis on every arg; batches: (N, H, ...) pytree. Output includes
-    the final-step flat gradients (N, d) and mean loss per client (N,).
-    The vmap of :func:`make_client_phase`, exactly.
+    Returns jitted phase(params_s, opt_s, state_s, batches[, ef]) with
+    leading client axis on every arg; batches: (N, H, ...) pytree.
+    Output is ``(params_s, opt_s, state_s, G (N, d), report, losses
+    (N,))`` — the per-client final-step flat gradients, the fused top-r
+    candidate report (``client_candidates(G, report_r, report_impl)``,
+    or None when ``report_r`` is None) and the mean loss per client.
+    ``ef`` (optional (N, d)) is the error-feedback residual, added
+    before the report so selection sees the same post-ef gradients the
+    unfused engine path computed. The train loop is the vmap of
+    :func:`make_client_phase`, exactly — the batch's leading axis may
+    be ANY m <= N (the compute plane's gathered round trains only the
+    active m rows; per-client math is row-independent, DESIGN.md §11).
     """
-    return jax.jit(jax.vmap(make_client_phase(apply_loss, lr)))
+    base = make_client_phase(apply_loss, lr)
+    vphase = jax.vmap(lambda p, o, s, b: base(p, o, s, b))
+
+    def phase(params_s, opt_s, state_s, batches, ef=None):
+        params_s, opt_s, state_s, G, losses = vphase(
+            params_s, opt_s, state_s, batches)
+        if ef is not None:
+            G = G + ef
+        report = (client_candidates(G, report_r, report_impl)
+                  if report_r is not None else None)
+        return params_s, opt_s, state_s, G, report, losses
+
+    return jax.jit(phase)
 
 
 def stack_clients(trees: list):

@@ -228,10 +228,11 @@ def build_eval_sets(shards, test, *, cap: int = 1024):
 # device-side rAge-k selection (the PS control loop, on accelerator)
 # ---------------------------------------------------------------------------
 
-@partial(jax.jit, static_argnames=("r", "k", "disjoint", "candidates"))
+@partial(jax.jit, static_argnames=("r", "k", "disjoint", "candidates", "d"))
 def rage_select(g: jnp.ndarray, age: DeviceAgeState, *, r: int, k: int,
                 disjoint: bool = True, cands=None,
-                candidates: str = "sort", active=None):
+                candidates: str = "sort", active=None,
+                d: int | None = None):
     """Algorithm 1 steps 2-3 + eq. (2), entirely on device.
 
     g: (N, d) client gradients. Clients are processed in order; within a
@@ -254,9 +255,19 @@ def rage_select(g: jnp.ndarray, age: DeviceAgeState, *, r: int, k: int,
     segmented plane's closed form implements. active=None == all-True
     (bit-identical to the unmasked path).
 
+    ``g`` may be None when ``cands`` is precomputed and the static
+    gradient dim ``d`` is given (the fused-report hand-off, DESIGN.md
+    §11) — selection then never reads an (N, d) gradient matrix.
+
     Returns (idx (N, k) int32, new DeviceAgeState).
     """
-    n, d = g.shape
+    if g is None:
+        if cands is None or d is None:
+            raise ValueError("rage_select: g=None needs a precomputed "
+                             "cands report AND the static gradient dim d")
+        n = cands.shape[0]
+    else:
+        n, d = g.shape
     if cands is None:
         cands = client_candidates(g, r, candidates)
     if active is None:
@@ -296,13 +307,14 @@ def rage_select(g: jnp.ndarray, age: DeviceAgeState, *, r: int, k: int,
 
 @partial(jax.jit, static_argnames=("r", "k", "disjoint", "num_segments",
                                    "max_seg", "impl", "return_seg",
-                                   "candidates"))
+                                   "candidates", "d"))
 def rage_select_segmented(g: jnp.ndarray, age: DeviceAgeState, *, r: int,
                           k: int, num_segments: int | None = None,
                           max_seg: int | None = None,
                           disjoint: bool = True, impl: str = "jnp",
                           cands=None, return_seg: bool = False,
-                          candidates: str = "sort", active=None):
+                          candidates: str = "sort", active=None,
+                          d: int | None = None):
     """Segmented per-cluster formulation of :func:`rage_select` — same
     contract (idx (N, k) int32, new DeviceAgeState), BIT-IDENTICAL output
     (pinned by tests/test_segmented_selection.py), but the disjointness
@@ -319,13 +331,14 @@ def rage_select_segmented(g: jnp.ndarray, age: DeviceAgeState, *, r: int,
     plane's (N,) mask — only active clients are packed/select/reset;
     inactive ones age with no reset and return sentinel-d idx rows
     (DESIGN.md §9; max_seg may then be tightened to the scheduler's
-    static m bound).
+    static m bound). ``g`` may be None when ``cands`` is precomputed and
+    the static gradient dim ``d`` is given (fused report, DESIGN.md §11).
     """
-    n = g.shape[0]
+    n = age.cluster_of.shape[0] if g is None else g.shape[0]
     idx, new_ca, seg = segmented_rage_select(
         g, age.cluster_age, age.cluster_of, r=r, k=k,
         num_segments=num_segments, max_seg=max_seg, disjoint=disjoint,
-        impl=impl, cands=cands, candidates=candidates, active=active)
+        impl=impl, cands=cands, candidates=candidates, active=active, d=d)
     freq = age.freq.at[jnp.arange(n)[:, None], idx].add(1, mode="drop")
     idx = idx.astype(jnp.int32)
     new_age = DeviceAgeState(new_ca, freq, age.cluster_of)
@@ -403,7 +416,7 @@ class FederatedEngine:
     def __init__(self, kind: str, shards: list, test: tuple,
                  hp: RAgeKConfig, *, seed: int = 0, ef: bool = False,
                  global_opt: str = "adam", aggregate_impl: str = "auto",
-                 selection: str = "segmented"):
+                 selection: str = "segmented", compute: str = "auto"):
         if hp.method in ("rage_k", "rtop_k", "cafe") and hp.r < hp.k:
             raise ValueError(
                 f"method {hp.method!r} selects k of the top-r candidates; "
@@ -411,6 +424,9 @@ class FederatedEngine:
         if selection not in ("scan", "segmented"):
             raise ValueError(f"selection must be 'scan' or 'segmented', "
                              f"got {selection!r}")
+        if compute not in ("auto", "gathered", "masked"):
+            raise ValueError(f"compute must be 'auto', 'gathered' or "
+                             f"'masked', got {compute!r}")
         if hp.candidates not in CANDIDATE_IMPLS:
             raise ValueError(f"candidates must be one of "
                              f"{CANDIDATE_IMPLS}, got {hp.candidates!r}")
@@ -433,7 +449,16 @@ class FederatedEngine:
         self._strategy = make_strategy(hp.method, r=hp.r, k=hp.k,
                                        lam=hp.cafe_lam,
                                        candidates=hp.candidates)
-        self._local_phase = C.make_local_phase(apply_loss, hp.lr)
+        # rage_k fuses the top-r candidate report into the local phase's
+        # last step (DESIGN.md §11): the report comes out of the SAME
+        # batched client_candidates call selection would have made on
+        # the same post-ef gradients, so the (N, d) grad matrix is
+        # never re-materialized for the selection plane — and the fused
+        # values are bitwise the unfused ones
+        self._report_r = hp.r if hp.method == "rage_k" else None
+        self._local_phase = C.make_local_phase(
+            apply_loss, hp.lr, report_r=self._report_r,
+            report_impl=hp.candidates)
         self._g_opt = adam(hp.lr) if global_opt == "adam" else sgd(hp.lr)
         if aggregate_impl == "auto":
             aggregate_impl = ("pallas" if jax.default_backend() == "tpu"
@@ -446,6 +471,16 @@ class FederatedEngine:
         self._scheduler = make_scheduler(
             hp.schedule, self.n, participation_m=hp.participation_m,
             deadline_s=hp.deadline_s, seed=seed + 41)
+        # compute plane (DESIGN.md §11): 'gathered' compacts the active
+        # clients to the scheduler's STATIC m_bound and trains only
+        # those rows (local-phase FLOPs ∝ m_bound, not N); 'masked' is
+        # the full-N train-everyone-discard-inactive reference. 'auto'
+        # gathers exactly when the bound is a real cut (m_bound < N), so
+        # the Full plan keeps the pre-plane program bit-for-bit.
+        if compute == "auto":
+            compute = ("gathered" if self._scheduler.m_bound < self.n
+                       else "masked")
+        self._compute = compute
         # segmented packing bounds: live cluster count / largest cluster.
         # STATIC (recompile keys) — recomputed from the host-side DBSCAN
         # labels at every recluster; singletons at t=0.
@@ -539,60 +574,136 @@ class FederatedEngine:
         Stale arrivals (Deadline) contribute with discounted weight.
         Under the Full plan every mask is all-True and every ``where``
         below is a bitwise no-op — the pre-plane engine exactly.
+
+        HOW MUCH work the round does is the compute plane's decision
+        (DESIGN.md §11). compute='gathered' compacts the active client
+        ids to the scheduler's STATIC m_bound (sentinel n pads short
+        rounds), gathers params/opt/BatchNorm/ef/sampler rows, draws
+        only the active shards' batches, trains an (m, ...) batch and
+        scatters results back with mode='drop' — held state and
+        unconsumed data streams come out bit-identical to the masked
+        full-N path (per-client math is row-independent; pinned by
+        tests/test_active_compute.py). compute='masked' trains all N
+        and discards inactive rows. Either way the top-r candidate
+        report is FUSED into the local phase (rage_k), so selection
+        below never re-reads an (N, d) gradient matrix.
         """
         (g_params, g_opt_state, params_s, opt_s, state_s, age, ef_mem,
          key, samp, sched) = carry
         hp = self.hp
+        n, d = self.n, self.d
         plan: RoundPlan = self._scheduler.plan(sched, age)
         act = plan.active
         stale = plan.staleness > 0
-        bx, by, samp2 = self._store.draw(data, samp, hp.H)
-        params_s, opt_s2, state_s2, g, losses = self._local_phase(
-            params_s, opt_s, state_s if state_s else {}, (bx, by))
-        # non-participants sit the round out: their local state holds
-        # and their data stream is not consumed
-        opt_s = _where_clients(act, opt_s2, opt_s)
-        samp = _where_clients(act, samp2, samp)
-        if state_s:
-            state_s = _where_clients(act, state_s2, state_s)
-        if ef_mem is not None:
-            g = g + ef_mem
+        gathered = self._compute == "gathered"
+        if gathered:
+            # compact the active ids, ascending (nonzero preserves the
+            # client order every sequential contract — selection
+            # tie-breaks, scatter-add ordering — is stated in); padded
+            # slots carry the sentinel n: they read a clipped duplicate
+            # row, train dead weight, and write nothing back
+            mb = self._scheduler.m_bound
+            act_idx = jnp.nonzero(act, size=mb,
+                                  fill_value=n)[0].astype(jnp.int32)
+            slot_ok = act_idx < n
+            iclip = jnp.minimum(act_idx, jnp.int32(n - 1))
+
+            def gather_rows(t):
+                return jax.tree_util.tree_map(lambda a: a[iclip], t)
+
+            def put_rows(old, new):
+                return jax.tree_util.tree_map(
+                    lambda a, b: a.at[act_idx].set(b, mode="drop"),
+                    old, new)
+
+            bx, by, samp = self._store.draw_gathered(data, samp, hp.H,
+                                                     act_idx)
+            _, opt_c, state_c, g, cands_c, losses_c = self._local_phase(
+                gather_rows(params_s), gather_rows(opt_s),
+                gather_rows(state_s) if state_s else {}, (bx, by),
+                gather_rows(ef_mem) if ef_mem is not None else None)
+            opt_s = put_rows(opt_s, opt_c)
+            if state_s:
+                state_s = put_rows(state_s, state_c)
+            # inactive clients never trained: their loss is undefined —
+            # NaN, the same contract the masked path reports
+            losses = jnp.full((n,), jnp.nan, jnp.float32).at[
+                act_idx].set(losses_c, mode="drop")
+            cands = (jnp.zeros((n, hp.r), jnp.int32).at[act_idx].set(
+                cands_c, mode="drop") if cands_c is not None else None)
+        else:
+            act_idx = slot_ok = iclip = None
+            bx, by, samp2 = self._store.draw(data, samp, hp.H)
+            _, opt_s2, state_s2, g, cands, losses = self._local_phase(
+                params_s, opt_s, state_s if state_s else {}, (bx, by),
+                ef_mem)
+            # non-participants sit the round out: their local state holds
+            # and their data stream is not consumed
+            opt_s = _where_clients(act, opt_s2, opt_s)
+            samp = _where_clients(act, samp2, samp)
+            if state_s:
+                state_s = _where_clients(act, state_s2, state_s)
+            losses = jnp.where(act, losses, jnp.nan)
 
         key, sub = jax.random.split(key)
         method = hp.method
-        n, d = self.n, self.d
         seg = None
         if method == "rage_k":
+            # both selection planes consume the FUSED report (g=None):
+            # in gathered mode the compact (m, r) report was scattered
+            # into full-N layout above (inactive rows are never read)
             if self._selection == "segmented":
                 idx, age, seg = rage_select_segmented(
-                    g, age, r=hp.r, k=hp.k, num_segments=num_segments,
+                    None, age, r=hp.r, k=hp.k, num_segments=num_segments,
                     max_seg=max_seg, disjoint=hp.disjoint_in_cluster,
                     impl=self._sel_impl, return_seg=True,
-                    candidates=hp.candidates, active=act)
+                    candidates=hp.candidates, active=act, cands=cands,
+                    d=d)
             else:
-                idx, age = rage_select(g, age, r=hp.r, k=hp.k,
+                idx, age = rage_select(None, age, r=hp.r, k=hp.k,
                                        disjoint=hp.disjoint_in_cluster,
                                        candidates=hp.candidates,
-                                       active=act)
+                                       active=act, cands=cands, d=d)
         elif method == "cafe":
             # per-client cost-and-age selection via the batched protocol;
             # cluster_age doubles as the per-client age rows (clusters
             # stay singleton — no recluster on this method) and freq is
             # exactly the cumulative upload cost CAFe discounts by.
             # Inactive clients: eq. (2) with no reset, no cost, no request
-            idx, _, (ca, fr) = self._strategy.select_batch(
-                g, (age.cluster_age, age.freq))
-            ca = jnp.where(act[:, None], ca, age.cluster_age + 1)
-            fr = jnp.where(act[:, None], fr, age.freq)
+            if gathered:
+                idx_c, _, (ca_c, fr_c) = self._strategy.select_batch(
+                    g, (age.cluster_age[iclip], age.freq[iclip]))
+                ca = (age.cluster_age + 1).at[act_idx].set(ca_c,
+                                                           mode="drop")
+                fr = age.freq.at[act_idx].set(fr_c, mode="drop")
+                idx = jnp.full((n, hp.k), d, jnp.int32).at[act_idx].set(
+                    idx_c.astype(jnp.int32), mode="drop")
+            else:
+                idx, _, (ca, fr) = self._strategy.select_batch(
+                    g, (age.cluster_age, age.freq))
+                ca = jnp.where(act[:, None], ca, age.cluster_age + 1)
+                fr = jnp.where(act[:, None], fr, age.freq)
+                idx = idx.astype(jnp.int32)
             age = DeviceAgeState(ca, fr, age.cluster_of)
-            idx = idx.astype(jnp.int32)
         elif method == "dense":
             idx = None
         elif method in ("rtop_k", "random_k"):
+            # the per-client key split stays full-N so a client's key
+            # depends only on its id, not on who else took part
             keys = jax.random.split(sub, self.n)
-            idx, _, _ = self._strategy.select_batch(g, keys)
+            if gathered:
+                idx_c, _, _ = self._strategy.select_batch(g, keys[iclip])
+                idx = jnp.full((n, hp.k), d, jnp.int32).at[act_idx].set(
+                    idx_c.astype(jnp.int32), mode="drop")
+            else:
+                idx, _, _ = self._strategy.select_batch(g, keys)
         else:                                     # top_k — deterministic
-            idx, _, _ = self._strategy.select_batch(g, ())
+            if gathered:
+                idx_c, _, _ = self._strategy.select_batch(g, ())
+                idx = jnp.full((n, hp.k), d, jnp.int32).at[act_idx].set(
+                    idx_c.astype(jnp.int32), mode="drop")
+            else:
+                idx, _, _ = self._strategy.select_batch(g, ())
 
         if idx is not None:
             # inactive clients request nothing — sentinel-d rows, in ONE
@@ -600,23 +711,61 @@ class FederatedEngine:
             # on the rage paths, which already masked internally)
             idx = jnp.where(act[:, None], idx, jnp.int32(d))
 
+        # ``sent`` (what each client actually uploaded, for the ef
+        # residual) stays COMPACT (m, d) in gathered mode; only the
+        # O(N*k) vals layout is rebuilt full-size for aggregation, so
+        # the sum's add order (client-ascending) matches the masked
+        # path's bit for bit
         if idx is None:
-            gw = g.astype(self._wire_dtype).astype(g.dtype)
-            gw = jnp.where(stale[:, None],
-                           gw * plan.weight[:, None].astype(g.dtype), gw)
-            gw = jnp.where(act[:, None], gw, jnp.zeros((), g.dtype))
-            g_sum = gw.sum(0)
-            sent = gw
+            if gathered:
+                gw = g.astype(self._wire_dtype).astype(g.dtype)
+                gw = jnp.where(
+                    stale[iclip][:, None],
+                    gw * plan.weight[iclip][:, None].astype(g.dtype), gw)
+                sent = gw
+                g_sum = jnp.zeros((n, d), g.dtype).at[act_idx].set(
+                    gw, mode="drop").sum(0)
+            else:
+                gw = g.astype(self._wire_dtype).astype(g.dtype)
+                gw = jnp.where(
+                    stale[:, None],
+                    gw * plan.weight[:, None].astype(g.dtype), gw)
+                gw = jnp.where(act[:, None], gw, jnp.zeros((), g.dtype))
+                g_sum = gw.sum(0)
+                sent = gw
         else:
-            vals = jnp.take_along_axis(
-                g, jnp.minimum(idx, jnp.int32(d - 1)), axis=1)
-            vals = vals.astype(self._wire_dtype).astype(g.dtype)
-            # stale arrivals land staleness-discounted; the fresh path
-            # stays bitwise untouched (weight applied only where stale)
-            vals = jnp.where(stale[:, None],
-                             vals * plan.weight[:, None].astype(g.dtype),
-                             vals)
-            vals = jnp.where(act[:, None], vals, jnp.zeros((), g.dtype))
+            if gathered:
+                idx_rows = idx[iclip]
+                vals_c = jnp.take_along_axis(
+                    g, jnp.minimum(idx_rows, jnp.int32(d - 1)), axis=1)
+                vals_c = vals_c.astype(self._wire_dtype).astype(g.dtype)
+                vals_c = jnp.where(
+                    stale[iclip][:, None],
+                    vals_c * plan.weight[iclip][:, None].astype(g.dtype),
+                    vals_c)
+                vals_c = jnp.where(slot_ok[:, None], vals_c,
+                                   jnp.zeros((), g.dtype))
+                vals = jnp.zeros((n, idx.shape[1]), g.dtype).at[
+                    act_idx].set(vals_c, mode="drop")
+                sent = jax.vmap(
+                    lambda i, v: jnp.zeros((self.d,), g.dtype).at[i].set(
+                        v, mode="drop")
+                )(idx_rows, vals_c)
+            else:
+                vals = jnp.take_along_axis(
+                    g, jnp.minimum(idx, jnp.int32(d - 1)), axis=1)
+                vals = vals.astype(self._wire_dtype).astype(g.dtype)
+                # stale arrivals land staleness-discounted; the fresh
+                # path stays bitwise untouched (weight only where stale)
+                vals = jnp.where(
+                    stale[:, None],
+                    vals * plan.weight[:, None].astype(g.dtype), vals)
+                vals = jnp.where(act[:, None], vals,
+                                 jnp.zeros((), g.dtype))
+                sent = jax.vmap(
+                    lambda i, v: jnp.zeros((self.d,), g.dtype).at[i].set(
+                        v, mode="drop")
+                )(idx, vals)
             if seg is not None and self._agg_impl == "pallas":
                 # fused path: the SEGMENTED layout feeds the kernel
                 # directly — padded member slots (and, under a partial
@@ -631,12 +780,11 @@ class FederatedEngine:
                 g_sum = dense
             else:
                 g_sum = self._aggregate(idx, vals)
-            sent = jax.vmap(
-                lambda i, v: jnp.zeros((self.d,), g.dtype).at[i].set(
-                    v, mode="drop")
-            )(idx, vals)
         if ef_mem is not None:
-            ef_mem = jnp.where(act[:, None], g - sent, ef_mem)
+            if gathered:
+                ef_mem = ef_mem.at[act_idx].set(g - sent, mode="drop")
+            else:
+                ef_mem = jnp.where(act[:, None], g - sent, ef_mem)
 
         g_params, g_opt_state = apply_global(
             self._g_opt, self._unflatten, g_sum, g_params, g_opt_state)
@@ -896,12 +1044,15 @@ class FederatedEngine:
         """Eval/record/heatmap at the current round — the shared tail of
         both drivers (run() after each step, run_scanned() at chunk
         boundaries, which land exactly on the same rounds). `losses` is
-        the CURRENT round's (N,) loss vector."""
+        the CURRENT round's (N,) loss vector; non-participants' entries
+        are NaN (they never trained — DESIGN.md §11), so the recorded
+        loss is the mean over THIS round's participants."""
         t = self.round_idx
         if t % eval_every == 0 or t == end:
             acc = self.eval_acc()
+            loss = float(np.nanmean(losses))
             res.rounds.append(t)
-            res.loss.append(float(losses.mean()))
+            res.loss.append(loss)
             res.acc.append(acc)
             res.uplink_bytes.append(self.cum_bytes)
             res.cluster_labels.append(self.cluster_of)
@@ -909,7 +1060,7 @@ class FederatedEngine:
                 aoi = (f" aoi={res.aoi_mean[-1]:.1f}/{res.aoi_peak[-1]}"
                        if res.aoi_peak else "")
                 print(f"[{self.hp.method}] round {t:4d} "
-                      f"loss={losses.mean():.4f} "
+                      f"loss={loss:.4f} "
                       f"acc={acc:.4f} "
                       f"upl={self.cum_bytes/2**20:.2f}MB{aoi}")
         if t in heatmap_at:

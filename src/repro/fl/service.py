@@ -60,7 +60,7 @@ import numpy as np
 from repro.configs.base import RAgeKConfig
 from repro.core.compression import (bytes_per_index, bytes_per_round,
                                     downlink_bytes_per_round)
-from repro.core.strategies import CANDIDATE_IMPLS, client_candidates
+from repro.core.strategies import CANDIDATE_IMPLS
 from repro.data.pipeline import DeviceShardStore
 from repro.fl import client as C
 from repro.fl.engine import (DeviceAgeState, _build_model,
@@ -231,7 +231,13 @@ class AsyncService:
         self.d = sum(int(x.size)
                      for x in jax.tree_util.tree_leaves(g_params))
         self._unflatten = C.unflattener(g_params)
-        self._client_phase = C.make_client_phase(apply_loss, hp.lr)
+        # report mode fuses the top-r candidate report into the client
+        # phase's tail (DESIGN.md §11) — same client_candidates row the
+        # landing selection previously recomputed from g_i, bitwise
+        self._client_phase = C.make_client_phase(
+            apply_loss, hp.lr,
+            report_r=hp.r if solicit == "report" else None,
+            report_impl=hp.candidates)
         self._g_opt = adam(hp.lr) if global_opt == "adam" else sgd(hp.lr)
         self._wire_dtype = jnp.dtype(hp.wire_dtype)
 
@@ -317,12 +323,13 @@ class AsyncService:
             jnp.arange(self.n, dtype=jnp.int32))
         return {"inflight": inflight, "solicited": solicited}
 
-    def _select_landing(self, st: ServiceState, i, cl, g_i):
+    def _select_landing(self, st: ServiceState, i, cl, g_i, cand=None):
         """The landing client's k upload coordinates + the updated
-        disjointness/solicitation state (mode-dependent)."""
+        disjointness/solicitation state (mode-dependent). ``cand`` is
+        the client's fused top-r report (report mode; computed in the
+        client phase while the gradient was live, DESIGN.md §11)."""
         hp = self.hp
         if self._solicit == "report":
-            cand = client_candidates(g_i[None], hp.r, hp.candidates)[0]
             idx = select_member_topk(st.age.cluster_age, st.taken, cand,
                                      cl, k=hp.k,
                                      disjoint=hp.disjoint_in_cluster)
@@ -369,8 +376,13 @@ class AsyncService:
         opt_i = jax.tree_util.tree_map(lambda x: x[i], st.opt_s)
         state_i = (jax.tree_util.tree_map(lambda x: x[i], st.state_s)
                    if st.state_s else {})
-        _, opt_i, state_i, g_i, loss = self._client_phase(
-            params_i, opt_i, state_i, (bx, by))
+        if self._solicit == "report":
+            _, opt_i, state_i, g_i, cand_i, loss = self._client_phase(
+                params_i, opt_i, state_i, (bx, by))
+        else:
+            _, opt_i, state_i, g_i, loss = self._client_phase(
+                params_i, opt_i, state_i, (bx, by))
+            cand_i = None
         opt_s = jax.tree_util.tree_map(
             lambda full, one: full.at[i].set(one), st.opt_s, opt_i)
         state_s = (jax.tree_util.tree_map(
@@ -380,7 +392,7 @@ class AsyncService:
         # 3. upload coordinates (mode-dependent selection)
         cl = st.age.cluster_of[i]
         idx, taken, solicited, inflight = self._select_landing(
-            st, i, cl, g_i)
+            st, i, cl, g_i, cand_i)
 
         # 4. land in the buffer, staleness-discounted; eq. (2) on the
         #    cluster row (+1, requested reset), freq counts the upload

@@ -110,6 +110,15 @@ def main():
                     help="round deadline in simulated seconds for "
                          "--schedule deadline (0 -> 1.0, ~the median "
                          "simulated client round time)")
+    ap.add_argument("--compute", default="auto",
+                    choices=("auto", "gathered", "masked"),
+                    help="local compute plane (DESIGN.md §11): "
+                         "'gathered' trains only the round's active "
+                         "clients (gather-train-scatter, cost scales "
+                         "with the scheduler's m bound), 'masked' "
+                         "trains all N and discards inactive results; "
+                         "'auto' picks gathered iff the schedule bounds "
+                         "m below N — outputs are bit-identical")
     args = ap.parse_args()
 
     if args.dataset == "mnist":
@@ -178,7 +187,7 @@ def main():
 
     engine = FederatedEngine(kind, shards, test, hp, seed=args.seed,
                              ef=args.ef, aggregate_impl=args.aggregate,
-                             selection=args.selection)
+                             selection=args.selection, compute=args.compute)
     drive = engine.run if args.driver == "step" else engine.run_scanned
     res = drive(args.rounds, eval_every=max(args.rounds // 20, 1),
                 heatmap_at=(1, args.rounds), verbose=True)

@@ -1,0 +1,135 @@
+"""Negative-path validation: a bad flag fails at CONSTRUCTION with a
+ValueError naming the offending field — never as a shape error deep
+inside a jitted round.
+
+Three layers:
+1. ``RAgeKConfig.__post_init__`` — population-independent checks
+   (method/candidates/schedule/wire_dtype membership, positivity, the
+   r >= k contract of the r-candidate methods).
+2. The scheduler factory / engine — population-DEPENDENT checks
+   (1 <= m <= N), which the config cannot know.
+3. ``repro.launch.fl_train`` — argparse choice rejection (SystemExit 2)
+   for unknown planes, and the config/scheduler errors surfacing
+   through ``main()``.
+"""
+import sys
+
+import pytest
+
+from repro.configs.base import RAgeKConfig
+from repro.launch import fl_train
+
+# ---------------------------------------------------------------------------
+# RAgeKConfig.__post_init__
+# ---------------------------------------------------------------------------
+
+BAD = [
+    (dict(method="nope"), "method"),
+    (dict(candidates="magic"), "candidates"),
+    (dict(schedule="sometimes"), "schedule"),
+    (dict(wire_dtype="fp8"), "wire_dtype"),
+    (dict(r=5, k=10), "r >= k"),
+    (dict(method="rtop_k", r=5, k=10), "r >= k"),
+    (dict(method="cafe", r=5, k=10), "r >= k"),
+    (dict(r=0), "r"),
+    (dict(k=0), "k"),
+    (dict(H=0), "H"),
+    (dict(M=-1), "M"),
+    (dict(batch_size=0), "batch_size"),
+    (dict(min_pts=0), "min_pts"),
+    (dict(lr=0.0), "lr"),
+    (dict(lr=-1e-3), "lr"),
+    (dict(eps=0.0), "eps"),
+    (dict(participation_m=-3), "participation_m"),
+    (dict(deadline_s=-1.0), "deadline_s"),
+    (dict(buffer_k=-1), "buffer_k"),
+    (dict(staleness_eta=-0.1), "staleness_eta"),
+    (dict(version_window=0), "version_window"),
+]
+
+
+@pytest.mark.parametrize("kw,needle", BAD,
+                         ids=[f"{list(kw)[0]}={list(kw.values())[0]}"
+                              for kw, _ in BAD])
+def test_config_rejects(kw, needle):
+    with pytest.raises(ValueError, match=needle.split()[0]):
+        RAgeKConfig(**kw)
+
+
+def test_config_accepts_defaults_and_sentinels():
+    RAgeKConfig()                                    # paper defaults
+    RAgeKConfig(participation_m=0, deadline_s=0.0,
+                buffer_k=0)                          # 0 == "use default"
+    RAgeKConfig(method="dense", r=5, k=10)           # no r>=k for dense
+    RAgeKConfig(method="top_k", r=5, k=10)           # ...or plain top-k
+
+
+# ---------------------------------------------------------------------------
+# population-dependent checks (scheduler/engine layer)
+# ---------------------------------------------------------------------------
+
+def test_scheduler_rejects_m_out_of_range():
+    from repro.fl.schedule import make_scheduler
+    with pytest.raises(ValueError, match="1 <= m <= N"):
+        make_scheduler("uniform", 10, participation_m=99)
+    with pytest.raises(ValueError, match="1 <= m <= N"):
+        make_scheduler("aoi", 10, participation_m=99)
+
+
+def test_engine_rejects_bad_compute(monkeypatch):
+    from repro.data.federated import paper_mnist_split
+    from repro.data.synthetic import mnist_like
+    from repro.fl import FederatedEngine
+    (xtr, ytr), test = mnist_like(n_train=600, n_test=100, seed=0)
+    shards = paper_mnist_split(xtr, ytr, seed=0)
+    with pytest.raises(ValueError, match="compute"):
+        FederatedEngine("mlp", shards, test, RAgeKConfig(),
+                        compute="telepathic")
+
+
+# ---------------------------------------------------------------------------
+# fl_train CLI surface
+# ---------------------------------------------------------------------------
+
+def _main_with(monkeypatch, *argv):
+    monkeypatch.setattr(sys, "argv",
+                        ["fl_train", "--n-train", "600", *argv])
+    fl_train.main()
+
+
+@pytest.mark.parametrize("argv", [
+    ("--candidates", "magic"),
+    ("--schedule", "sometimes"),
+    ("--method", "nope"),
+    ("--compute", "telepathic"),
+    ("--driver", "warp"),
+])
+def test_cli_rejects_unknown_choice(monkeypatch, capsys, argv):
+    with pytest.raises(SystemExit) as ei:
+        _main_with(monkeypatch, *argv)
+    assert ei.value.code == 2
+    assert "invalid choice" in capsys.readouterr().err
+
+
+def test_cli_rejects_m_above_population(monkeypatch):
+    # mnist split has N=10 clients; m=99 fails at scheduler build
+    with pytest.raises(ValueError, match="1 <= m <= N"):
+        _main_with(monkeypatch, "--schedule", "uniform",
+                   "--participation-m", "99", "--rounds", "1")
+
+
+def test_cli_rejects_negative_m(monkeypatch):
+    with pytest.raises(ValueError, match="participation_m"):
+        _main_with(monkeypatch, "--schedule", "uniform",
+                   "--participation-m", "-3", "--rounds", "1")
+
+
+def test_cli_rejects_negative_deadline(monkeypatch):
+    with pytest.raises(ValueError, match="deadline_s"):
+        _main_with(monkeypatch, "--schedule", "deadline",
+                   "--deadline-s", "-1", "--rounds", "1")
+
+
+def test_cli_rejects_r_below_k(monkeypatch):
+    with pytest.raises(ValueError, match="r >= k"):
+        _main_with(monkeypatch, "--r", "5", "--k", "10", "--rounds", "1")

@@ -21,6 +21,8 @@ from repro.data.federated import paper_cifar_split, paper_mnist_split
 from repro.data.synthetic import cifar10_like, mnist_like
 from repro.fl import FederatedEngine
 
+pytestmark = pytest.mark.slow  # multi-round parity: minutes on CPU
+
 METHODS = ("rage_k", "rtop_k", "top_k", "random_k", "dense")
 
 # M=3, 7 rounds -> recluster boundaries at rounds 3 and 6

@@ -33,6 +33,8 @@ from repro.fl.schedule import (AoIBalanced, Deadline, Full, SchedState,
                                UniformM, make_scheduler)
 from repro.fl.server import aggregate_sparse_fused
 
+pytestmark = pytest.mark.slow  # multi-round parity: minutes on CPU
+
 METHODS = ("rage_k", "rtop_k", "top_k", "random_k", "dense")
 
 HP = dict(r=30, k=6, H=2, M=3, lr=2e-3, batch_size=16)

@@ -37,6 +37,8 @@ from repro.data.pipeline import DeviceShardStore
 from repro.data.synthetic import mnist_like
 from repro.fl import AsyncService, FederatedEngine, LatencyModel
 
+pytestmark = pytest.mark.slow  # multi-round parity: minutes on CPU
+
 HP = dict(r=30, k=6, H=2, M=3, lr=2e-3, batch_size=16)
 ROUNDS = 4  # crosses the round-3 recluster boundary
 
