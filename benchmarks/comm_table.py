@@ -20,6 +20,7 @@ import os
 
 from benchmarks.common import art_dir, save_json
 from repro.core.compression import (bytes_per_index, bytes_per_round,
+                                    clustering_input_bytes,
                                     downlink_bytes_per_round)
 
 
@@ -38,9 +39,10 @@ def _measured_compute() -> dict | None:
 def main(fast: bool = True):
     measured = _measured_compute()
     settings = {
-        "mnist (d=39,760, r=75, k=10)": dict(d=39_760, r=75, k=10, n=10),
+        "mnist (d=39,760, r=75, k=10)": dict(d=39_760, r=75, k=10, n=10,
+                                             M=20),
         "cifar (d=2,515,338, r=2500, k=100)": dict(d=2_515_338, r=2500,
-                                                   k=100, n=6),
+                                                   k=100, n=6, M=200),
     }
     rows = []
     table = {}
@@ -83,6 +85,24 @@ def main(fast: bool = True):
                     s["r"], s["d"], m_active=n)},
             "round_total_incl_downlink": full_round + n * dl_sync,
         }
+        # the every-M clustering input (the PS's one host-shaped pull,
+        # DESIGN.md §12): the dense layout pulls the whole (N, d) freq
+        # matrix per boundary; the hierarchical sparse log pulls only
+        # the M rounds' (k+1)-int32 request records per participant
+        cl_dense = clustering_input_bytes(s["d"], n, layout="dense")
+        cl_log = clustering_input_bytes(s["d"], n, k=s["k"], M=s["M"],
+                                        layout="hierarchical")
+        cl_log_partial = clustering_input_bytes(
+            s["d"], n, k=s["k"], M=s["M"], m_active=m,
+            layout="hierarchical")
+        table[name]["clustering_input"] = {
+            "every_M_rounds": s["M"],
+            "dense_freq_pull": cl_dense,
+            "sparse_log_pull": cl_log,
+            "sparse_log_pull_partial": {"n_active": m,
+                                        "bytes": cl_log_partial},
+            "reduction_vs_dense": cl_dense / cl_log,
+        }
         # compute next to wire (DESIGN.md §11): the gathered plane cuts
         # the local-phase FLOPs to ~m/N of the full round too — the
         # measured jitted-HLO ratio when engine_bench has run, the
@@ -102,7 +122,9 @@ def main(fast: bool = True):
                      f"x{dense / sparse_rep:.0f} less; "
                      f"round m={m}/{n}: {partial_round}B; "
                      f"downlink k-req={dl_sync}B r-solicit={dl_async}B; "
-                     f"compute m/N={m / n:.2f}"))
+                     f"compute m/N={m / n:.2f}; "
+                     f"clustering dense={cl_dense}B "
+                     f"log={cl_log}B x{cl_dense / cl_log:.0f} less"))
     save_json("comm_table", table)
     return rows
 

@@ -25,7 +25,13 @@
   round's virtual wall is the slowest client's dispatch, the async
   PS's aggregation cadence is set by MEAN latency — aggregations per
   virtual second should beat sync rounds per virtual second, with the
-  staleness histogram showing what that throughput costs.
+  staleness histogram showing what that throughput costs;
+* AGE-MEMORY plane (DESIGN.md §12): hierarchical (C, d) cluster-keyed
+  age rows + sparse update log vs the dense (N, d) matrices at
+  N ∈ {64, 256, 1024} — measured device bytes before/after the first
+  compaction (the C/N shrink) and rounds/sec parity at N=256 (the
+  layouts must tie; the log append is O(m·k) against the dense
+  layout's (N, d) scatter).
 
 Results land in experiments/bench/BENCH_engine.json. Fast mode is the
 5-round CI smoke; --slow grows the round count.
@@ -41,6 +47,7 @@ from repro.core.compression import bytes_per_index, bytes_per_round
 from repro.data.federated import paper_mnist_split
 from repro.data.synthetic import mnist_like
 from repro.fl import AsyncService, FederatedEngine, LatencyModel
+from repro.fl.engine import DeviceAgeState
 
 
 # (name, driver, selection plane)
@@ -250,6 +257,85 @@ def _active_compute(rounds: int, repeats: int) -> dict:
     return out
 
 
+def _age_memory(rounds: int, repeats: int) -> dict:
+    """The hierarchical age plane (DESIGN.md §12) on the client axis,
+    N ∈ {64, 256, 1024} grouped synthetic shards (few hidden label
+    groups, so the every-M DBSCAN actually merges). Two measurements:
+
+    * ``DeviceAgeState.device_bytes`` dense vs hierarchical — at init
+      (singletons: both layouts carry N rows) and after the first
+      compaction (live C rows; the dense layout never shrinks). The
+      ratio should track C/N plus the O(M·m·k) log ring.
+    * rounds/sec parity at N=256 — the round programs differ only in
+      the O(m·k) log append vs the (N, d) freq scatter, so the layouts
+      must tie (the acceptance bar is within 5%).
+
+    Drives ``engine.step()`` directly: ``run()`` would pay the
+    per-client eval loop, which is N-unrolled and would drown the
+    age-plane signal at N=1024."""
+    groups = 4
+
+    def mk(n):
+        rng = np.random.default_rng(0)
+        shards = []
+        for i in range(n):
+            lab = i % groups
+            x = rng.normal(size=(8, 28 * 28)).astype(np.float32) + lab
+            y = np.full((8,), lab, np.int64)
+            shards.append((x, y))
+        xte = rng.normal(size=(64, 28 * 28)).astype(np.float32)
+        yte = rng.integers(0, 10, size=(64,)).astype(np.int64)
+        return shards, (xte, yte)
+
+    def build(n, layout, M):
+        hp = RAgeKConfig(method="rage_k", age_layout=layout, r=16, k=4,
+                         H=1, M=M, lr=2e-3, batch_size=8)
+        shards, test = mk(n)
+        return FederatedEngine("mlp", shards, test, hp, seed=0)
+
+    out = {"n_values": [64, 256, 1024], "window_M": 3, "groups": groups}
+    for n in out["n_values"]:
+        eng = build(n, "hierarchical", M=3)
+        init_b = eng.age.device_bytes
+        dense_b = DeviceAgeState.create(eng.d, n).device_bytes
+        for _ in range(3):
+            eng.step()                 # 3rd step crosses the boundary
+        c = int(eng.cluster_of.max()) + 1
+        hier_b = eng.age.device_bytes
+        out[f"n{n}"] = {"dense_bytes": dense_b,
+                        "hier_bytes_init": init_b,
+                        "hier_bytes_compacted": hier_b,
+                        "live_clusters": c,
+                        "c_over_n": c / n,
+                        "bytes_ratio_vs_dense": hier_b / dense_b}
+        eng.close()
+    out["shrinks_with_c"] = (
+        out["n1024"]["bytes_ratio_vs_dense"]
+        < out["n256"]["bytes_ratio_vs_dense"] < 1.0)
+
+    # rounds/sec parity at N=256; M past the total step count keeps the
+    # boundary (and its layout-specific host work) out of the timed
+    # window — that cost is priced by comm_table's clustering_input row
+    n = 256
+    total = 2 + rounds * repeats + 1
+    engines = {lay: build(n, lay, M=total + 1)
+               for lay in ("dense", "hierarchical")}
+    for e in engines.values():
+        for _ in range(2):
+            e.step()                               # compile + warm
+    best, _ = interleaved_best(
+        {lay: (lambda e_=e: [e_.step() for _ in range(rounds)])
+         for lay, e in engines.items()},
+        repeats=repeats)
+    rps = {lay: rounds / best[lay] for lay in engines}
+    out["n256_rounds_per_s"] = rps
+    out["parity_ratio"] = rps["hierarchical"] / rps["dense"]
+    out["parity_within_5pct"] = out["parity_ratio"] > 0.95
+    for e in engines.values():
+        e.close()
+    return out
+
+
 def main(fast: bool = True):
     # 5-round smoke for CI; more repeats because short walls are noisy
     rounds, repeats = (5, 9) if fast else (20, 5)
@@ -335,6 +421,17 @@ def main(fast: bool = True):
                  f"x{ac['speedup_m8']:.2f} "
                  f"(flops_ratio={ac['flops_ratio_m8']:.3f}, "
                  f"scales={ac['flops_scale_with_m']})"))
+
+    # age plane (DESIGN.md §12): device bytes vs N, parity at 256
+    out["age_memory"] = am = _age_memory(rounds, max(repeats // 3, 2))
+    rows.append(("age_memory_n1024",
+                 1e6 / max(am["n256_rounds_per_s"]["hierarchical"], 1e-9),
+                 f"bytes={am['n1024']['hier_bytes_compacted']}/"
+                 f"{am['n1024']['dense_bytes']} "
+                 f"(C={am['n1024']['live_clusters']}/1024, "
+                 f"ratio={am['n1024']['bytes_ratio_vs_dense']:.3f}); "
+                 f"parity@256={am['parity_ratio']:.3f} "
+                 f"within5pct={am['parity_within_5pct']}"))
 
     save_json("BENCH_engine", out)
     rows.append(("engine_scan_speedup", 0.0, f"x{speedup:.2f}"))

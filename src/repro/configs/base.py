@@ -238,6 +238,15 @@ class RAgeKConfig:
     buffer_k: int = 0                # 0 -> N (sync-equivalent window)
     staleness_eta: float = 0.5
     version_window: int = 1
+    # age plane layout (fl.engine DeviceAgeState, DESIGN.md §12):
+    # 'dense' keeps the (N, d) cluster_age + freq matrices on device
+    # (default — bit-exact with the pre-layout engine and with every
+    # test that reads engine.age.freq directly); 'hierarchical' keys
+    # cluster_age by live cluster id ((C_max, d), compacted at each
+    # recluster) and replaces the dense freq with a bounded sparse
+    # update log + O(N) per-client metadata — bit-identical curves,
+    # ~C/N the age-plane device memory at large N
+    age_layout: str = "dense"
 
     # population-independent validation at CONSTRUCTION time, so a bad
     # flag fails with a clear ValueError here instead of a shape error
@@ -250,6 +259,7 @@ class RAgeKConfig:
     _CANDIDATES = ("sort", "threshold")
     _SCHEDULES = ("full", "uniform", "aoi", "deadline")
     _WIRE_DTYPES = ("float32", "bfloat16", "float16")
+    _AGE_LAYOUTS = ("dense", "hierarchical")
 
     def __post_init__(self):
         if self.method not in self._METHODS:
@@ -264,6 +274,9 @@ class RAgeKConfig:
         if self.wire_dtype not in self._WIRE_DTYPES:
             raise ValueError(f"wire_dtype must be one of "
                              f"{self._WIRE_DTYPES}, got {self.wire_dtype!r}")
+        if self.age_layout not in self._AGE_LAYOUTS:
+            raise ValueError(f"age_layout must be one of "
+                             f"{self._AGE_LAYOUTS}, got {self.age_layout!r}")
         for name in ("r", "k", "H", "M", "batch_size", "min_pts"):
             if getattr(self, name) < 1:
                 raise ValueError(f"{name} must be >= 1, "

@@ -11,6 +11,15 @@ Merge rule note: the paper says "its age vector is merged with that of the
 cluster" without pinning the operator. We use elementwise MIN of ages
 (freshest information wins: if any member recently updated index j, the
 cluster knows j). ``merge="max"`` is available for ablation.
+
+This host ``AgeState`` is also the recluster REFERENCE for the engine's
+device age plane under BOTH layouts (``fl.engine`` ``age_layout=
+'dense'|'hierarchical'``, DESIGN.md §12): the device state is pulled
+down as cluster rows keyed by cluster id (:meth:`from_cluster_rows` —
+layout-agnostic, since the dense layout also keys its rows by cluster
+id), ``apply_clusters`` performs the merge/reset, and the resulting
+rows go back up as an (N, d) matrix (dense) or a compact (C, d) one
+(hierarchical).
 """
 from __future__ import annotations
 
@@ -37,6 +46,23 @@ class AgeState:
         self.cluster_of = np.arange(self.n_clients)
         self.ages = {i: np.zeros(self.d, np.int32) for i in range(self.n_clients)}
         self.freq = np.zeros((self.n_clients, self.d), np.int64)
+
+    @classmethod
+    def from_cluster_rows(cls, cluster_age: np.ndarray,
+                          cluster_of: np.ndarray,
+                          merge: str = "min") -> "AgeState":
+        """Rebuild the host reference from a device age plane's pulled
+        rows: ``cluster_age`` is (R, d) with row c holding cluster c's
+        age vector (R = N under the dense layout, R = C_max under the
+        hierarchical one — both key rows by cluster id, so the rebuild
+        is layout-agnostic) and ``cluster_of`` the (N,) labels. Only
+        LIVE rows (ids present in ``cluster_of``) become age vectors."""
+        st = cls(int(cluster_age.shape[1]), int(cluster_of.shape[0]),
+                 merge=merge)
+        st.cluster_of = cluster_of.astype(np.int64)
+        st.ages = {int(c): cluster_age[int(c)].copy()
+                   for c in np.unique(st.cluster_of)}
+        return st
 
     # -- protocol hooks -----------------------------------------------------
     def age_of(self, client: int) -> np.ndarray:

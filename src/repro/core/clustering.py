@@ -2,10 +2,42 @@
 
 sklearn is not available offline, so DBSCAN is implemented here (exact,
 region-growing formulation on a precomputed distance matrix).
+
+The eq.-(3) input is the (N, d) request-frequency matrix. Under the
+engine's dense age layout that matrix lives on device and is pulled
+whole every M rounds; under the hierarchical layout (DESIGN.md §12) the
+device keeps only a bounded ring of the per-round requested indices and
+the host rebuilds the SAME matrix incrementally with
+:func:`fold_request_log` — the clustering features are identical, only
+the device->host pull shrinks from O(N·d) to O(m·k·M) per boundary.
 """
 from __future__ import annotations
 
 import numpy as np
+
+
+def fold_request_log(freq: np.ndarray, members: np.ndarray,
+                     indices: np.ndarray, *, n_clients: int,
+                     d: int) -> np.ndarray:
+    """Fold drained sparse-log slots into the cumulative (N, d) frequency
+    matrix (the eq.-(3) feature rebuild of the hierarchical age plane).
+
+    members: (..., m) int32 requesting client ids, sentinel ``n_clients``
+    for padded participant slots; indices: (..., m, k) int32 requested
+    coordinates, sentinel ``d`` for "no request". Every (member, index)
+    pair below the sentinels counts one request — exactly the
+    ``freq.at[client, idx].add(1, mode="drop")`` the dense layout runs
+    on device, so the rebuilt matrix is bit-identical to the dense pull.
+    Mutates and returns ``freq``.
+    """
+    mem = np.asarray(members).reshape(-1)
+    idx = np.asarray(indices).reshape(mem.shape[0], -1)
+    ok = mem < n_clients
+    rows = np.repeat(mem[ok], idx.shape[1])
+    cols = idx[ok].reshape(-1)
+    keep = cols < d
+    np.add.at(freq, (rows[keep], cols[keep]), 1)
+    return freq
 
 
 def similarity_matrix(freq: np.ndarray) -> np.ndarray:

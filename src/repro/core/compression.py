@@ -94,6 +94,35 @@ def bytes_per_round(k: int, d: int, value_bytes: int | None = None,
     return m_active * per_client
 
 
+def clustering_input_bytes(d: int, n_clients: int, *, k: int = 0,
+                           M: int = 1, m_active: int | None = None,
+                           layout: str = "dense") -> int:
+    """Device->host bytes of the every-M DBSCAN clustering input
+    (eq. 3) — the engine's one genuinely host-shaped transfer, per
+    recluster boundary (DESIGN.md §12).
+
+    ``layout='dense'``: the whole cumulative (N, d) int32 frequency
+    matrix is pulled — N·d·4 bytes, independent of M or participation.
+    ``layout='hierarchical'``: only the sparse update log accumulated
+    since the last boundary comes down — M round-slots of m_bound
+    participants' (k requested indices + 1 member id) each, int32, i.e.
+    O(m·k·M) instead of O(N·d). ``m_active`` is the scheduler's static
+    participant bound (None -> full participation, m = N).
+    """
+    if layout == "dense":
+        return n_clients * d * 4
+    if layout != "hierarchical":
+        raise ValueError(f"layout must be 'dense' or 'hierarchical', "
+                         f"got {layout!r}")
+    if M < 1 or k < 0:
+        raise ValueError(f"need M >= 1 and k >= 0, got M={M}, k={k}")
+    m = n_clients if m_active is None else m_active
+    if m < 0 or m > n_clients:
+        raise ValueError(f"m_active must be in [0, N={n_clients}], "
+                         f"got {m_active}")
+    return M * m * (k + 1) * 4
+
+
 def downlink_bytes_per_round(n_req: int, d: int,
                              index_bytes: int | None = None,
                              m_active: int | None = None) -> int:

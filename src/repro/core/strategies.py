@@ -387,7 +387,10 @@ def segmented_rage_select(G: jnp.ndarray, cluster_age: jnp.ndarray,
     cluster (scan length = max_seg, not N) and clusters run in parallel
     (vmap / one Pallas program per segment).
 
-    G: (N, d) client gradients; cluster_age: (>=num_segments, d) int32;
+    G: (N, d) client gradients; cluster_age: (>=num_segments, d) int32
+    rows keyed by cluster id — (N, d) under the engine's dense layout,
+    the compact (C_max, d) under the hierarchical one (DESIGN.md §12;
+    the default num_segments bound follows the ROW count, so both fit);
     cluster_of: (N,) int32 labels < num_segments (each cluster <= max_seg
     members). impl='pallas' routes the inner masked top-k through
     ``kernels.ops.segmented_age_topk``; ``cands`` takes a precomputed
@@ -425,7 +428,7 @@ def segmented_rage_select(G: jnp.ndarray, cluster_age: jnp.ndarray,
     else:
         n, d = G.shape
     if num_segments is None:
-        num_segments = n
+        num_segments = min(n, int(cluster_age.shape[0]))
     if max_seg is None:
         max_seg = n
     members = segment_pack(cluster_of, num_segments, max_seg, active=active)

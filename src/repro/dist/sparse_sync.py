@@ -44,10 +44,28 @@ def init_age_state(params, *, method: str = "rage_k"):
     """Age pytree: int32 zeros shaped like every param leaf. For
     ``method='cafe'`` each leaf gains a leading (2,) axis: row 0 the age
     vector, row 1 the cumulative upload-cost counter the CAFe score
-    discounts by."""
+    discounts by.
+
+    Note the relation to the FL engine's hierarchical age plane
+    (``fl.engine.DeviceAgeState``, DESIGN.md §12): the manual sync's
+    union-age semantics treat the whole data axis as ONE cluster, so
+    this pytree IS the cluster-keyed layout at C=1 — one (d,) row total
+    (bucketed per leaf), independent of the number of data shards. The
+    per-client (N, d) matrices only exist in the engine's dense layout;
+    the distributed collective never had them to shrink."""
     lead = (2,) if method == "cafe" else ()
     return jax.tree_util.tree_map(
         lambda p: jnp.zeros(lead + tuple(p.shape), jnp.int32), params)
+
+
+def age_state_bytes(ages) -> int:
+    """Device bytes of a sync age pytree — the distributed analogue of
+    ``DeviceAgeState.device_bytes``. Under union-age semantics this is
+    O(d) (x2 for cafe's cost lane) no matter how many data shards
+    participate: the C=1 cluster-keyed row of the hierarchical memory
+    model, which is what benchmarks compare engine layouts against."""
+    return sum(int(a.size) * a.dtype.itemsize
+               for a in jax.tree_util.tree_leaves(ages))
 
 
 def init_age_state_sharded(shapes, *, method: str = "rage_k"):

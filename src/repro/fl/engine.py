@@ -25,8 +25,11 @@ Only two things ever cross to host:
 
   * per-round metrics — losses (N,), requested indices (N, k) — pulled
     per round (step) or per chunk (scan);
-  * the (N, d) int32 frequency matrix, every M rounds, for DBSCAN
-    clustering (eq. 3) — the one genuinely host-shaped step.
+  * the every-M DBSCAN input (eq. 3) — the one genuinely host-shaped
+    step: the whole (N, d) int32 frequency matrix under
+    ``age_layout='dense'``, or just the bounded sparse update log
+    (O(m_bound·k·M) int32) under ``'hierarchical'``, from which the
+    host rebuilds the identical matrix (DESIGN.md §12).
 
 The dense (N, d) float gradient matrix never leaves the accelerator
 (pinned by tests/test_engine_golden.py). Method dispatch goes through
@@ -73,7 +76,8 @@ import numpy as np
 
 from repro.configs.base import RAgeKConfig
 from repro.core.age import AgeState
-from repro.core.clustering import cluster_clients, connectivity_matrix
+from repro.core.clustering import (cluster_clients, connectivity_matrix,
+                                   fold_request_log)
 from repro.core.compression import bytes_per_index, bytes_per_round
 from repro.core.strategies import (CANDIDATE_IMPLS, client_candidates,
                                    make_strategy, segmented_rage_select)
@@ -88,21 +92,102 @@ from repro.optim.optimizers import adam, sgd, apply_updates
 class DeviceAgeState(NamedTuple):
     """PS age state as a device pytree (threaded through the jitted round).
 
-    cluster_age: (N, d) int32 — row c is cluster c's age vector (rows
-                 beyond the live cluster count are unused; clusters <= N).
-    freq:        (N, d) int32 — per-client request counts (eq. 3 inputs).
-    cluster_of:  (N,) int32   — cluster id per client (singletons at t=0).
+    Two layouts share this container (``age_layout='dense'|
+    'hierarchical'``, DESIGN.md §12). In BOTH, ``cluster_age`` rows are
+    keyed by CLUSTER id — eq. (2) makes ages cluster-shared, so a
+    per-client row never existed; the dense layout merely allocates the
+    static bound N rows (every client its own singleton), while the
+    hierarchical one re-allocates exactly the live-cluster count at
+    every recluster boundary and keeps only O(N) per-client metadata:
+
+    field        dense                hierarchical
+    -----------  -------------------  ---------------------------------
+    cluster_age  (N, d) int32         (C_max, d) int32 — C_max is the
+                 rows >= live count   live cluster count, a STATIC
+                 stay zero            bound recomputed per recluster
+                                      (like the packing bounds)
+    freq         (N, d) int32         None — replaced by the sparse
+                 (eq. 3 inputs)       update log below; the host keeps
+                                      the cumulative matrix
+    cluster_of   (N,) int32           (N,) int32 (unchanged)
+    cost         None                 cafe only: (N, d) int32 CAFe
+                                      per-coordinate upload-cost rows
+                                      (cafe clusters stay singletons,
+                                      so these are already
+                                      cluster-keyed; dense stores them
+                                      in ``freq``)
+    upload_cost  None                 (N,) int32 — cumulative uploaded
+                                      entries per client, the O(N)
+                                      scalar cost signal (CAFe-style
+                                      solicitation / cost-aware
+                                      scheduling reads this, never the
+                                      dense matrix)
+    log_idx      None                 (L, m_bound, k) int32 ring of the
+                                      per-round requested indices
+                                      (sentinel d = no request)
+    log_mem      None                 (L, m_bound) int32 requesting
+                                      client ids (sentinel N = padded
+                                      participant slot)
+    log_ptr      None                 () int32 — MONOTONE write
+                                      pointer; the host tracks how far
+                                      it has drained (ring length L
+                                      covers one recluster window)
+
+    The log replaces the dense ``freq`` as the every-M DBSCAN input:
+    O(m_bound·k·L) device memory and boundary pull instead of O(N·d)
+    (``core.clustering.fold_request_log`` rebuilds the identical
+    matrix host-side).
     """
 
     cluster_age: jnp.ndarray
-    freq: jnp.ndarray
+    freq: jnp.ndarray | None
     cluster_of: jnp.ndarray
+    cost: jnp.ndarray | None = None
+    upload_cost: jnp.ndarray | None = None
+    log_idx: jnp.ndarray | None = None
+    log_mem: jnp.ndarray | None = None
+    log_ptr: jnp.ndarray | None = None
 
     @classmethod
     def create(cls, d: int, n_clients: int) -> "DeviceAgeState":
+        """Dense layout at t=0: ``n_clients`` singleton cluster rows
+        (the first axis holds CLUSTER rows that happen to coincide with
+        client ids until a recluster merges some) plus the dense (N, d)
+        frequency matrix."""
         return cls(cluster_age=jnp.zeros((n_clients, d), jnp.int32),
                    freq=jnp.zeros((n_clients, d), jnp.int32),
                    cluster_of=jnp.arange(n_clients, dtype=jnp.int32))
+
+    @classmethod
+    def create_hierarchical(cls, d: int, n_clients: int, *,
+                            log_len: int = 0, m_bound: int = 0,
+                            k: int = 0,
+                            with_cost: bool = False) -> "DeviceAgeState":
+        """Hierarchical layout at t=0: singleton clusters, so C_max
+        starts at N and shrinks at the first merging recluster.
+        ``log_len``/``m_bound``/``k`` size the sparse update log ring
+        (log_len=0 — methods that never recluster — allocates no log);
+        ``with_cost`` adds the CAFe per-coordinate cost rows."""
+        log = log_len > 0
+        return cls(
+            cluster_age=jnp.zeros((n_clients, d), jnp.int32),
+            freq=None,
+            cluster_of=jnp.arange(n_clients, dtype=jnp.int32),
+            cost=(jnp.zeros((n_clients, d), jnp.int32) if with_cost
+                  else None),
+            upload_cost=jnp.zeros((n_clients,), jnp.int32),
+            log_idx=(jnp.full((log_len, m_bound, k), d, jnp.int32)
+                     if log else None),
+            log_mem=(jnp.full((log_len, m_bound), n_clients, jnp.int32)
+                     if log else None),
+            log_ptr=jnp.int32(0) if log else None)
+
+    @property
+    def device_bytes(self) -> int:
+        """Device bytes of the age plane (every array leaf) — the
+        quantity the hierarchical layout shrinks ~C/N."""
+        return sum(int(a.size) * a.dtype.itemsize
+                   for a in jax.tree_util.tree_leaves(self))
 
 
 @dataclass
@@ -282,13 +367,16 @@ def rage_select(g: jnp.ndarray, age: DeviceAgeState, *, r: int, k: int,
             taken = taken.at[cl, idx].set(True, mode="drop")
         return taken, idx
 
-    taken0 = jnp.zeros((n, d), bool)
+    # cluster-indexed scratch is sized by the age plane's ROW count —
+    # N under the dense layout, the C_max bound under the hierarchical
+    nrows = age.cluster_age.shape[0]
+    taken0 = jnp.zeros((nrows, d), bool)
     _, idx = jax.lax.scan(sel_body, taken0,
                           (cands, age.cluster_of, active))
 
     # inactive members' +1s first (they commute — no reset), then the
     # active members' sequential +1-and-reset in client order
-    inact = jnp.zeros((n,), jnp.int32).at[age.cluster_of].add(
+    inact = jnp.zeros((nrows,), jnp.int32).at[age.cluster_of].add(
         (~active).astype(jnp.int32))
 
     def age_body(ca, inp):
@@ -300,9 +388,10 @@ def rage_select(g: jnp.ndarray, age: DeviceAgeState, *, r: int, k: int,
     cluster_age, _ = jax.lax.scan(
         age_body, age.cluster_age + inact[:, None],
         (idx, age.cluster_of, active))
-    freq = age.freq.at[jnp.arange(n)[:, None], idx].add(1, mode="drop")
-    return idx.astype(jnp.int32), DeviceAgeState(cluster_age, freq,
-                                                 age.cluster_of)
+    freq = (age.freq.at[jnp.arange(n)[:, None], idx].add(1, mode="drop")
+            if age.freq is not None else None)   # hierarchical: logged
+    return idx.astype(jnp.int32), age._replace(cluster_age=cluster_age,
+                                               freq=freq)
 
 
 @partial(jax.jit, static_argnames=("r", "k", "disjoint", "num_segments",
@@ -339,42 +428,53 @@ def rage_select_segmented(g: jnp.ndarray, age: DeviceAgeState, *, r: int,
         g, age.cluster_age, age.cluster_of, r=r, k=k,
         num_segments=num_segments, max_seg=max_seg, disjoint=disjoint,
         impl=impl, cands=cands, candidates=candidates, active=active, d=d)
-    freq = age.freq.at[jnp.arange(n)[:, None], idx].add(1, mode="drop")
+    freq = (age.freq.at[jnp.arange(n)[:, None], idx].add(1, mode="drop")
+            if age.freq is not None else None)   # hierarchical: logged
     idx = idx.astype(jnp.int32)
-    new_age = DeviceAgeState(new_ca, freq, age.cluster_of)
+    new_age = age._replace(cluster_age=new_ca, freq=freq)
     if return_seg:
         return idx, new_age, seg
     return idx, new_age
 
 
 def _recluster_host(freq: np.ndarray, cluster_age: np.ndarray,
-                    cluster_of: np.ndarray, eps: float, min_pts: int):
+                    cluster_of: np.ndarray, eps: float, min_pts: int,
+                    compact: bool = False):
     """The host-shaped part of a recluster, pure numpy (thread-safe —
     the scan driver runs it on a worker thread overlapped with the chunk
     boundary work): eq. (3) similarity -> DBSCAN -> merge/reset of the
     cluster age rows via ``core.age.AgeState.apply_clusters`` (the one
-    place those semantics live). Returns (new (N, d) int32 cluster_age,
-    (N,) labels)."""
+    place those semantics live). ``cluster_age`` rows are keyed by
+    cluster id under BOTH layouts ((N, d) dense, (C_max, d)
+    hierarchical — :meth:`AgeState.from_cluster_rows` is
+    layout-agnostic). Returns (new int32 cluster_age — (N, d) rows by
+    default, the compact (C_new, d) live rows when ``compact`` — and
+    the (N,) labels)."""
     n, d = freq.shape
     labels = cluster_clients(freq, eps, min_pts)
-    st = AgeState(d, n)
-    st.cluster_of = cluster_of.astype(np.int64)
-    st.ages = {int(c): cluster_age[int(c)].copy()
-               for c in np.unique(st.cluster_of)}
+    st = AgeState.from_cluster_rows(cluster_age, cluster_of)
     st.apply_clusters(labels)
-    new_ca = np.zeros((n, d), np.int32)
+    rows = (int(st.cluster_of.max()) + 1) if compact else n
+    new_ca = np.zeros((rows, d), np.int32)
     for c, v in st.ages.items():
         new_ca[c] = v
     return new_ca, st.cluster_of
 
 
-def _recluster_host_packed(age: DeviceAgeState, eps: float, min_pts: int):
+def _recluster_host_packed(age: DeviceAgeState, eps: float, min_pts: int,
+                           freq: np.ndarray | None = None,
+                           compact: bool = False):
     """Device->host pull of the age state + :func:`_recluster_host` —
     the single marshalling point shared by the sync path, the async
-    worker and :func:`recluster_packed`."""
-    return _recluster_host(np.asarray(age.freq),
-                           np.asarray(age.cluster_age),
-                           np.asarray(age.cluster_of), eps, min_pts)
+    worker and :func:`recluster_packed`. Under the hierarchical layout
+    the caller hands in the host-accumulated ``freq`` matrix (rebuilt
+    from the drained sparse log — the device has no dense matrix to
+    pull) and asks for compact (C_new, d) rows."""
+    if freq is None:
+        freq = np.asarray(age.freq)
+    return _recluster_host(freq, np.asarray(age.cluster_age),
+                           np.asarray(age.cluster_of), eps, min_pts,
+                           compact=compact)
 
 
 def recluster_packed(age: DeviceAgeState, eps: float, min_pts: int):
@@ -386,14 +486,38 @@ def recluster_packed(age: DeviceAgeState, eps: float, min_pts: int):
     source for the segmented packing bounds (live cluster count, max
     cluster size) without any extra transfer."""
     new_ca, labels = _recluster_host_packed(age, eps, min_pts)
-    return DeviceAgeState(
-        cluster_age=jnp.asarray(new_ca), freq=age.freq,
+    return age._replace(
+        cluster_age=jnp.asarray(new_ca),
         cluster_of=jnp.asarray(labels, dtype=jnp.int32)), labels
 
 
 def recluster(age: DeviceAgeState, eps: float, min_pts: int) -> DeviceAgeState:
     """:func:`recluster_packed` without the label return (compat surface)."""
     return recluster_packed(age, eps, min_pts)[0]
+
+
+def drain_request_log(age: DeviceAgeState, freq_host: np.ndarray,
+                      seen: int, *, n: int, d: int) -> int:
+    """Pull the sparse update-log slots written since watermark ``seen``
+    (hierarchical layout) and fold them into the host-side cumulative
+    (N, d) frequency matrix — the O(m_bound·k·M) device->host transfer
+    that replaces the dense layout's O(N·d) freq pull. Returns the new
+    watermark (the current ``log_ptr``). Shared by the engine and the
+    async service; the caller guarantees no concurrent reader of
+    ``freq_host`` (both drain before handing it to the DBSCAN
+    worker)."""
+    ptr = int(age.log_ptr)
+    if ptr == seen:
+        return seen
+    L = int(age.log_idx.shape[0])
+    # the ring covers exactly one recluster window and every recluster
+    # drains, so the device writer can never lap the host watermark
+    assert ptr - seen <= L, (
+        f"update log overran: ptr={ptr} seen={seen} L={L}")
+    slots = np.array([p % L for p in range(seen, ptr)])
+    fold_request_log(freq_host, np.asarray(age.log_mem)[slots],
+                     np.asarray(age.log_idx)[slots], n_clients=n, d=d)
+    return ptr
 
 
 # ---------------------------------------------------------------------------
@@ -498,7 +622,25 @@ class FederatedEngine:
         self.params_s = C.broadcast_global(g_params, n)
         self.opt_s = jax.vmap(adam(hp.lr).init)(self.params_s)
         self.state_s = C.stack_clients([state0] * n) if state0 else {}
-        self.age = DeviceAgeState.create(self.d, n)
+        # age plane layout (DESIGN.md §12): 'dense' keeps the (N, d)
+        # matrices on device; 'hierarchical' keys cluster_age by live
+        # cluster id ((C_max, d), compacted at every recluster) and
+        # replaces the dense freq with the bounded sparse update log —
+        # the host accumulates the cumulative (N, d) matrix from the
+        # drained log (bit-identical eq.-3 features, O(m·k·M) pull)
+        self._age_layout = hp.age_layout
+        if self._age_layout == "hierarchical":
+            rage = hp.method == "rage_k"
+            self.age = DeviceAgeState.create_hierarchical(
+                self.d, n, log_len=hp.M if rage else 0,
+                m_bound=self._scheduler.m_bound, k=hp.k,
+                with_cost=hp.method == "cafe")
+            self._freq_host = (np.zeros((n, self.d), np.int32)
+                               if rage else None)
+        else:
+            self.age = DeviceAgeState.create(self.d, n)
+            self._freq_host = None
+        self._log_seen = 0               # host drain watermark (log_ptr)
         self.ef_mem = (jnp.zeros((n, self.d), jnp.float32) if ef else None)
         self._key = jax.random.PRNGKey(seed + 99)
         self.sched = SchedState.create(n, seed + 23)
@@ -667,24 +809,31 @@ class FederatedEngine:
         elif method == "cafe":
             # per-client cost-and-age selection via the batched protocol;
             # cluster_age doubles as the per-client age rows (clusters
-            # stay singleton — no recluster on this method) and freq is
-            # exactly the cumulative upload cost CAFe discounts by.
-            # Inactive clients: eq. (2) with no reset, no cost, no request
+            # stay singleton — no recluster on this method) and the
+            # cumulative cost CAFe discounts by lives in ``freq``
+            # (dense layout) or the dedicated ``cost`` rows
+            # (hierarchical — already cluster-keyed, cafe clusters are
+            # singletons). Inactive clients: eq. (2) with no reset, no
+            # cost, no request
+            cost_pl = age.freq if age.freq is not None else age.cost
             if gathered:
                 idx_c, _, (ca_c, fr_c) = self._strategy.select_batch(
-                    g, (age.cluster_age[iclip], age.freq[iclip]))
+                    g, (age.cluster_age[iclip], cost_pl[iclip]))
                 ca = (age.cluster_age + 1).at[act_idx].set(ca_c,
                                                            mode="drop")
-                fr = age.freq.at[act_idx].set(fr_c, mode="drop")
+                fr = cost_pl.at[act_idx].set(fr_c, mode="drop")
                 idx = jnp.full((n, hp.k), d, jnp.int32).at[act_idx].set(
                     idx_c.astype(jnp.int32), mode="drop")
             else:
                 idx, _, (ca, fr) = self._strategy.select_batch(
-                    g, (age.cluster_age, age.freq))
+                    g, (age.cluster_age, cost_pl))
                 ca = jnp.where(act[:, None], ca, age.cluster_age + 1)
-                fr = jnp.where(act[:, None], fr, age.freq)
+                fr = jnp.where(act[:, None], fr, cost_pl)
                 idx = idx.astype(jnp.int32)
-            age = DeviceAgeState(ca, fr, age.cluster_of)
+            if age.freq is not None:
+                age = age._replace(cluster_age=ca, freq=fr)
+            else:
+                age = age._replace(cluster_age=ca, cost=fr)
         elif method == "dense":
             idx = None
         elif method in ("rtop_k", "random_k"):
@@ -710,6 +859,34 @@ class FederatedEngine:
             # place so no strategy branch can forget the mask (a no-op
             # on the rage paths, which already masked internally)
             idx = jnp.where(act[:, None], idx, jnp.int32(d))
+
+        if method == "rage_k" and age.log_ptr is not None:
+            # hierarchical layout: append this round's requests to the
+            # sparse update log ring (the every-M DBSCAN input — the
+            # dense layout's on-device freq scatter moved host-side).
+            # Rows are the compacted participants; padded slots carry
+            # sentinel client id n and all-sentinel-d index rows
+            if gathered:
+                mem, ok, mclip = act_idx, slot_ok, iclip
+            else:
+                mem = jnp.nonzero(act, size=age.log_mem.shape[1],
+                                  fill_value=n)[0].astype(jnp.int32)
+                ok = mem < n
+                mclip = jnp.minimum(mem, jnp.int32(n - 1))
+            slot = jax.lax.rem(age.log_ptr,
+                               jnp.int32(age.log_idx.shape[0]))
+            age = age._replace(
+                log_idx=age.log_idx.at[slot].set(
+                    jnp.where(ok[:, None], idx[mclip], jnp.int32(d))),
+                log_mem=age.log_mem.at[slot].set(mem),
+                log_ptr=age.log_ptr + 1)
+        if age.upload_cost is not None:
+            # O(N) per-client cumulative upload-cost scalar (entries
+            # actually uploaded this round — the CAFe-style cost signal
+            # at scale, no dense matrix needed)
+            per = jnp.int32(d if method == "dense" else hp.k)
+            age = age._replace(upload_cost=age.upload_cost
+                               + act.astype(jnp.int32) * per)
 
         # ``sent`` (what each client actually uploaded, for the ef
         # residual) stays COMPACT (m, d) in gathered mode; only the
@@ -795,7 +972,8 @@ class FederatedEngine:
         # Coordinate AoI: the cluster_age field over LIVE cluster rows.
         aoi = jnp.where(act, jnp.int32(0), sched.aoi + 1)
         sched = SchedState(key=sched.key, rnd=sched.rnd + 1, aoi=aoi)
-        live = jnp.zeros((n,), bool).at[age.cluster_of].set(True)
+        live = jnp.zeros((age.cluster_age.shape[0],),
+                         bool).at[age.cluster_of].set(True)
         ca_live = jnp.where(live[:, None], age.cluster_age, 0)
         metrics = {
             "losses": losses,
@@ -923,23 +1101,62 @@ class FederatedEngine:
                       if self.hp.method != "dense" else None)
         return out
 
+    def _drain_freq_log(self):
+        """Pull the sparse update-log slots written since the last drain
+        and fold them into the host-side cumulative (N, d) frequency
+        matrix (hierarchical layout; no-op otherwise). O(m_bound·k·M)
+        device->host bytes per recluster window instead of the dense
+        layout's O(N·d) pull. Callers must hold no in-flight recluster
+        (the worker reads ``_freq_host``) — both call sites join
+        first."""
+        if self._freq_host is None or self.age.log_ptr is None:
+            return
+        self._log_seen = drain_request_log(self.age, self._freq_host,
+                                           self._log_seen, n=self.n,
+                                           d=self.d)
+
+    @property
+    def freq_matrix(self) -> np.ndarray:
+        """The cumulative (N, d) request-frequency matrix (eq.-3 inputs /
+        the paper's heatmap source), layout-agnostic: the device matrix
+        under 'dense', the host accumulator (sparse log drained first)
+        under 'hierarchical' — bit-identical by construction. CAFe's
+        cost rows stand in for freq exactly as the dense layout stores
+        them there; methods that never request return zeros."""
+        self._recluster_join()
+        if self.age.freq is not None:
+            return np.asarray(self.age.freq)
+        if self._freq_host is not None:
+            self._drain_freq_log()
+            return self._freq_host
+        if self.age.cost is not None:
+            return np.asarray(self.age.cost)
+        return np.zeros((self.n, self.d), np.int32)
+
     def _recluster_submit(self):
         """Kick the every-M host DBSCAN onto a worker thread at a chunk
         boundary (scan driver): the device->host freq pull, eq. (3)
         similarity, DBSCAN and the age merge all run while the main
         thread drains the chunk metrics and bookkeeps; :meth:`_recluster`
         joins BEFORE the labels are consumed. Bit-identical to the
-        synchronous path — same freq snapshot, same numpy math."""
+        synchronous path — same freq snapshot, same numpy math. Under
+        the hierarchical layout the sparse log is drained HERE, on the
+        main thread, before the submit — the worker then reads a
+        quiescent ``_freq_host`` (the next drain cannot start until
+        this future is joined)."""
         if self._recluster_future is not None:
             return
         if self._recluster_pool is None:
             self._recluster_pool = ThreadPoolExecutor(
                 max_workers=1, thread_name_prefix="recluster")
+        self._drain_freq_log()
         age, eps, mp = self.age, self.hp.eps, self.hp.min_pts
+        freq, compact = self._freq_host, self._age_layout == "hierarchical"
 
         def work():
             t0 = time.perf_counter()
-            out = _recluster_host_packed(age, eps, mp)
+            out = _recluster_host_packed(age, eps, mp, freq=freq,
+                                         compact=compact)
             return out, time.perf_counter() - t0
 
         self._recluster_future = self._recluster_pool.submit(work)
@@ -959,8 +1176,10 @@ class FederatedEngine:
         if self._recluster_future is not None:
             return
         t0 = time.perf_counter()
-        new_ca, labels = _recluster_host_packed(self.age, self.hp.eps,
-                                                self.hp.min_pts)
+        self._drain_freq_log()
+        new_ca, labels = _recluster_host_packed(
+            self.age, self.hp.eps, self.hp.min_pts, freq=self._freq_host,
+            compact=self._age_layout == "hierarchical")
         dt = time.perf_counter() - t0
         self.recluster_s += dt
         self.recluster_wait_s += dt
@@ -985,8 +1204,13 @@ class FederatedEngine:
         self._apply_recluster(new_ca, labels)
 
     def _apply_recluster(self, new_ca: np.ndarray, labels: np.ndarray):
-        self.age = DeviceAgeState(jnp.asarray(new_ca), self.age.freq,
-                                  jnp.asarray(labels, dtype=jnp.int32))
+        # remap rule (DESIGN.md §12): rows keyed by the canonical labels
+        # apply_clusters just produced; hierarchical hands back exactly
+        # the C_new live rows (the new static bound — shape change means
+        # one retrace per distinct C_new, same as the packing bounds)
+        self.age = self.age._replace(
+            cluster_age=jnp.asarray(new_ca),
+            cluster_of=jnp.asarray(labels, dtype=jnp.int32))
         # tighten the segmented packing to the live clustering — from the
         # labels DBSCAN just produced ON HOST, no new device->host pull
         self._num_seg = int(labels.max()) + 1
@@ -1064,7 +1288,7 @@ class FederatedEngine:
                       f"acc={acc:.4f} "
                       f"upl={self.cum_bytes/2**20:.2f}MB{aoi}")
         if t in heatmap_at:
-            res.heatmaps[t] = connectivity_matrix(np.asarray(self.age.freq))
+            res.heatmaps[t] = connectivity_matrix(self.freq_matrix)
 
     def run(self, rounds: int, *, eval_every: int = 5, heatmap_at=(),
             verbose: bool = False) -> FLResult:

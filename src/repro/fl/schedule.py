@@ -38,6 +38,13 @@ Client-level AoI (``SchedState.aoi``: rounds since the PS last heard
 from each client) is maintained by the ENGINE for every scheduler —
 it is the metric participation experiments plot (``FLResult.aoi_peak``)
 and the score :class:`AoIBalanced` schedules by.
+
+Every scheduler reads only O(N) per-client vectors (``SchedState.aoi``,
+and — for cost-aware policies — the hierarchical age plane's
+``DeviceAgeState.upload_cost`` scalar), never an (N, d) matrix: the
+participation plane is layout-independent and stays O(N) under
+``age_layout='hierarchical'`` (DESIGN.md §12), which is what makes
+AoI-balanced scheduling feasible at production N.
 """
 from __future__ import annotations
 

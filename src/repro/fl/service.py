@@ -65,8 +65,8 @@ from repro.data.pipeline import DeviceShardStore
 from repro.fl import client as C
 from repro.fl.engine import (DeviceAgeState, _build_model,
                              _recluster_host_packed, apply_global,
-                             build_eval_sets, member_age_row,
-                             select_member_topk)
+                             build_eval_sets, drain_request_log,
+                             member_age_row, select_member_topk)
 from repro.fl.latency import LatencyModel
 from repro.optim.optimizers import adam, sgd
 
@@ -88,8 +88,11 @@ class ServiceState(NamedTuple):
     g_params / g_opt_state — current global model + optimizer.
     buf:          (d,) f32 — FedBuff accumulator (staleness-weighted).
     buf_count:    () i32   — updates landed since the last flush.
-    taken:        (N, d) bool — in-window cluster disjointness set
-                  (report mode; reset at every flush).
+    taken:        (C_rows, d) bool — in-window cluster disjointness set,
+                  keyed by cluster id (report mode; reset at every
+                  flush). C_rows follows the age plane's row count: N
+                  under ``age_layout='dense'``, the compacted C_max
+                  bound under ``'hierarchical'``.
     solicited:    (N, r) i32  — dispatch mode: the coordinate list the
                   PS solicited from each client at its dispatch.
     inflight:     (N, d) bool — dispatch mode: coordinates currently
@@ -244,6 +247,17 @@ class AsyncService:
         # --- device state (mirrors the engine's layout) --------------------
         n, d, V = self.n, self.d, self.V
         params_s = C.broadcast_global(g_params, n)
+        # age plane layout (DESIGN.md §12): the event loop writes one
+        # log slot per LANDING, so the hierarchical ring spans a full
+        # recluster window of M aggregations x K landings each
+        if hp.age_layout == "hierarchical":
+            age0 = DeviceAgeState.create_hierarchical(
+                d, n, log_len=hp.M * self.K, m_bound=1, k=hp.k)
+            self._freq_host = np.zeros((n, d), np.int32)
+        else:
+            age0 = DeviceAgeState.create(d, n)
+            self._freq_host = None
+        self._log_seen = 0
         self.state = ServiceState(
             clock=jnp.float32(0.0),
             next_done=jax.vmap(lambda i: self._latency.dispatch_s(
@@ -262,7 +276,7 @@ class AsyncService:
             solicited=jnp.zeros(
                 (n, hp.r if solicit == "dispatch" else 1), jnp.int32),
             inflight=jnp.zeros((n if solicit == "dispatch" else 1, d), bool),
-            age=DeviceAgeState.create(d, n),
+            age=age0,
             opt_s=jax.vmap(adam(hp.lr).init)(params_s),
             state_s=C.stack_clients([state0] * n) if state0 else {},
             samp=None,                       # filled below (needs store)
@@ -403,7 +417,23 @@ class AsyncService:
         buf_count = st.buf_count + 1
         ca = st.age.cluster_age.at[cl].set(
             member_age_row(st.age.cluster_age[cl], idx))
-        freq = st.age.freq.at[i, idx].add(1, mode="drop")
+        if st.age.freq is not None:
+            age = st.age._replace(
+                cluster_age=ca,
+                freq=st.age.freq.at[i, idx].add(1, mode="drop"))
+        else:
+            # hierarchical layout: the landing appends one slot to the
+            # sparse update log (m_bound=1 — one client per event) and
+            # bumps the O(N) cumulative upload-cost scalar
+            slot = jax.lax.rem(st.age.log_ptr,
+                               jnp.int32(st.age.log_idx.shape[0]))
+            age = st.age._replace(
+                cluster_age=ca,
+                log_idx=st.age.log_idx.at[slot, 0].set(
+                    idx.astype(jnp.int32)),
+                log_mem=st.age.log_mem.at[slot, 0].set(i),
+                log_ptr=st.age.log_ptr + 1,
+                upload_cost=st.age.upload_cost.at[i].add(hp.k))
 
         # 5. flush when K updates have landed: one global step on the
         #    buffered sum, new snapshot into ring slot (version+1) % V.
@@ -450,7 +480,7 @@ class AsyncService:
             ring=ring, g_params=g_params, g_opt_state=g_opt_state,
             buf=buf, buf_count=buf_count, taken=taken,
             solicited=solicited, inflight=inflight,
-            age=DeviceAgeState(ca, freq, st.age.cluster_of),
+            age=age,
             opt_s=opt_s, state_s=state_s, samp=samp, key=st.key)
         metrics = {"loss": loss, "client": i, "staleness": s,
                    "version": version, "flushed": flush, "clock": t,
@@ -501,17 +531,32 @@ class AsyncService:
         dispatch mode the in-flight solicitation marks are re-keyed to
         the new cluster rows."""
         t0 = time.perf_counter()
+        hier = self._freq_host is not None
+        if hier:
+            # hierarchical layout: fold the sparse log into the host
+            # cumulative matrix (the O(m·k·M) pull), cluster on that
+            self._log_seen = drain_request_log(
+                self.state.age, self._freq_host, self._log_seen,
+                n=self.n, d=self.d)
         new_ca, labels = _recluster_host_packed(
-            self.state.age, self.hp.eps, self.hp.min_pts)
-        age = DeviceAgeState(cluster_age=jnp.asarray(new_ca),
-                             freq=self.state.age.freq,
-                             cluster_of=jnp.asarray(labels, jnp.int32))
+            self.state.age, self.hp.eps, self.hp.min_pts,
+            freq=self._freq_host, compact=hier)
+        age = self.state.age._replace(
+            cluster_age=jnp.asarray(new_ca),
+            cluster_of=jnp.asarray(labels, jnp.int32))
         self.state = self.state._replace(age=age)
+        rows = int(age.cluster_age.shape[0])
+        if hier and self.state.taken.shape[0] != rows:
+            # cluster-row-keyed scratch follows the compacted C_max
+            # bound; reclusters land at flush boundaries, where the
+            # disjointness window was just reset — zeros are exact
+            self.state = self.state._replace(
+                taken=jnp.zeros((rows, self.d), bool))
         if self._solicit == "dispatch":
             cl = age.cluster_of
-            inflight = jnp.zeros_like(self.state.inflight)
-            rows = jnp.repeat(cl[:, None], self.hp.r, axis=1)
-            inflight = inflight.at[rows, self.state.solicited].set(True)
+            inflight = jnp.zeros((rows if hier else self.n, self.d), bool)
+            rr = jnp.repeat(cl[:, None], self.hp.r, axis=1)
+            inflight = inflight.at[rr, self.state.solicited].set(True)
             self.state = self.state._replace(inflight=inflight)
         self.recluster_s += time.perf_counter() - t0
 
@@ -537,6 +582,18 @@ class AsyncService:
     @property
     def age(self) -> DeviceAgeState:
         return self.state.age
+
+    @property
+    def freq_matrix(self) -> np.ndarray:
+        """Cumulative (N, d) request counts, layout-agnostic (mirrors
+        ``FederatedEngine.freq_matrix``): the device matrix under
+        'dense', the drained host accumulator under 'hierarchical'."""
+        if self.state.age.freq is not None:
+            return np.asarray(self.state.age.freq)
+        self._log_seen = drain_request_log(
+            self.state.age, self._freq_host, self._log_seen,
+            n=self.n, d=self.d)
+        return self._freq_host
 
     def run_async(self, aggregations: int, *, eval_every: int = 5,
                   verbose: bool = False) -> ServiceResult:

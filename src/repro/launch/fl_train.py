@@ -110,6 +110,14 @@ def main():
                     help="round deadline in simulated seconds for "
                          "--schedule deadline (0 -> 1.0, ~the median "
                          "simulated client round time)")
+    ap.add_argument("--age-layout", default="dense",
+                    choices=("dense", "hierarchical"),
+                    help="PS age-plane layout (DESIGN.md §12): 'dense' "
+                         "keeps (N, d) cluster_age + freq on device; "
+                         "'hierarchical' keys cluster_age by live "
+                         "cluster id and logs requests sparsely — "
+                         "bit-identical curves, ~C/N the age-plane "
+                         "memory at large N")
     ap.add_argument("--compute", default="auto",
                     choices=("auto", "gathered", "masked"),
                     help="local compute plane (DESIGN.md §11): "
@@ -153,7 +161,8 @@ def main():
                      deadline_s=args.deadline_s,
                      buffer_k=args.buffer_k,
                      staleness_eta=args.staleness_eta,
-                     version_window=args.version_window, **defaults)
+                     version_window=args.version_window,
+                     age_layout=args.age_layout, **defaults)
 
     if args.driver == "async":
         latency = LatencyModel(len(shards), hetero=args.hetero,

@@ -1,0 +1,283 @@
+"""Hierarchical age plane (DESIGN.md §12) — layout A/B + remap edges.
+
+1. ``age_layout='hierarchical'`` is BIT-IDENTICAL to ``'dense'`` (the
+   pinned default) for all six methods under both drivers, across >= 2
+   recluster boundaries, including a boundary where the live cluster
+   count changes — losses, requested indices, cluster labels, accuracy
+   curves AND the rebuilt (N, d) frequency matrix.
+2. The sparse update log rebuilds the dense layout's freq matrix
+   exactly (``core.clustering.fold_request_log`` vs the device
+   scatter), with sentinel member/index entries dropped.
+3. Recluster remap edge cases: the live cluster count shrinking and
+   growing across boundaries (compact (C, d) rows keyed by the
+   canonical labels, merge = elementwise min of fully absorbed rows,
+   split-off members reset), a cluster with NO participants for a whole
+   recluster window, and empty rounds (0 participants -> all-sentinel
+   log slots).
+4. Large-N smoke (slow lane): N=512 hierarchical engine runs a scanned
+   chunk under ``jax.transfer_guard("disallow")`` — the log append is
+   device-pure — and the age plane compacts after the boundary.
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro.configs.base import RAgeKConfig
+from repro.core.clustering import fold_request_log
+from repro.fl.engine import (DeviceAgeState, FederatedEngine,
+                             _recluster_host)
+from repro.fl.latency import LatencyModel
+from repro.fl.service import AsyncService
+
+N = 8
+# M=3, 8 rounds -> recluster boundaries at rounds 3 and 6
+HP = dict(r=16, k=4, H=2, M=3, eps=0.5, min_pts=2, batch_size=16,
+          lr=2e-3)
+METHODS = ("rage_k", "rtop_k", "top_k", "random_k", "dense", "cafe")
+
+
+def _mk_shards(n=N, seed=0, groups=3, per=64):
+    """Shards in ``groups`` hidden label groups so freq rows correlate
+    and DBSCAN merges clusters at the boundaries (the golden-test
+    idiom)."""
+    rng = np.random.default_rng(seed)
+    shards = []
+    for i in range(n):
+        lab = i % groups
+        x = rng.normal(size=(per, 28 * 28)).astype(np.float32) + lab
+        y = np.full((per,), lab, np.int64)
+        shards.append((x, y))
+    xte = rng.normal(size=(64, 28 * 28)).astype(np.float32)
+    yte = rng.integers(0, 10, size=(64,)).astype(np.int64)
+    return shards, (xte, yte)
+
+
+def _run(layout, method="rage_k", *, driver="step", rounds=8, seed=0,
+         selection="segmented", **hp_kw):
+    shards, test = _mk_shards()
+    hp = RAgeKConfig(method=method, age_layout=layout, **HP, **hp_kw)
+    eng = FederatedEngine("mlp", shards, test, hp, seed=seed,
+                          selection=selection)
+    drive = eng.run if driver == "step" else eng.run_scanned
+    res = drive(rounds, eval_every=4)
+    out = dict(loss=np.asarray(res.loss), acc=np.asarray(res.acc),
+               requested=[r for r in res.requested],
+               labels=eng.cluster_of.copy(),
+               freq=eng.freq_matrix.copy(),
+               rows=int(eng.age.cluster_age.shape[0]),
+               n_active=list(res.n_active))
+    eng.close()
+    return out
+
+
+def _assert_same(a, b, method):
+    np.testing.assert_array_equal(a["loss"], b["loss"])
+    np.testing.assert_array_equal(a["acc"], b["acc"])
+    np.testing.assert_array_equal(a["labels"], b["labels"])
+    np.testing.assert_array_equal(a["freq"], b["freq"])
+    for ia, ib in zip(a["requested"], b["requested"]):
+        if method == "dense":
+            assert ia is None and ib is None
+        else:
+            np.testing.assert_array_equal(ia, ib)
+
+
+# ---------------------------------------------------------------------------
+# the sparse log rebuild (host fold == device scatter)
+# ---------------------------------------------------------------------------
+
+def test_fold_request_log_matches_reference():
+    rng = np.random.default_rng(1)
+    n, d, m, k, T = 6, 50, 4, 3, 5
+    # sentinel member id n and sentinel index d both appear
+    mem = rng.integers(0, n + 1, size=(T, m)).astype(np.int32)
+    idx = rng.integers(0, d + 1, size=(T, m, k)).astype(np.int32)
+    freq = np.zeros((n, d), np.int32)
+    fold_request_log(freq, mem, idx, n_clients=n, d=d)
+    ref = np.zeros((n, d), np.int32)
+    for t in range(T):
+        for j in range(m):
+            if mem[t, j] >= n:
+                continue
+            for c in idx[t, j]:
+                if c < d:
+                    ref[mem[t, j], c] += 1
+    np.testing.assert_array_equal(freq, ref)
+
+
+def test_create_hierarchical_layout():
+    st = DeviceAgeState.create_hierarchical(10, 4, log_len=3, m_bound=2,
+                                            k=2)
+    assert st.freq is None and st.cost is None
+    assert st.cluster_age.shape == (4, 10)
+    assert st.upload_cost.shape == (4,)
+    assert st.log_idx.shape == (3, 2, 2)
+    assert st.log_mem.shape == (3, 2)
+    assert int(st.log_ptr) == 0
+    # sentinel-initialized: an undrained fresh ring folds to nothing
+    assert int(st.log_idx.min()) == 10 and int(st.log_mem.min()) == 4
+    assert st.device_bytes < DeviceAgeState.create(10, 4).device_bytes
+    # cafe variant: per-coordinate cost rows, no log (never reclusters)
+    st2 = DeviceAgeState.create_hierarchical(10, 4, with_cost=True)
+    assert st2.cost.shape == (4, 10) and st2.log_idx is None
+
+
+# ---------------------------------------------------------------------------
+# fast A/B: the default method across two boundaries, C changes
+# ---------------------------------------------------------------------------
+
+def test_ab_rage_k_step_two_boundaries():
+    dense = _run("dense")
+    hier = _run("hierarchical")
+    _assert_same(dense, hier, "rage_k")
+    # the grouped shards make DBSCAN merge: the live cluster count
+    # CHANGED at a boundary and the hierarchical plane compacted to it
+    c_live = int(hier["labels"].max()) + 1
+    assert c_live < N
+    assert hier["rows"] == c_live
+    assert dense["rows"] == N
+
+
+# ---------------------------------------------------------------------------
+# recluster remap edge cases (host reference, compact rows)
+# ---------------------------------------------------------------------------
+
+def test_recluster_remap_shrink_then_grow():
+    d, n = 12, 6
+    ca0 = (np.arange(n * d, dtype=np.int32).reshape(n, d) % 7)
+    cof0 = np.arange(n)
+    # boundary 1: two perfectly correlated groups -> C shrinks 6 -> 2
+    freq1 = np.zeros((n, d), np.int64)
+    freq1[:3, :4] = 5
+    freq1[3:, 8:] = 5
+    ca1, lab1 = _recluster_host(freq1, ca0, cof0, 0.3, 2, compact=True)
+    c1 = int(lab1.max()) + 1
+    assert c1 == 2 and ca1.shape == (c1, d)
+    # merge rule: fully absorbed singletons merge elementwise-min
+    for c in range(c1):
+        members = np.where(lab1 == c)[0]
+        np.testing.assert_array_equal(ca1[c], ca0[members].min(axis=0))
+    # boundary 2: client 0 decorrelates -> noise singleton, C grows 2->3
+    freq2 = freq1.copy()
+    freq2[0] = 0
+    freq2[0, 4:8] = 9
+    ca2, lab2 = _recluster_host(freq2, ca1, lab1, 0.3, 2, compact=True)
+    c2 = int(lab2.max()) + 1
+    assert c2 == 3 and ca2.shape == (c2, d)
+    # the split-off member's cluster resets (paper rule), and so does
+    # the remainder of its old cluster (not fully absorbed)
+    np.testing.assert_array_equal(ca2[lab2[0]], np.zeros(d, np.int32))
+    np.testing.assert_array_equal(ca2[lab2[1]], np.zeros(d, np.int32))
+    # the untouched group keeps its merged history
+    np.testing.assert_array_equal(ca2[lab2[3]], ca1[lab1[3]])
+
+
+def test_inactive_cluster_whole_window_ab():
+    """Uniform m=2 of 8: some cluster gets NO participants for a whole
+    recluster window; its log contributions are absent and its freq
+    rows must still match the dense layout's exactly."""
+    kw = dict(schedule="uniform", participation_m=2)
+    dense = _run("dense", rounds=7, **kw)
+    hier = _run("hierarchical", rounds=7, **kw)
+    _assert_same(dense, hier, "rage_k")
+    # verify the edge was actually exercised: requested rows of
+    # inactive clients are all-sentinel (= d), so a client silent for
+    # the whole FIRST window [0, M) is a live singleton cluster (t=0
+    # starts everyone as their own cluster) with zero participation
+    # across a recluster boundary — with m=2 over M=3 rounds at most 6
+    # of 8 clients can be heard, so at least two such clusters exist
+    d = dense["freq"].shape[1]
+    act = np.stack([(np.asarray(r) != d).any(axis=1)
+                    for r in hier["requested"]])
+    silent = ~act[:HP["M"]].any(axis=0)
+    assert silent.sum() >= 2
+
+
+def test_empty_rounds_sentinel_log_ab():
+    """Deadline with a sub-latency deadline: rounds with ZERO
+    participants write all-sentinel log slots; the fold is a no-op and
+    both layouts agree."""
+    kw = dict(schedule="deadline", deadline_s=1e-6)
+    dense = _run("dense", rounds=7, **kw)
+    hier = _run("hierarchical", rounds=7, **kw)
+    _assert_same(dense, hier, "rage_k")
+    assert 0 in hier["n_active"]          # an empty round really ran
+    assert dense["n_active"] == hier["n_active"]
+
+
+# ---------------------------------------------------------------------------
+# full matrix + service + large-N (slow lane)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.slow
+@pytest.mark.parametrize("method", METHODS)
+@pytest.mark.parametrize("driver", ("step", "scan"))
+def test_ab_all_methods_both_drivers(method, driver):
+    dense = _run("dense", method, driver=driver)
+    hier = _run("hierarchical", method, driver=driver)
+    _assert_same(dense, hier, method)
+
+
+@pytest.mark.slow
+def test_ab_scan_selection_plane():
+    """The sequential selection reference (selection='scan') is also
+    layout-agnostic."""
+    dense = _run("dense", selection="scan")
+    hier = _run("hierarchical", selection="scan")
+    _assert_same(dense, hier, "rage_k")
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("solicit", ("report", "dispatch"))
+def test_ab_async_service(solicit):
+    shards, test = _mk_shards()
+    out = {}
+    for layout in ("dense", "hierarchical"):
+        hp = RAgeKConfig(method="rage_k", age_layout=layout, buffer_k=4,
+                         **HP)
+        svc = AsyncService("mlp", shards, test, hp, seed=0,
+                           solicit=solicit,
+                           latency=LatencyModel(N, hetero=1.0,
+                                                jitter=0.3, seed=3))
+        res = svc.run_async(aggregations=8, eval_every=4)
+        out[layout] = (np.asarray(res.loss), np.asarray(res.acc),
+                       np.stack(res.requested), svc.cluster_of.copy(),
+                       svc.freq_matrix.copy())
+    for a, b in zip(out["dense"], out["hierarchical"]):
+        np.testing.assert_array_equal(a, b)
+    # two recluster boundaries (M=3 aggregations each) were crossed and
+    # the hierarchical plane compacted below N
+    hp = RAgeKConfig(method="rage_k", age_layout="hierarchical",
+                     buffer_k=4, **HP)
+    assert int(out["hierarchical"][3].max()) + 1 < N
+
+
+@pytest.mark.slow
+def test_large_n_hierarchical_transfer_guard():
+    """N=512 hierarchical smoke: a scanned chunk is device-pure (the
+    log append included), and the age plane compacts after the
+    every-M boundary."""
+    n = 512
+    shards, test = _mk_shards(n=n, groups=8, per=8)
+    hp = RAgeKConfig(method="rage_k", age_layout="hierarchical",
+                     schedule="uniform", participation_m=32,
+                     r=16, k=4, H=1, M=3, eps=0.5, min_pts=2,
+                     batch_size=8, lr=2e-3)
+    eng = FederatedEngine("mlp", shards, test, hp, seed=0)
+    bytes0 = eng.age.device_bytes
+    chunk = eng._chunk(hp.M)
+    carry = eng._pack()
+    with jax.transfer_guard("disallow"):
+        carry, metrics = chunk(eng._data, carry)
+        jax.block_until_ready(metrics)
+    eng._unpack(carry)
+    assert metrics["losses"].shape == (hp.M, n)
+    assert int(eng.age.log_ptr) == hp.M
+    eng.round_idx = hp.M
+    eng._recluster()
+    rows = int(eng.age.cluster_age.shape[0])
+    assert rows == int(eng.cluster_of.max()) + 1 < n
+    assert eng.age.device_bytes < bytes0
+    # the drained log rebuilt exactly M rounds x 32 participants x k
+    assert eng.freq_matrix.sum() == hp.M * 32 * hp.k
+    eng.close()

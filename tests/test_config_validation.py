@@ -28,6 +28,7 @@ BAD = [
     (dict(candidates="magic"), "candidates"),
     (dict(schedule="sometimes"), "schedule"),
     (dict(wire_dtype="fp8"), "wire_dtype"),
+    (dict(age_layout="flat"), "age_layout"),
     (dict(r=5, k=10), "r >= k"),
     (dict(method="rtop_k", r=5, k=10), "r >= k"),
     (dict(method="cafe", r=5, k=10), "r >= k"),
