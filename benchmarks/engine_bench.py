@@ -31,7 +31,14 @@
   N ∈ {64, 256, 1024} — measured device bytes before/after the first
   compaction (the C/N shrink) and rounds/sec parity at N=256 (the
   layouts must tie; the log append is O(m·k) against the dense
-  layout's (N, d) scatter).
+  layout's (N, d) scatter);
+* RESILIENCE plane (DESIGN.md §13): (a) checkpoint overhead — the
+  scanned driver at ckpt-every ∈ {0, 1, 4} through the async
+  double-buffered writer vs blocking saves (the async writer at
+  every-4 must cost < 10% rounds/sec); (b) accuracy vs NaN rate — the
+  fig3 run under p_nan ∈ {0, 0.05, 0.2} with the validation gate on
+  vs off (gate-on must finish finite and beat gate-off at the worst
+  rate).
 
 Results land in experiments/bench/BENCH_engine.json. Fast mode is the
 5-round CI smoke; --slow grows the round count.
@@ -336,6 +343,102 @@ def _age_memory(rounds: int, repeats: int) -> dict:
     return out
 
 
+def _resilience(shards, test, rounds: int, repeats: int,
+                acc_rounds: int) -> dict:
+    """The resilience plane (DESIGN.md §13), two measurements:
+
+    * CHECKPOINT OVERHEAD: the scanned fig3 run with ckpt_every ∈
+      {0, 1, 4}, saving the complete round state (params, opt state,
+      ages, sampler, PRNG) through the AsyncCheckpointer's worker
+      thread vs blocking in-line writes. The async writer only pays
+      the device_get snapshot on the driver thread; at every-4 it must
+      stay within 10% of the no-checkpoint rounds/sec.
+    * NaN-RATE GRID: final accuracy under fault injection at p_nan ∈
+      {0, 0.05, 0.2}, validation gate on vs off. Gate-off lets a
+      single non-finite update poison the global params (every later
+      loss is NaN); gate-on quarantines those rows — eq.-2 ages keep
+      counting, so the coordinates are re-solicited — and the run must
+      end finite and beat gate-off at the worst rate."""
+    import os
+    import shutil
+    import tempfile
+
+    from repro.checkpoint import AsyncCheckpointer
+    from repro.fl import FaultModel
+
+    hp = RAgeKConfig(r=75, k=10, H=4, M=20, lr=2e-3, batch_size=64,
+                     method="rage_k")
+    # round count aligned to the every-4 cadence so each timed segment
+    # sees the SAME chunk split (4,4,...) — misaligned segments would
+    # shift the split every repeat and compile new chunk lengths inside
+    # the timed region
+    ck_rounds = max(8, rounds - rounds % 4)
+    out = {"rounds": ck_rounds, "keep": 2}
+
+    tmp = tempfile.mkdtemp(prefix="bench_ckpt_")
+    variants = {"none": (0, None),
+                "async_every4": (4, False),
+                "async_every1": (1, False),
+                "blocking_every4": (4, True),
+                "blocking_every1": (1, True)}
+    engines = {}
+    for name, (every, blocking) in variants.items():
+        eng = FederatedEngine("mlp", shards, test, hp, seed=0)
+        ck = (None if blocking is None else
+              AsyncCheckpointer(os.path.join(tmp, name), keep=2,
+                                blocking=blocking))
+        # warm with the SAME ckpt cadence: compiles this variant's
+        # chunk lengths and leaves a write in flight to join, as in
+        # steady state
+        eng.run_scanned(ck_rounds, eval_every=ck_rounds,
+                        checkpointer=ck, ckpt_every=every)
+        engines[name] = (eng, ck, every)
+    best, _ = interleaved_best(
+        {name: (lambda e_=eng, c_=ck, ev_=every:
+                e_.run_scanned(ck_rounds, eval_every=ck_rounds,
+                               checkpointer=c_, ckpt_every=ev_))
+         for name, (eng, ck, every) in engines.items()},
+        repeats=repeats)
+    ref = ck_rounds / best["none"]
+    for name, (every, blocking) in variants.items():
+        rps = ck_rounds / best[name]
+        out[name] = {"ckpt_every": every, "blocking": bool(blocking),
+                     "rounds_per_s": rps, "wall_s": best[name],
+                     "overhead_frac": max(0.0, 1.0 - rps / ref)}
+    out["async_every4_within_10pct"] = (
+        out["async_every4"]["rounds_per_s"] >= 0.9 * ref)
+    for eng, ck, _ in engines.values():
+        if ck is not None:
+            ck.close()
+        eng.close()
+    shutil.rmtree(tmp, ignore_errors=True)
+
+    n = len(shards)
+    grid = []
+    for p in (0.0, 0.05, 0.2):
+        row = {"p_nan": p}
+        for gate in (True, False):
+            flt = FaultModel(n=n, p_nan=p, seed=11) if p else None
+            eng = FederatedEngine("mlp", shards, test, hp, seed=0,
+                                  faults=flt, quarantine=gate)
+            res = eng.run_scanned(acc_rounds, eval_every=acc_rounds)
+            row["gate_on" if gate else "gate_off"] = {
+                "final_acc": res.acc[-1],
+                "final_loss_finite": bool(np.isfinite(res.loss[-1])),
+                "quarantined": int(sum(res.n_quarantined)),
+            }
+            eng.close()
+        grid.append(row)
+    out["acc_rounds"] = acc_rounds
+    out["nan_grid"] = grid
+    worst = grid[-1]
+    out["gate_rescues_worst_case"] = (
+        worst["gate_on"]["final_loss_finite"]
+        and worst["gate_on"]["final_acc"]
+        > worst["gate_off"]["final_acc"])
+    return out
+
+
 def main(fast: bool = True):
     # 5-round smoke for CI; more repeats because short walls are noisy
     rounds, repeats = (5, 9) if fast else (20, 5)
@@ -432,6 +535,16 @@ def main(fast: bool = True):
                  f"ratio={am['n1024']['bytes_ratio_vs_dense']:.3f}); "
                  f"parity@256={am['parity_ratio']:.3f} "
                  f"within5pct={am['parity_within_5pct']}"))
+
+    # resilience plane (DESIGN.md §13): ckpt overhead + NaN-rate grid
+    out["resilience"] = rs = _resilience(
+        shards, test, rounds, max(repeats // 3, 2), 16 if fast else 40)
+    rows.append(("resilience_ckpt_every4",
+                 1e6 / max(rs["async_every4"]["rounds_per_s"], 1e-9),
+                 f"overhead={rs['async_every4']['overhead_frac']:.3f} "
+                 f"(blocking={rs['blocking_every4']['overhead_frac']:.3f}"
+                 f", within10pct={rs['async_every4_within_10pct']}, "
+                 f"gate_rescues={rs['gate_rescues_worst_case']})"))
 
     save_json("BENCH_engine", out)
     rows.append(("engine_scan_speedup", 0.0, f"x{speedup:.2f}"))

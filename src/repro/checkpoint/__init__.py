@@ -1,1 +1,3 @@
-from repro.checkpoint.io import save_checkpoint, load_checkpoint, list_checkpoints  # noqa: F401
+from repro.checkpoint.io import (save_checkpoint, load_checkpoint,  # noqa: F401
+                                 list_checkpoints, prune_checkpoints)
+from repro.checkpoint.async_ckpt import AsyncCheckpointer  # noqa: F401

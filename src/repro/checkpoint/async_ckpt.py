@@ -1,0 +1,103 @@
+"""Async checkpointer: snapshot-on-caller, write-on-worker (DESIGN.md §13).
+
+The save path splits into two halves, same shape as the engine's every-M
+recluster worker (fl/engine.py):
+
+  1. `save()` pulls the tree to host (`jax.device_get`) on the CALLER
+     thread — a device-blocking but fast copy that pins the exact round
+     state, then hands the host snapshot to a 1-worker executor and
+     returns.  Training proceeds while the worker compresses and writes.
+  2. The worker writes both files atomically (`checkpoint.io`: tmp +
+     fsync + os.replace, meta last) and prunes to `keep` entries.
+
+At most one write is in flight (double buffer): a second `save()` first
+joins the previous write, so the caller holds at most two host snapshots
+alive (the one being written + the one being taken).  Worker exceptions
+are captured and re-raised at the next `save()`/`wait()`/`close()` — a
+failed write can't be silently dropped.
+"""
+from __future__ import annotations
+
+import concurrent.futures as _fut
+import threading
+
+import jax
+
+from repro.checkpoint.io import (list_checkpoints, load_checkpoint,
+                                 prune_checkpoints, save_checkpoint)
+
+
+class AsyncCheckpointer:
+    """Atomic keep-last-K checkpoint writer with an async worker thread.
+
+    blocking=True degrades to synchronous saves (same files, same
+    atomicity) — used by the benchmark A/B and for debugging.
+    """
+
+    def __init__(self, path: str, keep: int = 3, blocking: bool = False):
+        self.path = path
+        self.keep = int(keep)
+        self.blocking = bool(blocking)
+        self._pool = (None if blocking else
+                      _fut.ThreadPoolExecutor(
+                          max_workers=1, thread_name_prefix="ckpt"))
+        self._pending: _fut.Future | None = None
+        self._lock = threading.Lock()
+        self.saves = 0
+
+    # -- write path -----------------------------------------------------
+    def _write(self, step: int, host_tree, extra):
+        save_checkpoint(self.path, step, host_tree, extra=extra)
+        if self.keep > 0:
+            prune_checkpoints(self.path, self.keep)
+
+    def save(self, step: int, tree, extra: dict | None = None):
+        """Snapshot `tree` now; write it in the background."""
+        self.wait()  # join previous write first (double buffer of 1)
+        host_tree = jax.device_get(tree)
+        self.saves += 1
+        if self._pool is None:
+            self._write(step, host_tree, extra)
+        else:
+            with self._lock:
+                self._pending = self._pool.submit(
+                    self._write, step, host_tree, extra)
+
+    def wait(self):
+        """Block until the in-flight write (if any) lands; re-raise its
+        exception here rather than losing it."""
+        with self._lock:
+            fut, self._pending = self._pending, None
+        if fut is not None:
+            fut.result()
+
+    def close(self):
+        self.wait()
+        if self._pool is not None:
+            self._pool.shutdown(wait=True)
+            self._pool = None
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self.close()
+
+    def __del__(self):
+        try:
+            self.close()
+        except Exception:
+            pass
+
+    # -- read path ------------------------------------------------------
+    def latest_step(self) -> int | None:
+        steps = list_checkpoints(self.path)
+        return steps[-1] if steps else None
+
+    def load_latest(self, like):
+        """(tree, meta) from the newest good checkpoint, or None if the
+        directory holds no loadable entry."""
+        try:
+            return load_checkpoint(self.path, like)
+        except FileNotFoundError:
+            return None

@@ -4,12 +4,21 @@ No orbax offline; this is a dependency-free implementation that round-trips
 arbitrary (dict/list/tuple-structured) pytrees of arrays, preserving dtypes
 (bf16 stored via uint16 view) and the age/cluster host state of the FL
 server.
+
+Atomicity protocol (DESIGN.md §13): both files are written to temp names
+in the same directory, fsync'd, then `os.replace`d into place — the
+`.json` meta sidecar LAST, so its presence is the commit marker for the
+whole entry.  A crash at any point leaves either the previous checkpoint
+intact or a garbage `.tmp` file that the loader never looks at.  The
+loader walks candidates newest-first and falls back past entries whose
+meta is missing/unparsable or whose `.npz` is truncated.
 """
 from __future__ import annotations
 
 import json
 import os
 import re
+import zipfile
 from typing import Any
 
 import jax
@@ -19,13 +28,29 @@ import numpy as np
 _BF16_TAG = "__bf16__"
 
 
+def _path_part(p) -> str:
+    if hasattr(p, "key"):        # DictKey
+        return str(p.key)
+    if hasattr(p, "name"):       # GetAttrKey (NamedTuple fields)
+        return str(p.name)
+    return str(p.idx)            # SequenceKey
+
+
 def _flatten(tree) -> dict[str, Any]:
     flat = {}
     for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
-        key = "/".join(
-            str(p.key) if hasattr(p, "key") else str(p.idx) for p in path)
-        flat[key] = leaf
+        flat["/".join(_path_part(p) for p in path)] = leaf
     return flat
+
+
+def _replace_atomic(write, final: str):
+    """Write via `write(f)` to a same-dir temp file, fsync, os.replace."""
+    tmp = final + ".tmp"
+    with open(tmp, "wb") as f:
+        write(f)
+        f.flush()
+        os.fsync(f.fileno())
+    os.replace(tmp, final)
 
 
 def save_checkpoint(path: str, step: int, tree, extra: dict | None = None):
@@ -42,23 +67,51 @@ def save_checkpoint(path: str, step: int, tree, extra: dict | None = None):
             arrays[k] = arr
             meta["keys"][k] = str(arr.dtype)
     fn = os.path.join(path, f"ckpt_{step:08d}.npz")
-    np.savez_compressed(fn, **arrays)
     meta["extra"] = extra or {}
-    with open(fn + ".json", "w") as f:
-        json.dump(meta, f)
+    # .npz first, meta last: the meta file commits the entry.
+    # Uncompressed: zlib would cost ~35ms/MB on the writer thread (and
+    # the caller thread, through the double-buffer join) for float
+    # state that barely compresses; keep-last-K pruning bounds disk.
+    _replace_atomic(lambda f: np.savez(f, **arrays), fn)
+    _replace_atomic(lambda f: f.write(json.dumps(meta).encode()), fn + ".json")
     return fn
 
 
-def load_checkpoint(path: str, like, step: int | None = None):
-    """Restore into the structure of `like` (a template pytree)."""
-    steps = list_checkpoints(path)
-    if not steps:
-        raise FileNotFoundError(f"no checkpoints under {path}")
-    step = step if step is not None else steps[-1]
+def _read_entry(path: str, step: int):
+    """Load one checkpoint entry; raise on any corruption."""
     fn = os.path.join(path, f"ckpt_{step:08d}.npz")
     with open(fn + ".json") as f:
         meta = json.load(f)
     data = np.load(fn)
+    return fn, meta, data
+
+
+def load_checkpoint(path: str, like, step: int | None = None):
+    """Restore into the structure of `like` (a template pytree).
+
+    With `step=None`, tries the newest checkpoint and falls back past
+    corrupt/uncommitted entries (missing or unparsable meta, truncated
+    npz) to the most recent good one.  An explicit `step` is loaded
+    strictly — corruption there raises.
+    """
+    steps = list_checkpoints(path)
+    if not steps:
+        raise FileNotFoundError(f"no checkpoints under {path}")
+    candidates = [step] if step is not None else steps[::-1]
+    meta = data = None
+    errors = []
+    for s in candidates:
+        try:
+            fn, meta, data = _read_entry(path, s)
+            break
+        except (OSError, KeyError, ValueError, zipfile.BadZipFile,
+                json.JSONDecodeError) as e:
+            if step is not None:
+                raise
+            errors.append(f"ckpt_{s:08d}: {type(e).__name__}: {e}")
+    if meta is None:
+        raise FileNotFoundError(
+            f"no loadable checkpoint under {path}: {'; '.join(errors)}")
     flat_like = _flatten(like)
     restored = {}
     for k in flat_like:
@@ -74,11 +127,31 @@ def load_checkpoint(path: str, like, step: int | None = None):
 
 
 def list_checkpoints(path: str) -> list[int]:
+    """Steps with a committed entry (both .npz and .json present)."""
     if not os.path.isdir(path):
         return []
+    names = set(os.listdir(path))
     out = []
-    for f in os.listdir(path):
+    for f in names:
         m = re.fullmatch(r"ckpt_(\d+)\.npz", f)
-        if m:
+        if m and f + ".json" in names:
             out.append(int(m.group(1)))
     return sorted(out)
+
+
+def prune_checkpoints(path: str, keep: int):
+    """Delete all but the newest `keep` committed entries (and any
+    leftover .tmp files from interrupted saves)."""
+    steps = list_checkpoints(path)
+    for f in os.listdir(path) if os.path.isdir(path) else []:
+        if f.endswith(".tmp"):
+            try:
+                os.remove(os.path.join(path, f))
+            except OSError:
+                pass
+    for s in steps[:-keep] if keep > 0 else []:
+        for suffix in (".npz", ".npz.json"):
+            try:
+                os.remove(os.path.join(path, f"ckpt_{s:08d}{suffix}"))
+            except OSError:
+                pass

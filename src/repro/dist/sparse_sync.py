@@ -172,7 +172,8 @@ def make_sync_train_step(loss_fn, opt, mesh, *, method: str = "rage_k",
 def make_manual_sync(mesh, specs, shapes, *, method: str = "rage_k",
                      candidates: str = "sort",
                      r: int = 0, k: int = 0, wire_dtype=jnp.bfloat16,
-                     lam: float = 0.1):
+                     lam: float = 0.1, validate: bool = False,
+                     gate_bound: float = 1e4):
     """Explicit gradient exchange over the mesh's data axes.
 
     specs/shapes: pytrees of PartitionSpec / ShapeDtypeStruct for the
@@ -198,10 +199,20 @@ def make_manual_sync(mesh, specs, shapes, *, method: str = "rage_k",
     ``active=None`` is the full synchronous exchange, bit-identical to
     the pre-plane collective. stats: ``wire_bytes_per_shard`` is what an
     UPLOADING shard sends (inactive shards send nothing);
-    ``wire_bytes_total = wire_bytes_per_shard * active_shards`` is the
+    ``wire_bytes_total = wire_bytes_per_shard * senders`` is the
     round's true uplink — the number partial-participation accounting
     must total, since the per-shard figure alone would overbill absent
     shards.
+
+    Validation gate (DESIGN.md §13): with ``validate=True`` a shard
+    whose LOCAL gradient is non-finite or out-of-band
+    (max |g| > ``gate_bound``) is quarantined — it contributes no
+    payload to the union and no age hits (its requested coordinates
+    keep aging, eq. (2) with no reset), exactly like an inactive shard;
+    but it DID send, so ``wire_bytes_total`` still bills it.
+    ``stats["quarantined_shards"]`` counts the gated shards; the gate
+    is opt-in because the traced mask path changes the dense pmean to a
+    psum/count (1-ulp-class difference the bitwise pins can't absorb).
     """
     data_axes = tuple(a for a in ("pod", "data") if a in mesh.shape)
     n_data = 1
@@ -249,13 +260,32 @@ def make_manual_sync(mesh, specs, shapes, *, method: str = "rage_k",
                 for ax in data_axes:
                     fidx = fidx * mesh.shape[ax] + jax.lax.axis_index(ax)
                 my = active[fidx]
-                n_uploaders = active.sum().astype(jnp.int32)
-                n_act = jnp.maximum(n_uploaders, 1).astype(jnp.float32)
+                n_senders = active.sum().astype(jnp.int32)
             else:
-                my, n_act = None, n_data
-                n_uploaders = jnp.int32(n_data)
+                my = None
+                n_senders = jnp.int32(n_data)
             n = len(flat_args) // 2
             g_leaves, age_leaves = flat_args[:n], flat_args[n:]
+            n_quar = jnp.int32(0)
+            if validate:
+                # quarantine: a non-finite/out-of-band local payload is
+                # excluded like an inactive shard's. ok is per-shard
+                # (unreplicated), so the landed count is a psum
+                ok = jnp.bool_(True)
+                for g in g_leaves:
+                    fg = g.reshape(-1).astype(jnp.float32)
+                    ok = (ok & jnp.isfinite(fg).all()
+                          & (jnp.abs(fg).max() <= jnp.float32(gate_bound)))
+                my = ok if my is None else my & ok
+                n_uploaders = (jax.lax.psum(my.astype(jnp.int32), data_axes)
+                               if data_axes else my.astype(jnp.int32))
+                n_quar = n_senders - n_uploaders
+            else:
+                n_uploaders = n_senders
+            if my is not None:
+                n_act = jnp.maximum(n_uploaders, 1).astype(jnp.float32)
+            else:
+                n_act = n_data
             synced, new_ages = [], []
             wire = 0
             for g, a, (r_b, k_b) in zip(g_leaves, age_leaves, budgets):
@@ -304,19 +334,19 @@ def make_manual_sync(mesh, specs, shapes, *, method: str = "rage_k",
                 new_ages.append(new_a.reshape(a.shape))
                 wire += min(k_b, int(flat.shape[0])) * (_INDEX_BYTES + vb)
             # per-shard counts bytes an UPLOADING shard sends; the round
-            # total multiplies by the shards that actually uploaded
-            # (replicated, so the P() out_spec stays truthful under a
-            # participation mask where per-shard bytes would differ).
+            # total multiplies by the shards that actually SENT — a
+            # quarantined shard paid for its rejected upload.
             # wire is static, so the int32-overflow check is too: dense
             # LM-scale payloads x many shards exceed 2^31 — go float32
             # there instead of wrapping negative
             if wire * n_data < 2 ** 31:
-                total = jnp.int32(wire) * n_uploaders
+                total = jnp.int32(wire) * n_senders
             else:
-                total = jnp.float32(wire) * n_uploaders.astype(jnp.float32)
+                total = jnp.float32(wire) * n_senders.astype(jnp.float32)
             stats = {"wire_bytes_per_shard": jnp.int32(wire),
                      "active_shards": n_uploaders,
-                     "wire_bytes_total": total}
+                     "wire_bytes_total": total,
+                     "quarantined_shards": n_quar}
             return tuple(synced) + tuple(new_ages) + (stats,)
         return _exchange
 
@@ -329,7 +359,8 @@ def make_manual_sync(mesh, specs, shapes, *, method: str = "rage_k",
     in_specs = tuple(spec_leaves) + tuple(age_spec_leaves)
     out_specs = (tuple(spec_leaves) + tuple(age_spec_leaves)
                  + ({"wire_bytes_per_shard": P(), "active_shards": P(),
-                     "wire_bytes_total": P()},))
+                     "wire_bytes_total": P(),
+                     "quarantined_shards": P()},))
     mapped = shard_map(_make_exchange(False), mesh=mesh,
                        in_specs=in_specs, out_specs=out_specs,
                        check_rep=False)
@@ -397,7 +428,8 @@ BufferState = _BufferState
 def make_buffered_sync(mesh, specs, shapes, *, buffer_k: int,
                        method: str = "rage_k", candidates: str = "sort",
                        r: int = 0, k: int = 0, wire_dtype=jnp.bfloat16,
-                       lam: float = 0.1):
+                       lam: float = 0.1, validate: bool = False,
+                       gate_bound: float = 1e4):
     """FedBuff-style buffered wrapper over :func:`make_manual_sync` —
     the async service plane's semantics (DESIGN.md §10) expressed on the
     sharded collective: each call lands that round's ACTIVE-shard union
@@ -423,7 +455,8 @@ def make_buffered_sync(mesh, specs, shapes, *, buffer_k: int,
         raise ValueError(f"buffer_k must be >= 1, got {buffer_k}")
     base = make_manual_sync(mesh, specs, shapes, method=method,
                             candidates=candidates, r=r, k=k,
-                            wire_dtype=wire_dtype, lam=lam)
+                            wire_dtype=wire_dtype, lam=lam,
+                            validate=validate, gate_bound=gate_bound)
 
     def init_buffer() -> _BufferState:
         sums = jax.tree_util.tree_map(

@@ -2,6 +2,7 @@ from repro.fl.engine import (  # noqa: F401
     DeviceAgeState, FederatedEngine, FLResult, rage_select,
     rage_select_segmented,
 )
+from repro.fl.faults import FaultModel  # noqa: F401
 from repro.fl.latency import LatencyModel  # noqa: F401
 from repro.fl.schedule import (  # noqa: F401
     SCHEDULES, AoIBalanced, Deadline, Full, RoundPlan, SchedState,

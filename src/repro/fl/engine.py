@@ -74,6 +74,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.checkpoint.io import load_checkpoint
 from repro.configs.base import RAgeKConfig
 from repro.core.age import AgeState
 from repro.core.clustering import (cluster_clients, connectivity_matrix,
@@ -207,6 +208,12 @@ class FLResult:
     aoi_peak: list = field(default_factory=list)
     age_mean: list = field(default_factory=list)     # over cluster_age
     age_peak: list = field(default_factory=list)     # max over cluster_age
+    # resilience-plane counters, one entry per ROUND (DESIGN.md §13):
+    # updates quarantined by the validation gate, clients crashed by the
+    # fault model, wire-dropped updates (all zero when faults are off)
+    n_quarantined: list = field(default_factory=list)
+    n_crashed: list = field(default_factory=list)
+    n_dropped: list = field(default_factory=list)
     wall_s: float = 0.0
 
     def summary(self) -> dict:
@@ -220,8 +227,51 @@ class FLResult:
                          if self.aoi_mean else 0.0),
             "peak_coord_age": (max(self.age_peak)
                                if self.age_peak else 0.0),
+            "total_quarantined": int(sum(self.n_quarantined)),
+            "total_crashed": int(sum(self.n_crashed)),
+            "total_dropped": int(sum(self.n_dropped)),
             "wall_s": self.wall_s,
         }
+
+
+def _result_to_json(res: FLResult) -> dict:
+    """FLResult -> a JSON-able dict rode along in the checkpoint meta
+    (DESIGN.md §13): Python floats round-trip JSON exactly (repr is the
+    shortest round-trip), so a resumed run's final curves JSON can be
+    BYTE-equal to the uninterrupted run's."""
+    return {
+        "rounds": list(res.rounds), "loss": list(res.loss),
+        "acc": list(res.acc), "uplink_bytes": list(res.uplink_bytes),
+        "cluster_labels": [np.asarray(c).tolist()
+                           for c in res.cluster_labels],
+        "heatmaps": {str(t): np.asarray(h).tolist()
+                     for t, h in res.heatmaps.items()},
+        "requested": [None if r is None else np.asarray(r).tolist()
+                      for r in res.requested],
+        "n_active": list(res.n_active), "aoi_mean": list(res.aoi_mean),
+        "aoi_peak": list(res.aoi_peak), "age_mean": list(res.age_mean),
+        "age_peak": list(res.age_peak),
+        "n_quarantined": list(res.n_quarantined),
+        "n_crashed": list(res.n_crashed),
+        "n_dropped": list(res.n_dropped),
+    }
+
+
+def _result_from_json(d: dict | None) -> FLResult:
+    res = FLResult()
+    if not d:
+        return res
+    for k in ("rounds", "loss", "acc", "uplink_bytes", "n_active",
+              "aoi_mean", "aoi_peak", "age_mean", "age_peak",
+              "n_quarantined", "n_crashed", "n_dropped"):
+        setattr(res, k, list(d[k]))
+    res.cluster_labels = [np.asarray(c, np.int64)
+                          for c in d["cluster_labels"]]
+    res.heatmaps = {int(t): np.asarray(h)
+                    for t, h in d["heatmaps"].items()}
+    res.requested = [None if r is None else np.asarray(r, np.int32)
+                     for r in d["requested"]]
+    return res
 
 
 def _build_model(kind: str, key):
@@ -540,7 +590,9 @@ class FederatedEngine:
     def __init__(self, kind: str, shards: list, test: tuple,
                  hp: RAgeKConfig, *, seed: int = 0, ef: bool = False,
                  global_opt: str = "adam", aggregate_impl: str = "auto",
-                 selection: str = "segmented", compute: str = "auto"):
+                 selection: str = "segmented", compute: str = "auto",
+                 faults=None, quarantine: bool = True,
+                 gate_bound: float = 1e4):
         if hp.method in ("rage_k", "rtop_k", "cafe") and hp.r < hp.k:
             raise ValueError(
                 f"method {hp.method!r} selects k of the top-r candidates; "
@@ -605,6 +657,18 @@ class FederatedEngine:
             compute = ("gathered" if self._scheduler.m_bound < self.n
                        else "masked")
         self._compute = compute
+        # resilience plane (fl.faults, DESIGN.md §13): a seeded
+        # FaultModel injects crash/corrupt/drop faults into the round;
+        # the validation gate quarantines non-finite or out-of-band
+        # updates PS-side (excluded from the aggregate, eq.-2 no-reset
+        # ages like any non-participant). faults=None is the hard
+        # identity path: no fault op is ever traced.
+        if faults is not None and faults.n != self.n:
+            raise ValueError(f"FaultModel.n={faults.n} != {self.n} clients")
+        self._faults = faults
+        self._quarantine = bool(quarantine)
+        self._gate_bound = float(gate_bound)
+        self._fault_key = jax.random.PRNGKey(seed + 77)
         # segmented packing bounds: live cluster count / largest cluster.
         # STATIC (recompile keys) — recomputed from the host-side DBSCAN
         # labels at every recluster; singletons at t=0.
@@ -681,6 +745,12 @@ class FederatedEngine:
         # thread) or a driver blown out of a chunk mid-scan — the worker
         # result must be joined and applied EXACTLY once
         self._recluster_lock = threading.Lock()
+        # a worker-thread DBSCAN failure is captured here and re-raised
+        # at EVERY subsequent label consumer (and in close()) — the
+        # first raise may be swallowed (__del__, a bare except in a
+        # driver), and a swallowed failure must not silently freeze the
+        # cluster assignments forever
+        self._recluster_exc: BaseException | None = None
         self.recluster_s = 0.0           # total host DBSCAN+merge wall
         self.recluster_wait_s = 0.0      # the part the driver blocked on
 
@@ -737,6 +807,21 @@ class FederatedEngine:
         plan: RoundPlan = self._scheduler.plan(sched, age)
         act = plan.active
         stale = plan.staleness > 0
+        # resilience plane (fl.faults, DESIGN.md §13). Crashed clients
+        # never start the round — they become full PR 5 non-participants
+        # (state held, data unconsumed, eq.-2 no-reset ages) by simply
+        # shrinking the plan's active mask before the compute plane
+        # looks at it. Wire faults (nan/inf/byz corruption, drops) act
+        # AFTER the local phase, below. faults=None traces none of this.
+        flt = self._faults
+        if flt is not None and flt.any:
+            crashed, f_nan, f_inf, f_byz, f_drop = flt.round_masks(
+                self._fault_key, sched.rnd)
+            n_crashed = (act & crashed).sum().astype(jnp.int32)
+            act = act & ~crashed
+        else:
+            f_nan = f_inf = f_byz = f_drop = None
+            n_crashed = jnp.int32(0)
         gathered = self._compute == "gathered"
         if gathered:
             # compact the active ids, ascending (nonzero preserves the
@@ -787,6 +872,37 @@ class FederatedEngine:
                 state_s = _where_clients(act, state_s2, state_s)
             losses = jnp.where(act, losses, jnp.nan)
 
+        # -- wire faults + validation gate (DESIGN.md §13) ------------------
+        # ``act_ps`` is who the PS actually HEARS from this round: active
+        # minus wire-dropped minus gate-quarantined. It drives everything
+        # PS-side (selection, age resets, the aggregate, AoI resets, the
+        # ef residual write) while ``act`` keeps driving the local plane
+        # (the clients did train; their losses stay finite). With
+        # faults=None, act_ps IS act — the same Python object, so every
+        # downstream use traces the identical graph.
+        act_ps = act
+        n_quar = n_drop = jnp.int32(0)
+        if flt is not None and flt.any_wire:
+            gm = (lambda m: m[iclip]) if gathered else (lambda m: m)
+            g = flt.corrupt(g, gm(f_nan), gm(f_inf), gm(f_byz))
+            n_drop = (act & f_drop).sum().astype(jnp.int32)
+            act_ps = act & ~f_drop
+            if self._quarantine:
+                # the gate inspects each arriving update row: finite
+                # everywhere and within the magnitude band. NaN rows
+                # fail isfinite; Byzantine-scaled rows fail the bound.
+                row_ok = (jnp.isfinite(g).all(axis=1)
+                          & (jnp.abs(g).max(axis=1)
+                             <= jnp.float32(self._gate_bound)))
+                ok = (jnp.zeros((n,), bool).at[act_idx].set(
+                    row_ok, mode="drop") if gathered else row_ok)
+                n_quar = (act_ps & ~ok).sum().astype(jnp.int32)
+                act_ps = act_ps & ok
+            if gathered:
+                # fold the wire verdict into the slot mask every
+                # gathered value/ef path below already consults
+                slot_ok = slot_ok & act_ps[iclip]
+
         key, sub = jax.random.split(key)
         method = hp.method
         seg = None
@@ -799,13 +915,13 @@ class FederatedEngine:
                     None, age, r=hp.r, k=hp.k, num_segments=num_segments,
                     max_seg=max_seg, disjoint=hp.disjoint_in_cluster,
                     impl=self._sel_impl, return_seg=True,
-                    candidates=hp.candidates, active=act, cands=cands,
+                    candidates=hp.candidates, active=act_ps, cands=cands,
                     d=d)
             else:
                 idx, age = rage_select(None, age, r=hp.r, k=hp.k,
                                        disjoint=hp.disjoint_in_cluster,
                                        candidates=hp.candidates,
-                                       active=act, cands=cands, d=d)
+                                       active=act_ps, cands=cands, d=d)
         elif method == "cafe":
             # per-client cost-and-age selection via the batched protocol;
             # cluster_age doubles as the per-client age rows (clusters
@@ -822,13 +938,18 @@ class FederatedEngine:
                 ca = (age.cluster_age + 1).at[act_idx].set(ca_c,
                                                            mode="drop")
                 fr = cost_pl.at[act_idx].set(fr_c, mode="drop")
+                if act_ps is not act:
+                    # quarantined/dropped rows: eq. (2) no reset, no cost
+                    ca = jnp.where(act_ps[:, None], ca,
+                                   age.cluster_age + 1)
+                    fr = jnp.where(act_ps[:, None], fr, cost_pl)
                 idx = jnp.full((n, hp.k), d, jnp.int32).at[act_idx].set(
                     idx_c.astype(jnp.int32), mode="drop")
             else:
                 idx, _, (ca, fr) = self._strategy.select_batch(
                     g, (age.cluster_age, cost_pl))
-                ca = jnp.where(act[:, None], ca, age.cluster_age + 1)
-                fr = jnp.where(act[:, None], fr, cost_pl)
+                ca = jnp.where(act_ps[:, None], ca, age.cluster_age + 1)
+                fr = jnp.where(act_ps[:, None], fr, cost_pl)
                 idx = idx.astype(jnp.int32)
             if age.freq is not None:
                 age = age._replace(cluster_age=ca, freq=fr)
@@ -857,8 +978,9 @@ class FederatedEngine:
         if idx is not None:
             # inactive clients request nothing — sentinel-d rows, in ONE
             # place so no strategy branch can forget the mask (a no-op
-            # on the rage paths, which already masked internally)
-            idx = jnp.where(act[:, None], idx, jnp.int32(d))
+            # on the rage paths, which already masked internally).
+            # act_ps: quarantined/dropped clients request nothing either
+            idx = jnp.where(act_ps[:, None], idx, jnp.int32(d))
 
         if method == "rage_k" and age.log_ptr is not None:
             # hierarchical layout: append this round's requests to the
@@ -899,6 +1021,10 @@ class FederatedEngine:
                 gw = jnp.where(
                     stale[iclip][:, None],
                     gw * plan.weight[iclip][:, None].astype(g.dtype), gw)
+                if act_ps is not act:
+                    # quarantined/dropped slots contribute nothing
+                    gw = jnp.where(slot_ok[:, None], gw,
+                                   jnp.zeros((), g.dtype))
                 sent = gw
                 g_sum = jnp.zeros((n, d), g.dtype).at[act_idx].set(
                     gw, mode="drop").sum(0)
@@ -907,7 +1033,8 @@ class FederatedEngine:
                 gw = jnp.where(
                     stale[:, None],
                     gw * plan.weight[:, None].astype(g.dtype), gw)
-                gw = jnp.where(act[:, None], gw, jnp.zeros((), g.dtype))
+                gw = jnp.where(act_ps[:, None], gw,
+                               jnp.zeros((), g.dtype))
                 g_sum = gw.sum(0)
                 sent = gw
         else:
@@ -937,7 +1064,7 @@ class FederatedEngine:
                 vals = jnp.where(
                     stale[:, None],
                     vals * plan.weight[:, None].astype(g.dtype), vals)
-                vals = jnp.where(act[:, None], vals,
+                vals = jnp.where(act_ps[:, None], vals,
                                  jnp.zeros((), g.dtype))
                 sent = jax.vmap(
                     lambda i, v: jnp.zeros((self.d,), g.dtype).at[i].set(
@@ -959,9 +1086,18 @@ class FederatedEngine:
                 g_sum = self._aggregate(idx, vals)
         if ef_mem is not None:
             if gathered:
-                ef_mem = ef_mem.at[act_idx].set(g - sent, mode="drop")
+                ef_rows = g - sent
+                if act_ps is not act:
+                    # wire-faulted slots hold their ef memory: the
+                    # corrupted row must not poison the residual
+                    ef_rows = jnp.where(slot_ok[:, None], ef_rows,
+                                        gather_rows(ef_mem))
+                ef_mem = ef_mem.at[act_idx].set(ef_rows, mode="drop")
             else:
-                ef_mem = jnp.where(act[:, None], g - sent, ef_mem)
+                ef_new = g - sent
+                if act_ps is not act:
+                    ef_new = jnp.where(act_ps[:, None], ef_new, ef_mem)
+                ef_mem = jnp.where(act[:, None], ef_new, ef_mem)
 
         g_params, g_opt_state = apply_global(
             self._g_opt, self._unflatten, g_sum, g_params, g_opt_state)
@@ -970,7 +1106,7 @@ class FederatedEngine:
         # AoI bookkeeping + participation metrics (scalars; the per-chunk
         # pull stays O(N*k)). Client AoI: rounds since last heard from.
         # Coordinate AoI: the cluster_age field over LIVE cluster rows.
-        aoi = jnp.where(act, jnp.int32(0), sched.aoi + 1)
+        aoi = jnp.where(act_ps, jnp.int32(0), sched.aoi + 1)
         sched = SchedState(key=sched.key, rnd=sched.rnd + 1, aoi=aoi)
         live = jnp.zeros((age.cluster_age.shape[0],),
                          bool).at[age.cluster_of].set(True)
@@ -984,6 +1120,11 @@ class FederatedEngine:
             "age_mean": (ca_live.astype(jnp.float32).sum()
                          / (live.sum().astype(jnp.float32) * d)),
             "age_peak": ca_live.max(),
+            # resilience counters (DESIGN.md §13) — constants 0 when
+            # faults are off, so the metrics layout never changes
+            "n_quarantined": n_quar,
+            "n_crashed": n_crashed,
+            "n_dropped": n_drop,
         }
         return (g_params, g_opt_state, params_s, opt_s, state_s, age,
                 ef_mem, key, samp, sched), metrics
@@ -1029,6 +1170,64 @@ class FederatedEngine:
          self.state_s, self.age, self.ef_mem, self._key, self.samp,
          self.sched) = carry
 
+    # ------------------------------------------------------------------
+    # checkpoint/resume (DESIGN.md §13)
+    # ------------------------------------------------------------------
+    def state_tree(self):
+        """The COMPLETE round state as one pytree: the full scan carry
+        (params, opt, per-client rows, ``DeviceAgeState`` in either
+        layout incl. the sparse log ring, ef memory, PRNG key, sampler,
+        ``SchedState``) plus the hierarchical layout's host freq
+        accumulator. Joins any in-flight recluster first (via `_pack`)
+        so labels/packing bounds are committed, and drains the request
+        log so the host accumulator in the snapshot is current — the
+        drain is a watermark move, so an early drain leaves the run's
+        math untouched."""
+        tree = {"carry": self._pack()}
+        if self._freq_host is not None:
+            self._drain_freq_log()
+            tree["freq_host"] = np.array(self._freq_host)
+        return tree
+
+    def _extra_state(self) -> dict:
+        return {"round_idx": self.round_idx, "cum_bytes": self.cum_bytes,
+                "log_seen": self._log_seen, "num_seg": self._num_seg,
+                "max_seg": self._max_seg}
+
+    def save_state(self, checkpointer, result: FLResult | None = None):
+        """Snapshot the complete round state into ``checkpointer`` (an
+        AsyncCheckpointer). The host-side scalars (round counter, byte
+        ledger, log watermark, DBSCAN packing bounds) and — when given —
+        the FLResult-so-far ride in the JSON meta, so a resumed driver
+        reproduces the uninterrupted run's output byte for byte."""
+        tree = self.state_tree()     # BEFORE extras: the drain inside
+        extra = self._extra_state()  # moves the log_seen watermark
+        if result is not None:
+            extra["result"] = _result_to_json(result)
+        checkpointer.save(self.round_idx, tree, extra=extra)
+
+    def load_state(self, source, step: int | None = None) -> FLResult:
+        """Restore from the newest good checkpoint under ``source`` (an
+        AsyncCheckpointer or a directory path), falling back past
+        corrupt entries (checkpoint.io). The engine must be constructed
+        with the same config/seed; the restored arrays adopt their SAVED
+        shapes (the hierarchical cluster_age rows are (C, d)-compacted).
+        Returns the FLResult recorded in the checkpoint (empty if none
+        was saved) for the driver to keep appending to."""
+        path = source.path if hasattr(source, "path") else source
+        tree, meta = load_checkpoint(path, self.state_tree(), step=step)
+        self._unpack(tuple(tree["carry"]))
+        if "freq_host" in tree:
+            # back to a HOST accumulator (drain folds into it in place)
+            self._freq_host = np.array(tree["freq_host"])
+        ex = meta["extra"]
+        self.round_idx = int(ex["round_idx"])
+        self.cum_bytes = int(ex["cum_bytes"])
+        self._log_seen = int(ex["log_seen"])
+        self._num_seg = int(ex["num_seg"])
+        self._max_seg = int(ex["max_seg"])
+        return _result_from_json(ex.get("result"))
+
     def _chunk(self, length: int):
         """Jitted `length`-round chunk: one lax.scan over `_round_impl`,
         metrics stacked (length, ...) on device. Cached per length (chunk
@@ -1069,7 +1268,10 @@ class FederatedEngine:
                 "aoi_mean": float(pick(metrics["aoi_mean"])),
                 "aoi_peak": int(pick(metrics["aoi_peak"])),
                 "age_mean": float(pick(metrics["age_mean"])),
-                "age_peak": int(pick(metrics["age_peak"]))}
+                "age_peak": int(pick(metrics["age_peak"])),
+                "n_quarantined": int(pick(metrics["n_quarantined"])),
+                "n_crashed": int(pick(metrics["n_crashed"])),
+                "n_dropped": int(pick(metrics["n_dropped"]))}
 
     def _track(self, res: FLResult, row: dict, requested) -> None:
         """Append one round's participation metrics + requested indices
@@ -1080,6 +1282,9 @@ class FederatedEngine:
         res.aoi_peak.append(row["aoi_peak"])
         res.age_mean.append(row["age_mean"])
         res.age_peak.append(row["age_peak"])
+        res.n_quarantined.append(row["n_quarantined"])
+        res.n_crashed.append(row["n_crashed"])
+        res.n_dropped.append(row["n_dropped"])
 
     def step(self) -> dict:
         """Advance one global round. Returns {"losses": (N,), "idx":
@@ -1196,9 +1401,23 @@ class FederatedEngine:
         with self._recluster_lock:
             fut, self._recluster_future = self._recluster_future, None
         if fut is None:
+            if self._recluster_exc is not None:
+                # a PAST worker failure: keep raising at every consumer
+                # — the cluster assignments are frozen at the last good
+                # labels and silently running on would hide that
+                raise RuntimeError(
+                    "recluster worker failed; cluster assignments are "
+                    "stale") from self._recluster_exc
             return
         t0 = time.perf_counter()
-        (new_ca, labels), comp_s = fut.result()
+        try:
+            (new_ca, labels), comp_s = fut.result()
+        except BaseException as e:
+            # capture BEFORE raising: the first raise may be swallowed
+            # (__del__, a driver's bare except) but every later label
+            # consumer — and close() — must see the failure too
+            self._recluster_exc = e
+            raise
         self.recluster_wait_s += time.perf_counter() - t0
         self.recluster_s += comp_s
         self._apply_recluster(new_ca, labels)
@@ -1228,12 +1447,17 @@ class FederatedEngine:
         __del__ (or a second close(), or an unwind from a mid-scan
         exception) joins the worker exactly once and shuts the pool
         down exactly once. Engines are reusable after close — the pool
-        is re-created lazily on the next scan-driver recluster."""
-        self._recluster_join()
-        with self._recluster_lock:
-            pool, self._recluster_pool = self._recluster_pool, None
-        if pool is not None:
-            pool.shutdown(wait=True)
+        is re-created lazily on the next scan-driver recluster. A
+        captured worker failure re-raises here too — but only after the
+        pool is released, so a failing close() never leaks the
+        thread."""
+        try:
+            self._recluster_join()
+        finally:
+            with self._recluster_lock:
+                pool, self._recluster_pool = self._recluster_pool, None
+            if pool is not None:
+                pool.shutdown(wait=True)
 
     def __del__(self):
         try:
@@ -1291,9 +1515,11 @@ class FederatedEngine:
             res.heatmaps[t] = connectivity_matrix(self.freq_matrix)
 
     def run(self, rounds: int, *, eval_every: int = 5, heatmap_at=(),
-            verbose: bool = False) -> FLResult:
+            verbose: bool = False, checkpointer=None,
+            ckpt_every: int = 0, result: FLResult | None = None
+            ) -> FLResult:
         t0 = time.time()
-        res = FLResult()
+        res = result if result is not None else FLResult()
         end = self.round_idx + rounds
         while self.round_idx < end:
             metrics = self.step()
@@ -1301,34 +1527,46 @@ class FederatedEngine:
             self._record(res, metrics["losses"], end=end,
                          eval_every=eval_every, heatmap_at=heatmap_at,
                          verbose=verbose)
+            if (checkpointer is not None and ckpt_every
+                    and self.round_idx % ckpt_every == 0):
+                self.save_state(checkpointer, result=res)
         res.wall_s = time.time() - t0
         return res
 
     # ------------------------------------------------------------------
     # scanned driver: many rounds per dispatch
     # ------------------------------------------------------------------
-    def _next_stop(self, end: int, eval_every: int, heatmap_at) -> int:
+    def _next_stop(self, end: int, eval_every: int, heatmap_at,
+                   ckpt_every: int = 0) -> int:
         """First round after `round_idx` where the host must intervene:
-        recluster (every M, rage_k), eval, heatmap, or the end."""
+        recluster (every M, rage_k), eval, heatmap, checkpoint, or the
+        end."""
         t = self.round_idx
         stops = [end, t + eval_every - t % eval_every]
         if self.hp.method == "rage_k":
             stops.append(t + self.hp.M - t % self.hp.M)
+        if ckpt_every:
+            stops.append(t + ckpt_every - t % ckpt_every)
         stops.extend(h for h in heatmap_at if h > t)
         return min(stops)
 
     def run_scanned(self, rounds: int, *, eval_every: int = 5,
-                    heatmap_at=(), verbose: bool = False) -> FLResult:
+                    heatmap_at=(), verbose: bool = False,
+                    checkpointer=None, ckpt_every: int = 0,
+                    result: FLResult | None = None) -> FLResult:
         """Drive `rounds` with lax.scan chunks — same math as :meth:`run`
         (bit-identical, tests/test_scan_driver.py) but the host touches
         the device once per CHUNK, not once per round: stacked metrics
         come down at chunk ends, which are aligned to the every-M
-        recluster round-trip and the eval/heatmap cadence."""
+        recluster round-trip and the eval/heatmap cadence (and, with
+        ``ckpt_every``, to the checkpoint cadence — a snapshot is only
+        ever taken at a chunk boundary, where the carry is quiescent)."""
         t0 = time.time()
-        res = FLResult()
+        res = result if result is not None else FLResult()
         end = self.round_idx + rounds
         while self.round_idx < end:
-            T = self._next_stop(end, eval_every, heatmap_at) - self.round_idx
+            T = (self._next_stop(end, eval_every, heatmap_at, ckpt_every)
+                 - self.round_idx)
             td = time.perf_counter()
             carry, metrics = self._chunk(T)(self._data, self._pack())
             jax.block_until_ready(metrics)
@@ -1353,5 +1591,8 @@ class FederatedEngine:
                 self._track(res, row, idx[j] if idx is not None else None)
             self._record(res, losses[-1], end=end, eval_every=eval_every,
                          heatmap_at=heatmap_at, verbose=verbose)
+            if (checkpointer is not None and ckpt_every
+                    and self.round_idx % ckpt_every == 0):
+                self.save_state(checkpointer, result=res)
         res.wall_s = time.time() - t0
         return res

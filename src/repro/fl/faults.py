@@ -1,0 +1,151 @@
+"""Deterministic fault-injection model — ONE seeded failure source for
+every plane that must survive an imperfect world (DESIGN.md §13).
+
+Same shape as :mod:`repro.fl.latency`: a frozen, device-resident model
+whose every draw is ``fold_in``-keyed by its coordinates — ``(lane,
+round)`` for a synchronous round, ``(lane, client, dispatch)`` for an
+async dispatch — so a fault is a pure function of (seed, coordinates)
+and replays identically across step/scan drivers and across a
+checkpoint resume.  Fault lanes:
+
+  crash   client never starts the round (full non-participant: local
+          state held, its data batch unconsumed, eq.-2 no-reset ages —
+          exactly the PR 5 participation semantics).
+  nan/inf client trains, but its wire update is corrupted to NaN/inf —
+          the PS-side validation gate must quarantine it.
+  byz     Byzantine client: update scaled by ``byz_scale`` (out of
+          band but finite — caught by the magnitude gate, not isfinite).
+  drop    the wire loses the update after local compute: the client's
+          own state advanced but nothing lands at the PS.
+  dark    a fixed set of client ids that crash EVERY round (an entire
+          cluster going dark); their rows must be held, not poisoned.
+
+``FaultModel(n)`` with all probabilities zero and no dark set draws
+all-False masks — but engines treat ``faults=None`` as the hard
+bitwise-identity path (no mask code traced at all).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import jax
+import jax.numpy as jnp
+
+# stable lane ids: the fold_in coordinate that separates fault draws
+# from each other and from every other consumer of the engine key
+_LANE = {"crash": 101, "nan": 102, "inf": 103, "byz": 104, "drop": 105}
+
+_KNOWN = ("crash", "nan", "inf", "byz", "drop")
+
+
+@dataclass(frozen=True)
+class FaultModel:
+    """Per-client Bernoulli fault draws + a fixed dark set.
+
+    Each probability is i.i.d. per (client, round) — or per (client,
+    dispatch) in the async service — keyed by its own lane so enabling
+    one fault class never perturbs another's draws.
+    """
+
+    n: int
+    p_crash: float = 0.0
+    p_nan: float = 0.0
+    p_inf: float = 0.0
+    p_byz: float = 0.0
+    p_drop: float = 0.0
+    byz_scale: float = 1e6
+    dark: tuple = ()            # client ids crashed every round
+    seed: int = 0
+    dark_mask: jnp.ndarray = field(init=False, repr=False, compare=False)
+
+    def __post_init__(self):
+        if self.n < 1:
+            raise ValueError(f"FaultModel needs n >= 1, got {self.n}")
+        for nm in ("p_crash", "p_nan", "p_inf", "p_byz", "p_drop"):
+            p = getattr(self, nm)
+            if not 0.0 <= p <= 1.0:
+                raise ValueError(f"{nm}={p} not a probability")
+        bad = [i for i in self.dark if not 0 <= int(i) < self.n]
+        if bad:
+            raise ValueError(f"dark ids out of range [0, {self.n}): {bad}")
+        mask = jnp.zeros((self.n,), bool)
+        if self.dark:
+            mask = mask.at[jnp.asarray(
+                [int(i) for i in self.dark], jnp.int32)].set(True)
+        object.__setattr__(self, "dark_mask", mask)
+
+    @classmethod
+    def parse(cls, spec: str, n: int, seed: int = 0) -> "FaultModel":
+        """Build from a CLI spec: ``"nan:0.1,crash:0.05,dark:0+3"`` —
+        comma-separated ``lane:prob`` pairs, plus ``dark:`` with
+        ``+``-joined client ids and ``byz_scale:`` as a plain float."""
+        kw: dict = {}
+        for part in filter(None, (p.strip() for p in spec.split(","))):
+            name, _, val = part.partition(":")
+            if name == "dark":
+                kw["dark"] = tuple(int(i) for i in val.split("+") if i)
+            elif name == "byz_scale":
+                kw["byz_scale"] = float(val)
+            elif name in _KNOWN:
+                kw[f"p_{name}"] = float(val)
+            else:
+                raise ValueError(
+                    f"unknown fault lane {name!r} (of {_KNOWN})")
+        return cls(n, seed=seed, **kw)
+
+    # -- draws ----------------------------------------------------------
+    def _bernoulli(self, key, lane: str, p: float, coords) -> jnp.ndarray:
+        if p <= 0.0:
+            return jnp.zeros((self.n,), bool)
+        sub = jax.random.fold_in(key, _LANE[lane])
+        for c in coords:
+            sub = jax.random.fold_in(sub, c)
+        return jax.random.bernoulli(sub, p, (self.n,))
+
+    def round_masks(self, key, rnd):
+        """(crashed, nan, inf, byz, drop) — five (N,) bool masks for
+        synchronous round ``rnd``.  ``crashed`` includes the dark set."""
+        crashed = self._bernoulli(key, "crash", self.p_crash, (rnd,))
+        crashed = crashed | self.dark_mask
+        return (crashed,
+                self._bernoulli(key, "nan", self.p_nan, (rnd,)),
+                self._bernoulli(key, "inf", self.p_inf, (rnd,)),
+                self._bernoulli(key, "byz", self.p_byz, (rnd,)),
+                self._bernoulli(key, "drop", self.p_drop, (rnd,)))
+
+    def dispatch_fate(self, key, client, j):
+        """Scalar (crashed, nan, inf, byz, drop) bools for client
+        ``client``'s ``j``-th async dispatch — recomputable from (key,
+        client, dispatch count) alone, like LatencyModel.dispatch_s."""
+        out = []
+        for lane, p in (("crash", self.p_crash), ("nan", self.p_nan),
+                        ("inf", self.p_inf), ("byz", self.p_byz),
+                        ("drop", self.p_drop)):
+            if p <= 0.0:
+                out.append(jnp.asarray(False))
+                continue
+            sub = jax.random.fold_in(key, _LANE[lane])
+            sub = jax.random.fold_in(jax.random.fold_in(sub, client), j)
+            out.append(jax.random.bernoulli(sub, p))
+        out[0] = out[0] | self.dark_mask[client]
+        return tuple(out)
+
+    def corrupt(self, g_rows, nan, inf, byz) -> jnp.ndarray:
+        """Apply the wire corruptions to per-client update rows.
+        ``g_rows`` is (N, d) (or (m, d) with equally-gathered masks);
+        masks broadcast over the trailing axis."""
+        bad = lambda m: m[..., None] if g_rows.ndim > m.ndim else m
+        g = jnp.where(bad(byz), g_rows * self.byz_scale, g_rows)
+        g = jnp.where(bad(inf), jnp.inf, g)
+        g = jnp.where(bad(nan), jnp.nan, g)
+        return g
+
+    @property
+    def any_wire(self) -> bool:
+        """True if any lane can corrupt/drop a wire update."""
+        return (self.p_nan > 0 or self.p_inf > 0 or self.p_byz > 0
+                or self.p_drop > 0)
+
+    @property
+    def any(self) -> bool:
+        return (self.any_wire or self.p_crash > 0 or bool(self.dark))

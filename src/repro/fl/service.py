@@ -57,6 +57,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.checkpoint.io import load_checkpoint
 from repro.configs.base import RAgeKConfig
 from repro.core.compression import (bytes_per_index, bytes_per_round,
                                     downlink_bytes_per_round)
@@ -102,6 +103,10 @@ class ServiceState(NamedTuple):
                   (BatchNorm), sampler rows; only the landing client's
                   row advances per event.
     key:          (2,) u32 — constant latency PRNG key.
+    n_retry:      (N,) i32 — consecutive failed dispatches per client
+                  (fault plane, DESIGN.md §13): drives the bounded
+                  virtual-clock backoff of re-solicitations; reset to 0
+                  the moment a dispatch lands cleanly.
     """
 
     clock: jnp.ndarray
@@ -122,6 +127,7 @@ class ServiceState(NamedTuple):
     state_s: Any
     samp: Any
     key: jnp.ndarray
+    n_retry: jnp.ndarray
 
 
 @dataclass
@@ -140,6 +146,13 @@ class ServiceResult:
     staleness: list = field(default_factory=list)    # versions late
     event_clock: list = field(default_factory=list)
     requested: list = field(default_factory=list)    # (k,) idx per event
+    # resilience-plane per-event flags (DESIGN.md §13; all-False when
+    # faults are off): quarantined by the gate, crashed dispatches,
+    # wire-dropped updates, retries scheduled with backoff
+    quarantined: list = field(default_factory=list)
+    crashed: list = field(default_factory=list)
+    dropped: list = field(default_factory=list)
+    retried: list = field(default_factory=list)
     wall_s: float = 0.0
 
     def staleness_hist(self) -> dict:
@@ -165,6 +178,10 @@ class ServiceResult:
                                if self.staleness else 0.0),
             "staleness_max": (int(max(self.staleness))
                               if self.staleness else 0),
+            "total_quarantined": int(sum(self.quarantined)),
+            "total_crashed": int(sum(self.crashed)),
+            "total_dropped": int(sum(self.dropped)),
+            "total_retried": int(sum(self.retried)),
             "wall_s": self.wall_s,
         }
 
@@ -189,7 +206,10 @@ class AsyncService:
     def __init__(self, kind: str, shards: list, test: tuple,
                  hp: RAgeKConfig, *, seed: int = 0,
                  latency: LatencyModel | None = None,
-                 solicit: str = "report", global_opt: str = "adam"):
+                 solicit: str = "report", global_opt: str = "adam",
+                 faults=None, quarantine: bool = True,
+                 gate_bound: float = 1e4, max_retries: int = 3,
+                 backoff: float = 2.0):
         if hp.method != "rage_k":
             raise ValueError(
                 f"AsyncService runs the rAge-k plane; method "
@@ -226,6 +246,20 @@ class AsyncService:
         if self._latency.n != self.n:
             raise ValueError(f"latency model is for n={self._latency.n} "
                              f"clients, engine has N={self.n}")
+        # resilience plane (fl.faults, DESIGN.md §13): per-dispatch
+        # fault fates, a PS-side validation gate, and bounded
+        # re-solicitation with virtual-clock backoff on failures
+        if faults is not None and faults.n != self.n:
+            raise ValueError(f"FaultModel.n={faults.n} != {self.n} clients")
+        if max_retries < 0 or backoff < 1.0:
+            raise ValueError(f"need max_retries >= 0 and backoff >= 1 "
+                             f"(got {max_retries}, {backoff})")
+        self._faults = faults
+        self._quarantine = bool(quarantine)
+        self._gate_bound = float(gate_bound)
+        self._max_retries = int(max_retries)
+        self._backoff = float(backoff)
+        self._fault_key = jax.random.PRNGKey(seed + 77)
 
         key = jax.random.PRNGKey(seed)
         g_params, state0, apply_loss, predict = _build_model(kind, key)
@@ -281,6 +315,7 @@ class AsyncService:
             state_s=C.stack_clients([state0] * n) if state0 else {},
             samp=None,                       # filled below (needs store)
             key=key,
+            n_retry=jnp.zeros((n,), jnp.int32),
         )
 
         self._store = DeviceShardStore(shards, hp.batch_size,
@@ -403,37 +438,87 @@ class AsyncService:
             lambda full, one: full.at[i].set(one), st.state_s, state_i)
             if st.state_s else {})
 
+        # -- fault fate of THIS dispatch (fl.faults, DESIGN.md §13) ---------
+        # keyed (client, dispatch count) like the latency draw, so the
+        # fate is recomputable from the carried key alone. ``good`` is
+        # whether the update actually lands: not crashed, not
+        # wire-dropped, and past the validation gate. faults=None
+        # (good=None below) traces none of this.
+        flt = self._faults
+        if flt is not None and flt.any:
+            crashed, f_nan, f_inf, f_byz, f_drop = flt.dispatch_fate(
+                self._fault_key, i, st.n_dispatch[i])
+            g_i = flt.corrupt(g_i, f_nan, f_inf, f_byz)
+            row_ok = (jnp.isfinite(g_i).all()
+                      & (jnp.abs(g_i).max()
+                         <= jnp.float32(self._gate_bound)))
+            good = (~crashed) & (~f_drop)
+            quar = (good & ~row_ok if self._quarantine
+                    else jnp.asarray(False))
+            if self._quarantine:
+                good = good & row_ok
+            # a crashed dispatch never ran: the client's optimizer/
+            # BatchNorm/sampler rows hold, its data stream unconsumed
+            def hold(new, old):
+                return jax.tree_util.tree_map(
+                    lambda a, b: jnp.where(crashed, b, a), new, old)
+            opt_s = hold(opt_s, st.opt_s)
+            if st.state_s:
+                state_s = hold(state_s, st.state_s)
+            samp = hold(samp, st.samp)
+            loss = jnp.where(crashed, jnp.nan, loss)
+        else:
+            good = quar = crashed = f_drop = None
+
         # 3. upload coordinates (mode-dependent selection)
         cl = st.age.cluster_of[i]
         idx, taken, solicited, inflight = self._select_landing(
             st, i, cl, g_i, cand_i)
+        if good is not None:
+            # failed landings leave the disjointness window untouched
+            taken = jnp.where(good, taken, st.taken)
 
         # 4. land in the buffer, staleness-discounted; eq. (2) on the
         #    cluster row (+1, requested reset), freq counts the upload
         vals = g_i[idx].astype(self._wire_dtype).astype(g_i.dtype)
         w = jnp.power(1.0 + s.astype(jnp.float32), -self.eta)
         vals = jnp.where(s > 0, vals * w.astype(vals.dtype), vals)
+        if good is not None:
+            # failed dispatch: nothing lands (zeros into the buffer, no
+            # count), the cluster row takes eq. (2) with NO reset, and
+            # the request never shows in the freq plane
+            vals = jnp.where(good, vals, jnp.zeros_like(vals))
         buf = st.buf.at[idx].add(vals.astype(jnp.float32), mode="drop")
-        buf_count = st.buf_count + 1
-        ca = st.age.cluster_age.at[cl].set(
-            member_age_row(st.age.cluster_age[cl], idx))
+        buf_count = st.buf_count + (1 if good is None
+                                    else good.astype(jnp.int32))
+        row = st.age.cluster_age[cl]
+        new_row = member_age_row(row, idx)
+        if good is not None:
+            new_row = jnp.where(good, new_row, row + 1)
+        ca = st.age.cluster_age.at[cl].set(new_row)
         if st.age.freq is not None:
+            hit = 1 if good is None else good.astype(jnp.int32)
             age = st.age._replace(
                 cluster_age=ca,
-                freq=st.age.freq.at[i, idx].add(1, mode="drop"))
+                freq=st.age.freq.at[i, idx].add(hit, mode="drop"))
         else:
             # hierarchical layout: the landing appends one slot to the
             # sparse update log (m_bound=1 — one client per event) and
             # bumps the O(N) cumulative upload-cost scalar
             slot = jax.lax.rem(st.age.log_ptr,
                                jnp.int32(st.age.log_idx.shape[0]))
+            log_val = idx.astype(jnp.int32)
+            cost = jnp.int32(hp.k)
+            if good is not None:
+                # column d is the drain-time sentinel for "no request"
+                log_val = jnp.where(good, log_val, jnp.int32(self.d))
+                cost = jnp.where(crashed, jnp.int32(0), cost)
             age = st.age._replace(
                 cluster_age=ca,
-                log_idx=st.age.log_idx.at[slot, 0].set(
-                    idx.astype(jnp.int32)),
+                log_idx=st.age.log_idx.at[slot, 0].set(log_val),
                 log_mem=st.age.log_mem.at[slot, 0].set(i),
                 log_ptr=st.age.log_ptr + 1,
-                upload_cost=st.age.upload_cost.at[i].add(hp.k))
+                upload_cost=st.age.upload_cost.at[i].add(cost))
 
         # 5. flush when K updates have landed: one global step on the
         #    buffered sum, new snapshot into ring slot (version+1) % V.
@@ -464,9 +549,21 @@ class AsyncService:
             flush, do_flush, no_flush,
             (buf, st.g_params, st.g_opt_state, st.ring, taken))
 
-        # 6. re-dispatch client i with the post-flush version
+        # 6. re-dispatch client i with the post-flush version. A failed
+        #    dispatch is re-solicited with bounded exponential backoff
+        #    in VIRTUAL time (latency x backoff^retries, exponent capped
+        #    at max_retries) so a dark client cannot monopolise the
+        #    event queue; a good landing resets its retry counter.
         nd = st.n_dispatch[i] + 1
         lat = self._latency.dispatch_s(st.key, i, nd).astype(jnp.float32)
+        n_retry = st.n_retry
+        if good is not None:
+            retry = jnp.where(good, jnp.int32(0),
+                              jnp.minimum(st.n_retry[i] + 1,
+                                          jnp.int32(self._max_retries)))
+            lat = lat * jnp.float32(self._backoff) ** retry.astype(
+                jnp.float32)
+            n_retry = st.n_retry.at[i].set(retry)
         if self._solicit == "dispatch":
             solicited, inflight = self._resolicit(
                 st._replace(solicited=solicited), inflight, ca, i, cl)
@@ -481,10 +578,17 @@ class AsyncService:
             buf=buf, buf_count=buf_count, taken=taken,
             solicited=solicited, inflight=inflight,
             age=age,
-            opt_s=opt_s, state_s=state_s, samp=samp, key=st.key)
+            opt_s=opt_s, state_s=state_s, samp=samp, key=st.key,
+            n_retry=n_retry)
+        off = jnp.asarray(False)
         metrics = {"loss": loss, "client": i, "staleness": s,
                    "version": version, "flushed": flush, "clock": t,
-                   "idx": idx.astype(jnp.int32)}
+                   "idx": idx.astype(jnp.int32),
+                   "quarantined": off if good is None else quar,
+                   "crashed": off if good is None else crashed,
+                   "dropped": off if good is None
+                   else (~crashed) & f_drop,
+                   "retried": off if good is None else ~good}
         return new_st, metrics
 
     def _eval_impl(self, g_params, state_s):
@@ -560,13 +664,65 @@ class AsyncService:
             self.state = self.state._replace(inflight=inflight)
         self.recluster_s += time.perf_counter() - t0
 
-    def _next_stop(self, end: int, eval_every: int) -> int:
+    def _next_stop(self, end: int, eval_every: int,
+                   ckpt_every: int = 0) -> int:
         """Next aggregation count where the host must intervene:
-        recluster (every M aggregations), eval, or the end."""
+        recluster (every M aggregations), eval, checkpoint, or the
+        end."""
         a = self.aggs_done
         stops = [end, a + eval_every - a % eval_every,
                  a + self.hp.M - a % self.hp.M]
+        if ckpt_every:
+            stops.append(a + ckpt_every - a % ckpt_every)
         return min(stops)
+
+    # ------------------------------------------------------------------
+    # checkpoint plane (repro.checkpoint, DESIGN.md §13)
+    # ------------------------------------------------------------------
+    def state_tree(self) -> dict:
+        """The service's complete device state as a checkpointable
+        pytree. Under the hierarchical age layout the sparse update log
+        is drained into the host freq accumulator first (math-neutral
+        at any point), so the saved accumulator + watermark are
+        self-consistent."""
+        tree = {"state": self.state}
+        if self._freq_host is not None:
+            self._log_seen = drain_request_log(
+                self.state.age, self._freq_host, self._log_seen,
+                n=self.n, d=self.d)
+            tree["freq_host"] = np.array(self._freq_host)
+        return tree
+
+    def _extra_state(self) -> dict:
+        return {"aggs_done": int(self.aggs_done),
+                "events_done": int(self.events_done),
+                "cum_uplink": int(self.cum_uplink),
+                "cum_downlink": int(self.cum_downlink),
+                "log_seen": int(self._log_seen)}
+
+    def save_state(self, checkpointer):
+        """Snapshot the full service onto ``checkpointer`` (an
+        AsyncCheckpointer), keyed by the aggregation count."""
+        # the tree BEFORE the extras: state_tree's drain moves the
+        # log_seen watermark that _extra_state records
+        tree = self.state_tree()
+        checkpointer.save(self.aggs_done, tree, extra=self._extra_state())
+
+    def load_state(self, source, step: int | None = None):
+        """Restore a :meth:`save_state` snapshot from ``source`` (an
+        AsyncCheckpointer or a directory path); the continued event
+        stream is bit-identical to the uninterrupted one."""
+        path = source.path if hasattr(source, "path") else source
+        tree, meta = load_checkpoint(path, self.state_tree(), step=step)
+        self.state = tree["state"]
+        if "freq_host" in tree:
+            self._freq_host = np.array(tree["freq_host"])
+        ex = meta["extra"]
+        self.aggs_done = int(ex["aggs_done"])
+        self.events_done = int(ex["events_done"])
+        self.cum_uplink = int(ex["cum_uplink"])
+        self.cum_downlink = int(ex["cum_downlink"])
+        self._log_seen = int(ex["log_seen"])
 
     def eval_acc(self) -> float:
         t0 = time.perf_counter()
@@ -596,7 +752,8 @@ class AsyncService:
         return self._freq_host
 
     def run_async(self, aggregations: int, *, eval_every: int = 5,
-                  verbose: bool = False) -> ServiceResult:
+                  verbose: bool = False, checkpointer=None,
+                  ckpt_every: int = 0) -> ServiceResult:
         """Drive the service until ``aggregations`` more buffer flushes
         have happened (every flush consumes exactly K landings, so the
         event count is ``aggregations * K``). Chunk boundaries align to
@@ -607,30 +764,73 @@ class AsyncService:
         t0 = time.time()
         res = ServiceResult()
         end = self.aggs_done + aggregations
+        faulty = self._faults is not None and self._faults.any
+        stall = 0
         while self.aggs_done < end:
-            stop = self._next_stop(end, eval_every)
-            n_aggs = stop - self.aggs_done
-            metrics = self._advance(n_aggs * self.K)
-            self.aggs_done = stop
+            if faulty:
+                # faulted dispatches don't land, so events no longer map
+                # K:1 onto flushes — advance K events at a time and count
+                # the flushes that actually happened. buf_count <= K-1
+                # entering a chunk and a chunk lands at most K updates,
+                # so at most ONE flush per chunk: the aggregation counter
+                # can never overshoot a recluster/eval boundary.
+                metrics = self._advance(self.K)
+                flushed_now = int(metrics["flushed"].sum())
+                assert flushed_now <= 1
+                self.aggs_done += flushed_now
+                stall = 0 if flushed_now else stall + 1
+                if stall >= 1000:
+                    raise RuntimeError(
+                        f"async service stalled: no flush in the last "
+                        f"{stall * self.K} events — the fault rate "
+                        f"leaves fewer than K={self.K} live clients")
+            else:
+                stop = self._next_stop(end, eval_every, ckpt_every)
+                n_aggs = stop - self.aggs_done
+                metrics = self._advance(n_aggs * self.K)
+                assert int(metrics["flushed"].sum()) == n_aggs
+                flushed_now = n_aggs
+                self.aggs_done = stop
+            a = self.aggs_done
             # per-event traces + wire ledger
             res.clients.extend(int(c) for c in metrics["client"])
             res.staleness.extend(int(s) for s in metrics["staleness"])
             res.event_clock.extend(float(c) for c in metrics["clock"])
             res.requested.extend(np.asarray(metrics["idx"]))
-            self.cum_uplink += self._uplink_per_landing * len(
-                metrics["client"])
+            n_ev = len(metrics["client"])
+            n_up = n_ev
+            if faulty:
+                res.quarantined.extend(
+                    bool(q) for q in metrics["quarantined"])
+                res.crashed.extend(bool(c) for c in metrics["crashed"])
+                res.dropped.extend(bool(c) for c in metrics["dropped"])
+                res.retried.extend(bool(c) for c in metrics["retried"])
+                # crashed clients never put bytes on the wire; dropped/
+                # quarantined uploads were sent and paid for
+                n_up -= int(metrics["crashed"].sum())
+            self.cum_uplink += self._uplink_per_landing * n_up
             # every landing triggers exactly one re-dispatch
-            self.cum_downlink += self._downlink_per_dispatch * len(
-                metrics["client"])
-            assert int(metrics["flushed"].sum()) == n_aggs
-            if self.hp.method == "rage_k" and stop % self.hp.M == 0:
+            self.cum_downlink += self._downlink_per_dispatch * n_ev
+            if (self.hp.method == "rage_k" and flushed_now
+                    and a % self.hp.M == 0):
                 self._recluster()
-            if stop % eval_every == 0 or stop == end:
+            if (checkpointer is not None and ckpt_every and flushed_now
+                    and a % ckpt_every == 0):
+                self.save_state(checkpointer)
+            if flushed_now and (a % eval_every == 0 or a == end):
                 acc = self.eval_acc()
                 # window loss: mean over the LAST flush window's K
-                # landings (the engine's per-round loss, degenerately)
-                res.rounds.append(stop)
-                res.loss.append(float(metrics["loss"][-self.K:].mean()))
+                # landings (the engine's per-round loss, degenerately);
+                # crashed dispatches log NaN losses, so the faulted path
+                # takes the mean over the landings that ran
+                if faulty:
+                    win = np.asarray(metrics["loss"][-self.K:])
+                    loss_win = (float(np.nanmean(win))
+                                if np.isfinite(win).any() else float("nan"))
+                else:
+                    loss_win = float(metrics["loss"][-self.K:].mean())
+                res.rounds.append(a)
+                res.loss.append(loss_win)
                 res.acc.append(acc)
                 res.uplink_bytes.append(self.cum_uplink)
                 res.downlink_bytes.append(self.cum_downlink)
@@ -638,7 +838,7 @@ class AsyncService:
                 res.cluster_labels.append(self.cluster_of)
                 if verbose:
                     print(f"[async k={self.K} eta={self.eta} V={self.V}] "
-                          f"agg {stop:4d} t={res.clock[-1]:8.2f}s "
+                          f"agg {a:4d} t={res.clock[-1]:8.2f}s "
                           f"loss={res.loss[-1]:.4f} acc={acc:.4f} "
                           f"stale_max={max(res.staleness):d}")
         res.wall_s = time.time() - t0

@@ -8,13 +8,34 @@ from __future__ import annotations
 
 import argparse
 import json
+import os
 
 import numpy as np
 
+from repro.checkpoint import AsyncCheckpointer
 from repro.configs.base import RAgeKConfig
 from repro.data.federated import paper_cifar_split, paper_mnist_split
 from repro.data.synthetic import cifar10_like, mnist_like
-from repro.fl import AsyncService, FederatedEngine, LatencyModel
+from repro.fl import AsyncService, FaultModel, FederatedEngine, LatencyModel
+
+
+class _KillingCheckpointer(AsyncCheckpointer):
+    """CI crash injector: hard-kills the process (``os._exit(17)``, no
+    cleanup, no atexit) right after the first checkpoint at or past
+    ``kill_at`` has durably committed — the resumed run must replay
+    bit-identically from that entry."""
+
+    def __init__(self, path: str, kill_at: int, **kw):
+        super().__init__(path, **kw)
+        self.kill_at = int(kill_at)
+
+    def save(self, step, tree, extra=None):
+        super().save(step, tree, extra=extra)
+        if step >= self.kill_at:
+            self.wait()
+            print(f"[_KillingCheckpointer] committed step {step}, "
+                  f"exiting hard", flush=True)
+            os._exit(17)
 
 
 def main():
@@ -127,6 +148,31 @@ def main():
                          "trains all N and discards inactive results; "
                          "'auto' picks gathered iff the schedule bounds "
                          "m below N — outputs are bit-identical")
+    ap.add_argument("--ckpt-dir", default=None,
+                    help="checkpoint directory (resilience plane, "
+                         "DESIGN.md §13); saves ride an async writer "
+                         "thread, atomically, keep-last-3")
+    ap.add_argument("--ckpt-every", type=int, default=0,
+                    help="checkpoint cadence in rounds (sync drivers) / "
+                         "aggregations (async driver); 0 = off")
+    ap.add_argument("--resume", action="store_true",
+                    help="resume from the newest loadable checkpoint in "
+                         "--ckpt-dir (corrupt/uncommitted entries are "
+                         "skipped); --rounds counts the TOTAL run, so "
+                         "the resumed process only replays the "
+                         "remainder, bit-identically")
+    ap.add_argument("--faults", default=None,
+                    help="fault-injection spec (fl.faults.FaultModel), "
+                         "e.g. 'nan:0.1,crash:0.05,drop:0.1,byz:0.01,"
+                         "dark:3+7,byz_scale:1e6'")
+    ap.add_argument("--no-quarantine", action="store_true",
+                    help="disable the PS-side validation gate (corrupt "
+                         "updates reach the aggregate — for A/B runs)")
+    ap.add_argument("--kill-at-round", type=int, default=0,
+                    help="CI crash injector: os._exit(17) right after "
+                         "the first checkpoint at/past this round "
+                         "commits (requires --ckpt-dir and "
+                         "--ckpt-every)")
     args = ap.parse_args()
 
     if args.dataset == "mnist":
@@ -164,14 +210,32 @@ def main():
                      version_window=args.version_window,
                      age_layout=args.age_layout, **defaults)
 
+    faults = (FaultModel.parse(args.faults, len(shards), seed=args.seed)
+              if args.faults else None)
+    quarantine = not args.no_quarantine
+    ck = None
+    if args.ckpt_dir:
+        ck = (_KillingCheckpointer(args.ckpt_dir, args.kill_at_round)
+              if args.kill_at_round else AsyncCheckpointer(args.ckpt_dir))
+    elif args.kill_at_round:
+        raise SystemExit("--kill-at-round needs --ckpt-dir/--ckpt-every")
+
     if args.driver == "async":
         latency = LatencyModel(len(shards), hetero=args.hetero,
                                jitter=args.jitter, seed=args.seed)
         svc = AsyncService(kind, shards, test, hp, seed=args.seed,
-                           latency=latency, solicit=args.solicit)
-        res = svc.run_async(args.rounds,
+                           latency=latency, solicit=args.solicit,
+                           faults=faults, quarantine=quarantine)
+        if args.resume and ck is not None and ck.latest_step() is not None:
+            svc.load_state(ck)
+            print(f"resumed from aggregation {svc.aggs_done} "
+                  f"({ck.latest_step()=})")
+        res = svc.run_async(args.rounds - svc.aggs_done,
                             eval_every=max(args.rounds // 20, 1),
-                            verbose=True)
+                            verbose=True, checkpointer=ck,
+                            ckpt_every=args.ckpt_every)
+        if ck is not None:
+            ck.close()
         summary = res.summary()
         print("summary:", summary)
         print("final clusters:", res.cluster_labels[-1].tolist())
@@ -190,16 +254,30 @@ def main():
                            "buffer_k": svc.K,
                            "staleness_eta": hp.staleness_eta,
                            "version_window": hp.version_window,
-                           "solicit": args.solicit},
+                           "solicit": args.solicit,
+                           "quarantined": summary["total_quarantined"],
+                           "crashed": summary["total_crashed"],
+                           "dropped": summary["total_dropped"],
+                           "retried": summary["total_retried"]},
                           f, indent=1)
         return
 
     engine = FederatedEngine(kind, shards, test, hp, seed=args.seed,
                              ef=args.ef, aggregate_impl=args.aggregate,
-                             selection=args.selection, compute=args.compute)
+                             selection=args.selection, compute=args.compute,
+                             faults=faults, quarantine=quarantine)
+    prior = None
+    if args.resume and ck is not None and ck.latest_step() is not None:
+        prior = engine.load_state(ck)
+        print(f"resumed at round {engine.round_idx}")
     drive = engine.run if args.driver == "step" else engine.run_scanned
-    res = drive(args.rounds, eval_every=max(args.rounds // 20, 1),
-                heatmap_at=(1, args.rounds), verbose=True)
+    res = drive(args.rounds - engine.round_idx,
+                eval_every=max(args.rounds // 20, 1),
+                heatmap_at=(1, args.rounds), verbose=True,
+                checkpointer=ck, ckpt_every=args.ckpt_every, result=prior)
+    engine.close()
+    if ck is not None:
+        ck.close()
     print("summary:", res.summary())
     print("final clusters:", res.cluster_labels[-1].tolist())
     if args.out:
@@ -212,7 +290,10 @@ def main():
                        "aoi_mean": res.aoi_mean,
                        "aoi_peak": res.aoi_peak,
                        "age_mean": res.age_mean,
-                       "age_peak": res.age_peak},
+                       "age_peak": res.age_peak,
+                       "n_quarantined": res.n_quarantined,
+                       "n_crashed": res.n_crashed,
+                       "n_dropped": res.n_dropped},
                       f, indent=1)
 
 

@@ -1,9 +1,32 @@
-"""Checkpoint round-trip incl. bf16 and nested structures."""
+"""Checkpoint plane (repro.checkpoint, DESIGN.md §13).
+
+1. Round-trip incl. bf16 and nested structures — and NamedTuple nodes
+   (DeviceAgeState / SchedState flatten with GetAttrKey path entries,
+   a distinct key type from dicts' DictKey and lists' SequenceKey).
+2. Atomicity protocol: the .json meta commits an entry; uncommitted or
+   corrupt entries are invisible / fallen back past, and an explicit
+   `step=` load of a corrupt entry raises instead of silently
+   substituting.
+3. prune_checkpoints keeps the newest K and sweeps .tmp leftovers.
+4. AsyncCheckpointer: background writes land durably, wait()/close()
+   join, worker exceptions surface at the next call, load_latest
+   restores the newest entry.
+5. The FL state NamedTuples round-trip exactly: the hierarchical
+   DeviceAgeState (sparse log ring + ptr) beside its host freq
+   accumulator, and SchedState's uint32 PRNG key.
+"""
+import os
+
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 
-from repro.checkpoint import save_checkpoint, load_checkpoint, list_checkpoints
+from repro.checkpoint import (AsyncCheckpointer, list_checkpoints,
+                              load_checkpoint, prune_checkpoints,
+                              save_checkpoint)
+from repro.fl.engine import DeviceAgeState
+from repro.fl.schedule import SchedState
 
 
 def test_roundtrip(tmp_path):
@@ -30,3 +53,192 @@ def test_multiple_steps_latest_wins(tmp_path):
     restored, meta = load_checkpoint(str(tmp_path), t)
     assert meta["step"] == 2
     assert float(restored["w"][0]) == 1.0
+
+
+# ---------------------------------------------------------------------------
+# FL state NamedTuples (GetAttrKey path entries)
+# ---------------------------------------------------------------------------
+
+def _hier_age(d=11, n=4):
+    age = DeviceAgeState.create_hierarchical(d, n, log_len=6, m_bound=2,
+                                             k=3)
+    return age._replace(
+        cluster_age=age.cluster_age.at[1, 3].set(9),
+        log_idx=age.log_idx.at[0].set(
+            jnp.array([[1, 2, 3], [4, 5, d]], jnp.int32)),
+        log_mem=age.log_mem.at[0].set(jnp.array([2, n], jnp.int32)),
+        log_ptr=jnp.int32(5),
+        upload_cost=age.upload_cost.at[2].add(7))
+
+
+def test_hierarchical_age_state_roundtrip(tmp_path):
+    """The sparse-log ring (idx/mem/ptr), cluster rows and the host
+    freq accumulator all survive a save/load bit-exactly — including
+    the ring's sentinel entries (idx=d, mem=N) and the int32 scalar
+    write pointer."""
+    age = _hier_age()
+    freq_host = np.arange(44, dtype=np.int32).reshape(4, 11)
+    tree = {"age": age, "freq_host": freq_host}
+    save_checkpoint(str(tmp_path), 3, tree, extra={"log_seen": 2})
+    restored, meta = load_checkpoint(str(tmp_path), tree)
+    back = restored["age"]
+    assert isinstance(back, DeviceAgeState)
+    for name in ("cluster_age", "cluster_of", "log_idx", "log_mem",
+                 "log_ptr", "upload_cost"):
+        a, b = getattr(age, name), getattr(back, name)
+        assert a.dtype == b.dtype, name
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    assert back.freq is None and back.cost is None
+    np.testing.assert_array_equal(np.asarray(restored["freq_host"]),
+                                  freq_host)
+    assert meta["extra"]["log_seen"] == 2
+
+
+def test_sched_state_prng_key_roundtrip(tmp_path):
+    """SchedState's (2,) uint32 PRNG key must come back dtype- and
+    bit-exact: a silent cast would change every later fold_in draw."""
+    st = SchedState.create(n=5, seed=123)._replace(
+        rnd=jnp.int32(9), aoi=jnp.arange(5, dtype=jnp.int32))
+    save_checkpoint(str(tmp_path), 0, {"sched": st})
+    restored, _ = load_checkpoint(str(tmp_path), {"sched": st})
+    back = restored["sched"]
+    assert back.key.dtype == st.key.dtype == jnp.uint32
+    np.testing.assert_array_equal(np.asarray(back.key),
+                                  np.asarray(st.key))
+    np.testing.assert_array_equal(np.asarray(back.aoi),
+                                  np.asarray(st.aoi))
+    assert int(back.rnd) == 9
+
+
+def test_bf16_leaves_inside_namedtuple_tree(tmp_path):
+    """bf16 survives (uint16 view + tag) next to GetAttrKey paths."""
+    st = SchedState(key=jax.random.PRNGKey(0), rnd=jnp.int32(1),
+                    aoi=jnp.zeros((3,), jnp.int32))
+    tree = {"sched": st,
+            "p": {"w": jnp.linspace(-2, 2, 8, dtype=jnp.bfloat16)}}
+    save_checkpoint(str(tmp_path), 1, tree)
+    restored, _ = load_checkpoint(str(tmp_path), tree)
+    w = restored["p"]["w"]
+    assert w.dtype == jnp.bfloat16
+    np.testing.assert_array_equal(np.asarray(w, np.float32),
+                                  np.asarray(tree["p"]["w"], np.float32))
+
+
+# ---------------------------------------------------------------------------
+# atomicity: commit marker, corruption fallback, pruning
+# ---------------------------------------------------------------------------
+
+def _entry(path, step):
+    return os.path.join(path, f"ckpt_{step:08d}.npz")
+
+
+def test_uncommitted_entry_is_invisible(tmp_path):
+    """An .npz without its .json sidecar (a crash between the two
+    atomic replaces) does not exist as far as the loader cares."""
+    t = {"w": jnp.zeros(2)}
+    save_checkpoint(str(tmp_path), 1, t)
+    save_checkpoint(str(tmp_path), 2, {"w": jnp.ones(2)})
+    os.remove(_entry(str(tmp_path), 2) + ".json")
+    assert list_checkpoints(str(tmp_path)) == [1]
+    restored, meta = load_checkpoint(str(tmp_path), t)
+    assert meta["step"] == 1
+    assert float(restored["w"][0]) == 0.0
+
+
+def test_corrupt_npz_falls_back_to_last_good(tmp_path):
+    t = {"w": jnp.zeros(2)}
+    save_checkpoint(str(tmp_path), 1, t)
+    save_checkpoint(str(tmp_path), 2, {"w": jnp.ones(2)})
+    with open(_entry(str(tmp_path), 2), "wb") as f:
+        f.write(b"not a zipfile")
+    restored, meta = load_checkpoint(str(tmp_path), t)
+    assert meta["step"] == 1
+    assert float(restored["w"][0]) == 0.0
+    # explicit step is strict: corruption raises, no silent substitute
+    with pytest.raises(Exception):
+        load_checkpoint(str(tmp_path), t, step=2)
+
+
+def test_corrupt_meta_falls_back(tmp_path):
+    t = {"w": jnp.zeros(2)}
+    save_checkpoint(str(tmp_path), 1, t)
+    save_checkpoint(str(tmp_path), 2, {"w": jnp.ones(2)})
+    with open(_entry(str(tmp_path), 2) + ".json", "w") as f:
+        f.write("{truncated")
+    _, meta = load_checkpoint(str(tmp_path), t)
+    assert meta["step"] == 1
+
+
+def test_all_corrupt_raises_filenotfound(tmp_path):
+    t = {"w": jnp.zeros(2)}
+    save_checkpoint(str(tmp_path), 1, t)
+    with open(_entry(str(tmp_path), 1), "wb") as f:
+        f.write(b"junk")
+    with pytest.raises(FileNotFoundError, match="no loadable"):
+        load_checkpoint(str(tmp_path), t)
+    with pytest.raises(FileNotFoundError, match="no checkpoints"):
+        load_checkpoint(str(tmp_path / "empty"), t)
+
+
+def test_prune_keeps_newest_and_sweeps_tmp(tmp_path):
+    t = {"w": jnp.zeros(2)}
+    for s in (1, 2, 3, 4):
+        save_checkpoint(str(tmp_path), s, t)
+    leftover = os.path.join(str(tmp_path), "ckpt_00000009.npz.tmp")
+    with open(leftover, "wb") as f:
+        f.write(b"interrupted")
+    prune_checkpoints(str(tmp_path), keep=2)
+    assert list_checkpoints(str(tmp_path)) == [3, 4]
+    assert not os.path.exists(leftover)
+    assert not os.path.exists(_entry(str(tmp_path), 1))
+    assert not os.path.exists(_entry(str(tmp_path), 1) + ".json")
+
+
+# ---------------------------------------------------------------------------
+# AsyncCheckpointer
+# ---------------------------------------------------------------------------
+
+def test_async_checkpointer_basic(tmp_path):
+    t = {"w": jnp.arange(4.0)}
+    with AsyncCheckpointer(str(tmp_path), keep=2) as ck:
+        for s in (1, 2, 3):
+            ck.save(s, {"w": jnp.full(4, float(s))}, extra={"round": s})
+        ck.wait()
+        assert ck.saves == 3
+        assert ck.latest_step() == 3
+        # keep=2 pruning happened on the worker thread
+        assert list_checkpoints(str(tmp_path)) == [2, 3]
+        restored, meta = ck.load_latest(t)
+        assert meta["extra"]["round"] == 3
+        assert float(restored["w"][0]) == 3.0
+
+
+def test_async_checkpointer_load_latest_empty(tmp_path):
+    ck = AsyncCheckpointer(str(tmp_path))
+    assert ck.latest_step() is None
+    assert ck.load_latest({"w": jnp.zeros(1)}) is None
+    ck.close()
+
+
+def test_async_checkpointer_worker_error_surfaces(tmp_path):
+    """A failed background write re-raises at the next wait()/save()
+    instead of vanishing with the worker thread."""
+    blocker = tmp_path / "dir_in_the_way"
+    ck = AsyncCheckpointer(str(blocker))
+    # make the checkpoint *path* an unwritable location: a FILE where
+    # the directory should be
+    with open(str(blocker), "w") as f:
+        f.write("not a directory")
+    ck.save(1, {"w": jnp.zeros(1)})
+    with pytest.raises(OSError):
+        ck.wait()
+    # the checkpointer stays usable for inspection afterwards
+    assert ck.latest_step() is None
+
+
+def test_async_checkpointer_blocking_mode(tmp_path):
+    ck = AsyncCheckpointer(str(tmp_path), blocking=True)
+    ck.save(5, {"w": jnp.ones(3)})
+    # no wait() needed: the entry is already durable
+    assert list_checkpoints(str(tmp_path)) == [5]
+    ck.close()

@@ -119,8 +119,9 @@ def test_rage_k_round_traffic_is_sparse(mnist_setup):
     n, d = engine.n, engine.d
     host_elems = sum(np.asarray(v).size for v in metrics.values())
     # O(N*k) losses+indices plus the O(1) participation-plane scalars
-    # (n_active + the four AoI reductions, DESIGN.md §9)
-    assert host_elems <= n * (hp.k + 1) + 5
+    # (n_active + the four AoI reductions, DESIGN.md §9) and the three
+    # resilience counters (quarantined/crashed/dropped, DESIGN.md §13)
+    assert host_elems <= n * (hp.k + 1) + 8
     assert host_elems * 100 < n * d
     # engine state (incl. the (N,d) age/freq matrices) stays as device
     # arrays — committed, not fetched

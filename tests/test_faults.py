@@ -1,0 +1,302 @@
+"""Fault-injection plane (fl.faults + engine/service/dist gates,
+DESIGN.md §13).
+
+1. FaultModel: spec parsing, validation, deterministic fold_in-keyed
+   draws, corruption order (byz scale -> inf -> nan).
+2. Engine integration: zero-probability model == faults=None bitwise;
+   step/scan drivers agree bitwise under live faults; dark clients
+   never land; p_drop=1 leaves the global model bitwise untouched;
+   the validation gate keeps training finite under NaN injection and
+   quarantines Byzantine-scaled updates, while gate-off lets the
+   poison through (the A/B the gate exists for).
+3. dist.sparse_sync validation gate: non-finite / out-of-band shards
+   are excluded like inactive shards (no payload, no age reset) but
+   still billed on the wire; quarantined_shards counts them.
+4. Recluster-worker failure (fl.engine): the exception is captured and
+   re-raised at EVERY later consumer and at close() — never swallowed.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+import repro.fl.engine as engine_mod
+from repro.configs.base import RAgeKConfig
+from repro.data.federated import paper_mnist_split
+from repro.data.synthetic import mnist_like
+from repro.fl import FaultModel, FederatedEngine
+
+HP = dict(r=30, k=6, H=2, M=3, lr=2e-3, batch_size=16)
+ROUNDS = 4
+
+
+@pytest.fixture(scope="module")
+def mnist_setup():
+    (xtr, ytr), test = mnist_like(n_train=1200, n_test=400, seed=0)
+    return paper_mnist_split(xtr, ytr, seed=0), test
+
+
+def _engine(mnist_setup, method="rage_k", **kw):
+    shards, test = mnist_setup
+    hp = RAgeKConfig(method=method, **HP)
+    return FederatedEngine("mlp", shards, test, hp, seed=3, **kw)
+
+
+# ---------------------------------------------------------------------------
+# FaultModel unit behavior
+# ---------------------------------------------------------------------------
+
+def test_parse_spec():
+    f = FaultModel.parse("nan:0.1,crash:0.05,drop:0.2,dark:0+3,"
+                         "byz:0.01,byz_scale:1e7", n=8, seed=5)
+    assert (f.p_nan, f.p_crash, f.p_drop, f.p_byz) == (0.1, 0.05, 0.2,
+                                                       0.01)
+    assert f.dark == (0, 3) and f.byz_scale == 1e7 and f.seed == 5
+    assert f.any and f.any_wire
+    assert bool(f.dark_mask[0]) and bool(f.dark_mask[3])
+    assert not bool(f.dark_mask[1])
+
+
+def test_parse_rejects_unknown_lane_and_bad_values():
+    with pytest.raises(ValueError, match="unknown fault lane"):
+        FaultModel.parse("gamma:0.1", n=4)
+    with pytest.raises(ValueError, match="not a probability"):
+        FaultModel(n=4, p_nan=1.5)
+    with pytest.raises(ValueError, match="dark ids out of range"):
+        FaultModel(n=4, dark=(7,))
+    with pytest.raises(ValueError, match="n >= 1"):
+        FaultModel(n=0)
+
+
+def test_draws_are_deterministic_and_lane_independent():
+    key = jax.random.PRNGKey(0)
+    f = FaultModel(n=16, p_crash=0.5, p_nan=0.5)
+    a = f.round_masks(key, jnp.int32(7))
+    b = f.round_masks(key, jnp.int32(7))
+    for x, y in zip(a, b):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+    c = f.round_masks(key, jnp.int32(8))
+    assert any(not np.array_equal(np.asarray(x), np.asarray(y))
+               for x, y in zip(a, c))
+    # enabling another lane never perturbs an existing lane's draws
+    g = FaultModel(n=16, p_crash=0.5, p_nan=0.5, p_drop=0.5)
+    a2 = g.round_masks(key, jnp.int32(7))
+    np.testing.assert_array_equal(np.asarray(a[0]), np.asarray(a2[0]))
+    np.testing.assert_array_equal(np.asarray(a[1]), np.asarray(a2[1]))
+
+
+def test_corrupt_order_and_broadcast():
+    f = FaultModel(n=3, byz_scale=10.0)
+    g = jnp.ones((3, 4))
+    nan = jnp.array([True, False, False])
+    inf = jnp.array([False, True, False])
+    byz = jnp.array([False, False, True])
+    out = np.asarray(f.corrupt(g, nan, inf, byz))
+    assert np.isnan(out[0]).all()
+    assert np.isinf(out[1]).all()
+    np.testing.assert_array_equal(out[2], 10.0)
+    # nan wins over inf wins over byz on overlapping rows
+    out2 = np.asarray(f.corrupt(g, nan, nan, nan))
+    assert np.isnan(out2[0]).all()
+
+
+def test_dispatch_fate_deterministic():
+    key = jax.random.PRNGKey(0)
+    f = FaultModel(n=8, p_crash=0.5, dark=(2,))
+    a = f.dispatch_fate(key, jnp.int32(1), jnp.int32(4))
+    b = f.dispatch_fate(key, jnp.int32(1), jnp.int32(4))
+    assert all(bool(x) == bool(y) for x, y in zip(a, b))
+    assert bool(f.dispatch_fate(key, jnp.int32(2), jnp.int32(0))[0])
+
+
+# ---------------------------------------------------------------------------
+# engine integration (multi-round: slow tier)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.slow
+def test_zero_prob_model_equals_no_faults(mnist_setup):
+    """An all-zero FaultModel takes the faults=None trace path: hard
+    bitwise identity, all counters zero."""
+    ea = _engine(mnist_setup)
+    ra = ea.run(ROUNDS, eval_every=2)
+    eb = _engine(mnist_setup, faults=FaultModel(n=ea.n))
+    rb = eb.run(ROUNDS, eval_every=2)
+    assert ra.loss == rb.loss and ra.acc == rb.acc
+    for pa, pb in zip(jax.tree_util.tree_leaves(ea.g_params),
+                      jax.tree_util.tree_leaves(eb.g_params)):
+        np.testing.assert_array_equal(np.asarray(pa), np.asarray(pb))
+    assert rb.summary()["total_quarantined"] == 0
+    assert rb.summary()["total_crashed"] == 0
+    ea.close(), eb.close()
+
+
+@pytest.mark.slow
+def test_fault_runs_agree_across_drivers(mnist_setup):
+    """Fault draws key off the device round counter, so step and scan
+    replay the identical fault history — losses, params AND counters."""
+    flt = FaultModel(n=10, p_nan=0.2, p_crash=0.1, p_drop=0.1, seed=9)
+    ea = _engine(mnist_setup, faults=flt)
+    ra = ea.run(ROUNDS, eval_every=2)
+    eb = _engine(mnist_setup, faults=flt)
+    rb = eb.run_scanned(ROUNDS, eval_every=2)
+    assert ra.loss == rb.loss and ra.acc == rb.acc
+    assert ra.n_quarantined == rb.n_quarantined
+    assert ra.n_crashed == rb.n_crashed
+    assert ra.n_dropped == rb.n_dropped
+    assert sum(ra.n_crashed) > 0 and sum(ra.n_quarantined) > 0
+    for pa, pb in zip(jax.tree_util.tree_leaves(ea.g_params),
+                      jax.tree_util.tree_leaves(eb.g_params)):
+        np.testing.assert_array_equal(np.asarray(pa), np.asarray(pb))
+    ea.close(), eb.close()
+
+
+@pytest.mark.slow
+def test_dark_client_never_lands(mnist_setup):
+    """A dark client is a permanent crash: it never requests (sentinel
+    idx rows), counts crashed every round, and its AoI grows
+    monotonically."""
+    eng = _engine(mnist_setup, faults=FaultModel(n=10, dark=(4,)))
+    res = eng.run(ROUNDS, eval_every=ROUNDS)
+    assert res.n_crashed == [1] * ROUNDS
+    for idx in res.requested:
+        assert (np.asarray(idx)[4] == eng.d).all()
+    assert int(eng.sched.aoi[4]) == ROUNDS
+    eng.close()
+
+
+@pytest.mark.slow
+def test_drop_all_freezes_global_model(mnist_setup):
+    """p_drop=1: every surviving update is lost on the wire — nothing
+    lands, so the global params stay bitwise at init (adam's zero-grad
+    step is exactly zero) while clients still trained locally."""
+    eng = _engine(mnist_setup, faults=FaultModel(n=10, p_drop=1.0))
+    p0 = jax.device_get(eng.g_params)
+    res = eng.run(ROUNDS, eval_every=ROUNDS)
+    assert res.n_dropped == [10] * ROUNDS
+    for a, b in zip(jax.tree_util.tree_leaves(p0),
+                    jax.tree_util.tree_leaves(eng.g_params)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    eng.close()
+
+
+@pytest.mark.slow
+def test_nan_gate_on_vs_off(mnist_setup):
+    """The validation gate is what stands between a single NaN row and
+    a poisoned global model: gate-on stays finite with nonzero
+    quarantine counters; gate-off goes NaN within a round or two."""
+    flt = FaultModel(n=10, p_nan=0.3, seed=2)
+    on = _engine(mnist_setup, faults=flt)
+    r_on = on.run(ROUNDS, eval_every=2)
+    assert sum(r_on.n_quarantined) > 0
+    assert np.isfinite(r_on.loss).all()
+    assert all(np.isfinite(np.asarray(p)).all()
+               for p in jax.tree_util.tree_leaves(on.g_params))
+    off = _engine(mnist_setup, faults=flt, quarantine=False)
+    off.run(ROUNDS, eval_every=ROUNDS)
+    assert not all(np.isfinite(np.asarray(p)).all()
+                   for p in jax.tree_util.tree_leaves(off.g_params))
+    on.close(), off.close()
+
+
+@pytest.mark.slow
+def test_byzantine_updates_quarantined(mnist_setup):
+    """byz-scaled rows are finite, so only the magnitude bound catches
+    them: with p_byz=1 every active client is quarantined and the
+    global model stays at init."""
+    eng = _engine(mnist_setup,
+                  faults=FaultModel(n=10, p_byz=1.0, byz_scale=1e8))
+    p0 = jax.device_get(eng.g_params)
+    res = eng.run(2, eval_every=2)
+    assert res.n_quarantined == [10, 10]
+    for a, b in zip(jax.tree_util.tree_leaves(p0),
+                    jax.tree_util.tree_leaves(eng.g_params)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    eng.close()
+
+
+def test_engine_rejects_mismatched_fault_model(mnist_setup):
+    with pytest.raises(ValueError, match="FaultModel"):
+        _engine(mnist_setup, faults=FaultModel(n=3))
+
+
+# ---------------------------------------------------------------------------
+# dist.sparse_sync validation gate
+# ---------------------------------------------------------------------------
+
+def _sync_setup(validate):
+    from repro.dist.sparse_sync import (init_age_state_sharded,
+                                        make_manual_sync)
+    from repro.launch.mesh import make_host_mesh
+    mesh = make_host_mesh(1, 1)
+    grads = {"a": jnp.arange(-8.0, 8.0).reshape(4, 4),
+             "b": jnp.ones((6,)) * 0.5}
+    specs = jax.tree_util.tree_map(lambda _: P(), grads)
+    shapes = jax.tree_util.tree_map(
+        lambda g: jax.ShapeDtypeStruct(g.shape, g.dtype), grads)
+    sync = make_manual_sync(mesh, specs, shapes, method="rage_k", r=8,
+                            k=4, wire_dtype=jnp.float32,
+                            validate=validate)
+    return grads, init_age_state_sharded(shapes), sync
+
+
+def test_sync_gate_passes_finite_payloads():
+    grads, ages, sync = _sync_setup(validate=True)
+    _, na, st = sync(grads, ages)
+    assert int(st["quarantined_shards"]) == 0
+    assert int(st["active_shards"]) == 1
+    _, na_ref, _ = _sync_setup(validate=False)[2](grads, ages)
+    for k in na:
+        np.testing.assert_array_equal(np.asarray(na[k]),
+                                      np.asarray(na_ref[k]))
+
+
+def test_sync_gate_quarantines_nonfinite_shard():
+    grads, ages, sync = _sync_setup(validate=True)
+    bad = dict(grads, a=grads["a"].at[0, 0].set(jnp.nan))
+    synced, na, st = sync(bad, ages)
+    assert int(st["quarantined_shards"]) == 1
+    assert int(st["active_shards"]) == 0
+    # nothing landed; ages advance with NO reset (inactive semantics)
+    assert all(not np.asarray(v).any()
+               for v in jax.tree_util.tree_leaves(synced))
+    for k in na:
+        np.testing.assert_array_equal(np.asarray(na[k]),
+                                      np.asarray(ages[k]) + 1)
+    # the rejected upload was still sent: the wire bills it
+    assert int(st["wire_bytes_total"]) == int(st["wire_bytes_per_shard"])
+
+
+def test_sync_gate_quarantines_out_of_band_shard():
+    grads, ages, sync = _sync_setup(validate=True)
+    byz = dict(grads, b=grads["b"] * 1e9)
+    _, _, st = sync(byz, ages)
+    assert int(st["quarantined_shards"]) == 1
+
+
+# ---------------------------------------------------------------------------
+# recluster-worker failure surfacing (fl.engine)
+# ---------------------------------------------------------------------------
+
+def test_recluster_worker_failure_reraises_everywhere(mnist_setup,
+                                                      monkeypatch):
+    """A recluster-worker exception must not be swallowed: the joining
+    consumer re-raises the ORIGINAL error, every later consumer (and
+    close()) raises a stale-labels RuntimeError chained to it."""
+    eng = _engine(mnist_setup)
+
+    def boom(*a, **kw):
+        raise ValueError("dbscan exploded")
+
+    monkeypatch.setattr(engine_mod, "_recluster_host_packed", boom)
+    eng._recluster_submit()
+    with pytest.raises(ValueError, match="dbscan exploded"):
+        eng._recluster_join()
+    with pytest.raises(RuntimeError, match="stale"):
+        eng._recluster_join()
+    with pytest.raises(RuntimeError, match="stale"):
+        eng.close()
+    # explicit acknowledgment path: clearing the captured failure makes
+    # the engine closable again
+    eng._recluster_exc = None
+    eng.close()

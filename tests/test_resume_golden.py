@@ -1,0 +1,174 @@
+"""Checkpoint/resume golden pins (repro.checkpoint + engine/service
+save_state/load_state, DESIGN.md §13).
+
+A run interrupted at the round-4 checkpoint (saved through the ASYNC
+writer thread mid-run, between the round-3 and round-6 reclusters) and
+resumed in a FRESH engine must be BIT-IDENTICAL to the uninterrupted
+run — losses, accuracy, uplink, requested indices, cluster labels,
+fault counters, params, age state and the request-frequency matrix —
+for all six methods, under both drivers, under both age layouts
+(hierarchical includes the sparse log ring + host accumulator +
+watermark), under live fault injection, and for the async service in
+its engine-degenerate configuration.
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro.checkpoint import AsyncCheckpointer
+from repro.configs.base import RAgeKConfig
+from repro.data.federated import paper_mnist_split
+from repro.data.synthetic import mnist_like
+from repro.fl import AsyncService, FaultModel, FederatedEngine
+
+pytestmark = pytest.mark.slow  # multi-round parity: minutes on CPU
+
+METHODS = ("rage_k", "rtop_k", "top_k", "random_k", "dense", "cafe")
+
+# M=3, 7 rounds -> reclusters at 3 and 6; the checkpoint lands at 4
+HP = dict(r=30, k=6, H=2, M=3, lr=2e-3, batch_size=16)
+ROUNDS, EVAL_EVERY, CKPT_AT = 7, 2, 4
+
+
+@pytest.fixture(scope="module")
+def mnist_setup():
+    (xtr, ytr), test = mnist_like(n_train=1200, n_test=400, seed=0)
+    return paper_mnist_split(xtr, ytr, seed=0), test
+
+
+def _make(mnist_setup, method, layout="dense", faults=None):
+    shards, test = mnist_setup
+    hp = RAgeKConfig(method=method, age_layout=layout, **HP)
+    return FederatedEngine("mlp", shards, test, hp, seed=3,
+                           faults=faults)
+
+
+@pytest.fixture(scope="module")
+def ref_run(mnist_setup, tmp_path_factory):
+    """Uninterrupted 7-round scan-driver reference per (method, layout,
+    faulted), checkpointing at round 4 through the async writer."""
+    cache, engines = {}, []
+
+    def get(method, layout="dense", faults=None):
+        key = (method, layout, faults is not None)
+        if key not in cache:
+            eng = _make(mnist_setup, method, layout, faults)
+            td = str(tmp_path_factory.mktemp(f"{method}_{layout}"))
+            with AsyncCheckpointer(td) as ck:
+                res = eng.run_scanned(ROUNDS, eval_every=EVAL_EVERY,
+                                      checkpointer=ck,
+                                      ckpt_every=CKPT_AT)
+            engines.append(eng)
+            cache[key] = (eng, res, td)
+        return cache[key]
+
+    yield get
+    for e in engines:
+        e.close()
+
+
+def _assert_resumed_run_matches(eng_ref, res_ref, eng, res, method):
+    assert res.rounds == res_ref.rounds
+    assert res.loss == res_ref.loss
+    assert res.acc == res_ref.acc
+    assert res.uplink_bytes == res_ref.uplink_bytes
+    assert res.n_active == res_ref.n_active
+    assert res.aoi_mean == res_ref.aoi_mean
+    assert res.aoi_peak == res_ref.aoi_peak
+    assert res.age_mean == res_ref.age_mean
+    assert res.age_peak == res_ref.age_peak
+    assert res.n_quarantined == res_ref.n_quarantined
+    assert res.n_crashed == res_ref.n_crashed
+    assert res.n_dropped == res_ref.n_dropped
+    for ia, ib in zip(res.requested, res_ref.requested):
+        if method == "dense":
+            assert ia is None and ib is None
+        else:
+            np.testing.assert_array_equal(ia, ib)
+    for la, lb in zip(res.cluster_labels, res_ref.cluster_labels):
+        np.testing.assert_array_equal(la, lb)
+    for pa, pb in zip(jax.tree_util.tree_leaves(eng.g_params),
+                      jax.tree_util.tree_leaves(eng_ref.g_params)):
+        np.testing.assert_array_equal(np.asarray(pa), np.asarray(pb))
+    np.testing.assert_array_equal(np.asarray(eng.age.cluster_age),
+                                  np.asarray(eng_ref.age.cluster_age))
+    np.testing.assert_array_equal(eng.freq_matrix, eng_ref.freq_matrix)
+    np.testing.assert_array_equal(eng.cluster_of, eng_ref.cluster_of)
+
+
+def _resume_and_check(mnist_setup, ref, method, layout="dense",
+                      driver="scan", faults=None):
+    eng_ref, res_ref, ckdir = ref
+    eng = _make(mnist_setup, method, layout, faults)
+    prior = eng.load_state(ckdir, step=CKPT_AT)
+    assert eng.round_idx == CKPT_AT
+    assert prior is not None and prior.rounds[-1] <= CKPT_AT
+    drive = eng.run if driver == "step" else eng.run_scanned
+    res = drive(ROUNDS - CKPT_AT, eval_every=EVAL_EVERY, result=prior)
+    _assert_resumed_run_matches(eng_ref, res_ref, eng, res, method)
+    eng.close()
+
+
+@pytest.mark.parametrize("driver", ("step", "scan"))
+@pytest.mark.parametrize("method", METHODS)
+def test_resume_bitwise(ref_run, mnist_setup, method, driver):
+    _resume_and_check(mnist_setup, ref_run(method), method,
+                      driver=driver)
+
+
+@pytest.mark.parametrize("driver", ("step", "scan"))
+def test_resume_bitwise_hierarchical(ref_run, mnist_setup, driver):
+    """The hierarchical age plane's extra state — compacted cluster
+    rows, the sparse log ring (idx/mem/ptr), the host freq accumulator
+    and its drain watermark — all resume exactly."""
+    _resume_and_check(mnist_setup, ref_run("rage_k", "hierarchical"),
+                      "rage_k", layout="hierarchical", driver=driver)
+
+
+def test_resume_bitwise_under_faults(ref_run, mnist_setup):
+    """Fault draws key off the device round counter carried in the
+    checkpoint, so an interrupted faulted run replays the identical
+    fault history — counters included."""
+    flt = FaultModel(n=10, p_nan=0.2, p_crash=0.1, p_drop=0.1, seed=9)
+    ref = ref_run("rage_k", faults=flt)
+    assert sum(ref[1].n_quarantined) > 0
+    _resume_and_check(mnist_setup, ref, "rage_k", faults=flt)
+
+
+# ---------------------------------------------------------------------------
+# async service (engine-degenerate configuration)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("layout", ("dense", "hierarchical"))
+def test_async_service_resume_bitwise(mnist_setup, tmp_path, layout):
+    """The service's save_state/load_state round-trips the whole event
+    loop — version ring, FedBuff buffer, in-flight completion times,
+    retry counters, age plane (incl. the hierarchical log + host
+    accumulator) — and the continued event stream is bit-identical."""
+    shards, test = mnist_setup
+    hp = RAgeKConfig(method="rage_k", age_layout=layout, **HP)
+    ref_svc = AsyncService("mlp", shards, test, hp, seed=0)
+    ref = ref_svc.run_async(6, eval_every=1)
+
+    svc_a = AsyncService("mlp", shards, test, hp, seed=0)
+    with AsyncCheckpointer(str(tmp_path)) as ck:
+        svc_a.run_async(4, eval_every=1, checkpointer=ck, ckpt_every=4)
+    svc_b = AsyncService("mlp", shards, test, hp, seed=0)
+    svc_b.load_state(str(tmp_path))
+    assert svc_b.aggs_done == 4
+    res = svc_b.run_async(2, eval_every=1)
+    assert res.acc == ref.acc[4:]
+    assert res.loss == ref.loss[4:]
+    assert res.uplink_bytes == ref.uplink_bytes[4:]
+    assert res.clock == ref.clock[4:]
+    for la, lb in zip(res.cluster_labels, ref.cluster_labels[4:]):
+        np.testing.assert_array_equal(la, lb)
+    for pa, pb in zip(
+            jax.tree_util.tree_leaves(svc_b.state.g_params),
+            jax.tree_util.tree_leaves(ref_svc.state.g_params)):
+        np.testing.assert_array_equal(np.asarray(pa), np.asarray(pb))
+    np.testing.assert_array_equal(
+        np.asarray(svc_b.state.age.cluster_age),
+        np.asarray(ref_svc.state.age.cluster_age))
+    np.testing.assert_array_equal(svc_b.freq_matrix,
+                                  ref_svc.freq_matrix)
